@@ -1,0 +1,81 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the results
+JSONs (reproducible document generation).
+
+  PYTHONPATH=src python -m benchmarks.report [--dryrun f] [--roofline f]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def fmt_bytes(b) -> str:
+    if b >= 1e12:
+        return f"{b/1e12:.2f}TB"
+    if b >= 1e9:
+        return f"{b/1e9:.2f}GB"
+    if b >= 1e6:
+        return f"{b/1e6:.1f}MB"
+    return f"{b/1e3:.0f}KB"
+
+
+def fmt_s(s) -> str:
+    if s >= 1.0:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s*1e3:.2f}ms"
+    return f"{s*1e6:.1f}us"
+
+
+def dryrun_table(path: str, mesh: str) -> str:
+    rows = [r for r in json.load(open(path))
+            if r.get("mesh") == mesh and r.get("status") == "ok"]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = ["| cell | kind | compile | args/dev | temp/dev | out/dev | "
+           "HLO flops/dev | coll bytes/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']}/{r['shape']} | {r['kind']} | "
+            f"{r['compile_s']:.0f}s | {fmt_bytes(r['argument_bytes'])} | "
+            f"{fmt_bytes(r['temp_bytes'])} | "
+            f"{fmt_bytes(r['output_bytes'])} | {r['flops']:.2e} | "
+            f"{fmt_bytes(r['collectives']['total_bytes'])} |")
+    fails = [r for r in json.load(open(path))
+             if r.get("mesh") == mesh and r.get("status") != "ok"]
+    out.append(f"\n{len(rows)} ok / {len(fails)} failed on mesh {mesh}.")
+    return "\n".join(out)
+
+
+def roofline_table(path: str) -> str:
+    rows = [r for r in json.load(open(path)) if "dominant" in r]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = ["| cell | dominant | compute | memory | collective | "
+           "bound | roof-frac | useful (MODEL/HLO) |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']}/{r['shape']} | {r['dominant']} | "
+            f"{fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} | "
+            f"{fmt_s(r['collective_s'])} | "
+            f"{fmt_s(r['step_lower_bound_s'])} | "
+            f"{100*r['roofline_fraction']:.1f}% | "
+            f"{r['useful_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun.json")
+    ap.add_argument("--roofline", default="results/roofline.json")
+    args = ap.parse_args()
+    print("## §Dry-run — single-pod 16x16 (256 chips)\n")
+    print(dryrun_table(args.dryrun, "16x16"))
+    print("\n## §Dry-run — multi-pod 2x16x16 (512 chips)\n")
+    print(dryrun_table(args.dryrun, "2x16x16"))
+    print("\n## §Roofline — single-pod, per device\n")
+    print(roofline_table(args.roofline))
+
+
+if __name__ == "__main__":
+    main()

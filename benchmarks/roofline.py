@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Roofline (deliverable g): three-term roofline per (arch x shape) on
+the single-pod 16x16 mesh, derived from compiled dry-run artifacts.
+
+  compute_s    = HLO_FLOPs_per_device / peak_FLOPs      (197 TFLOP/s bf16)
+  memory_s     = HLO_bytes_per_device / HBM_bw          (819 GB/s)
+  collective_s = ICI_wire_bytes_per_device / link_bw    (50 GB/s/link)
+
+cost_analysis counts lax.scan bodies ONCE, so layered models are probed
+twice with PYTHON-UNROLLED layer counts L in {1, 2} and linearly
+extrapolated: per_layer = m(2) - m(1); total = m(1) + (L-1)*per_layer.
+Probes run accum=1 (full batch) — same per-step totals as the accumulated
+step modulo O(params) accumulator adds. Memory figures come from the REAL
+(scan+accum) compile in results/dryrun.json.
+
+MODEL_FLOPS is analytic (6*N_active*D for train, 2*N*D + attention reads
+for serving); the ratio MODEL/HLO exposes remat/redundancy waste.
+
+Usage:  PYTHONPATH=src python -m benchmarks.roofline \
+            [--dryrun results/dryrun.json] [--out results/roofline.json]
+        [--cells arch/shape,arch/shape]  (default: all 40)
+"""
+import argparse
+import json
+import time
+
+PEAK_FLOPS = 197e12          # bf16 per chip (TPU v5e-class target)
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link (1 link assumed)
+N_CHIPS = 256                # single-pod roofline mesh
+
+
+# ---------------------------------------------------------------------------
+# analytic MODEL_FLOPS per cell
+# ---------------------------------------------------------------------------
+def lm_model_flops(cfg, shape_info: dict, kind: str) -> float:
+    d, dh, h, kv, L = (cfg.d_model, cfg.d_head, cfg.n_heads, cfg.n_kv,
+                       cfg.n_layers)
+    n_mm = cfg.n_active_params() - cfg.vocab * d     # embed gather: 0 flop
+    b, s = shape_info["batch"], shape_info["seq"]
+    if kind == "train":
+        t = b * s
+        s_eff = s / 2 if cfg.causal else s
+        attn = 12 * L * h * dh * s_eff * t           # fwd+bwd = 3x fwd
+        return 6 * n_mm * t + attn
+    if kind == "prefill":
+        t = b * s
+        s_eff = s / 2 if cfg.causal else s
+        return 2 * n_mm * t + 4 * L * h * dh * s_eff * t
+    if kind == "decode":
+        return 2 * n_mm * b + 4 * L * h * dh * s * b
+    if kind == "encode":
+        t = b * s
+        return 2 * n_mm * t + 4 * L * h * dh * s * t
+    raise ValueError(kind)
+
+
+def schnet_model_flops(cfg, info: dict) -> float:
+    d, r, i = cfg.d_hidden, cfg.n_rbf, cfg.n_interactions
+    e, n = info["edges"], info["nodes"]
+    per_edge = 2 * r * d + 2 * d * d + 3 * d         # filter net + modulate
+    per_node = 3 * 2 * d * d                         # in2f/f2out/atomwise
+    d_in = info.get("d_feat", 0)
+    fwd = i * (e * per_edge + n * per_node) + n * 2 * d_in * d \
+        + n * 2 * d * (d // 2)
+    return 3 * fwd                                   # train: fwd + bwd
+
+
+def recsys_model_flops(arch: str, cfg, info: dict, kind: str) -> float:
+    b = info["batch"]
+    if kind == "retrieval":
+        return 2.0 * info["n_candidates"] * _embed_dim(arch, cfg) * b
+    mult = 3.0 if kind == "train" else 1.0
+    if arch == "fm":
+        return mult * b * 6 * cfg.n_sparse * cfg.embed_dim
+    if arch == "wide-deep":
+        dims = (cfg.n_sparse * cfg.embed_dim,) + tuple(cfg.mlp) + (1,)
+        mlp = sum(2 * a * bb for a, bb in zip(dims, dims[1:]))
+        return mult * b * mlp
+    if arch == "dlrm-mlperf":
+        bot = sum(2 * a * bb for a, bb in zip(cfg.bot_mlp, cfg.bot_mlp[1:]))
+        nf = cfg.n_sparse + 1
+        d_int = nf * (nf - 1) // 2 + cfg.embed_dim
+        dims = (d_int,) + tuple(cfg.top_mlp)
+        top = sum(2 * a * bb for a, bb in zip(dims, dims[1:]))
+        inter = 2 * nf * nf * cfg.embed_dim
+        return mult * b * (bot + top + inter)
+    if arch == "bert4rec":
+        from repro.configs.bert4rec import SEQ_LEN
+        info2 = dict(info, seq=SEQ_LEN)
+        if kind == "train":
+            return lm_model_flops(cfg, info2, "train")
+        # serve computes the item-logit head at the LAST position only
+        full = lm_model_flops(cfg, info2, "encode")
+        head_all = 2 * cfg.vocab * cfg.d_model * b * SEQ_LEN
+        head_last = 2 * cfg.vocab * cfg.d_model * b
+        return full - head_all + head_last
+    raise ValueError(arch)
+
+
+def _embed_dim(arch: str, cfg) -> int:
+    return getattr(cfg, "embed_dim", None) or cfg.d_model
+
+
+def model_flops(arch: str, shape: str, kind: str) -> float:
+    from repro.configs import get_arch
+    from repro.configs.lm_family import LM_SHAPES
+    from repro.configs.recsys_family import RECSYS_SHAPES
+    from repro.configs import schnet as schnet_cfg
+
+    spec = get_arch(arch)
+    if spec.family == "lm":
+        return lm_model_flops(spec.model_config(False), LM_SHAPES[shape],
+                              kind)
+    if spec.family == "lm-encoder":
+        from repro.configs.minilm_embedder import _SHAPES
+        info = dict(_SHAPES[shape])
+        return lm_model_flops(spec.model_config(False), info, "encode")
+    if spec.family == "gnn":
+        return schnet_model_flops(spec.model_config(False, shape),
+                                  schnet_cfg.SHAPES[shape])
+    return recsys_model_flops(arch, spec.model_config(False),
+                              RECSYS_SHAPES[shape], kind)
+
+
+# ---------------------------------------------------------------------------
+# probe compiles (unrolled L=1,2) + extrapolation
+# ---------------------------------------------------------------------------
+_LAYERED = ("lm", "lm-encoder")
+
+
+def _n_layers_of(arch: str) -> int:
+    from repro.configs import get_arch
+    spec = get_arch(arch)
+    cfg = spec.model_config(False) if spec.family != "gnn" \
+        else spec.model_config(False, "molecule")
+    return getattr(cfg, "n_layers", None) or cfg.n_interactions
+
+
+def _compile_metrics(bundle, mesh) -> dict:
+    from repro.launch.hlo_analysis import collective_stats, cost_summary
+    compiled = bundle.lower(mesh).compile()
+    rec = cost_summary(compiled)
+    rec["collectives"] = collective_stats(compiled.as_text())
+    return rec
+
+
+def probe_cell(arch: str, shape: str, mesh) -> dict:
+    """Extrapolated per-device totals for one cell."""
+    from repro.configs import get_arch
+    from repro.launch.steps import build_cell, build_probe_cell
+
+    spec = get_arch(arch)
+    layered = spec.family in _LAYERED or arch in ("bert4rec", "schnet")
+    if not layered:
+        m = _compile_metrics(build_cell(arch, shape, reduced=False), mesh)
+        return {"flops": m["flops"], "bytes": m["bytes_accessed"],
+                "wire_bytes": m["collectives"]["total_wire_bytes"],
+                "coll_bytes": m["collectives"]["total_bytes"],
+                "probe": "direct"}
+    l_full = _n_layers_of(arch)
+    m1 = _compile_metrics(build_probe_cell(arch, shape, 1), mesh)
+    m2 = _compile_metrics(build_probe_cell(arch, shape, 2), mesh)
+
+    def extra(k1, k2=None):
+        a = m1[k1] if k2 is None else m1[k1][k2]
+        b = m2[k1] if k2 is None else m2[k1][k2]
+        per = b - a
+        return a + (l_full - 1) * per
+
+    return {"flops": extra("flops"),
+            "bytes": extra("bytes_accessed"),
+            "wire_bytes": extra("collectives", "total_wire_bytes"),
+            "coll_bytes": extra("collectives", "total_bytes"),
+            "probe": f"unroll1+2->L={l_full}"}
+
+
+def roofline_terms(flops, bytes_, wire) -> dict:
+    comp = flops / PEAK_FLOPS
+    mem = bytes_ / HBM_BW
+    coll = wire / LINK_BW
+    dominant = max(("compute", comp), ("memory", mem),
+                   ("collective", coll), key=lambda kv: kv[1])
+    bound = max(comp, mem, coll)
+    return {"compute_s": comp, "memory_s": mem, "collective_s": coll,
+            "dominant": dominant[0], "step_lower_bound_s": bound,
+            "roofline_fraction": max(comp, 1e-30) / max(bound, 1e-30)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun.json")
+    ap.add_argument("--out", default="results/roofline.json")
+    ap.add_argument("--cells", default=None,
+                    help="comma-separated arch/shape filters")
+    args = ap.parse_args()
+
+    from repro.configs import all_cells
+    from repro.launch.mesh import make_production_mesh
+
+    dry = {}
+    if os.path.exists(args.dryrun):
+        for r in json.load(open(args.dryrun)):
+            if r.get("status") == "ok" and r["mesh"] == "16x16":
+                dry[(r["arch"], r["shape"])] = r
+
+    mesh = make_production_mesh(multi_pod=False)
+    want = None
+    if args.cells:
+        want = {tuple(c.split("/")) for c in args.cells.split(",")}
+
+    results = []
+    if os.path.exists(args.out):
+        results = json.load(open(args.out))
+    done = {(r["arch"], r["shape"]) for r in results}
+
+    cells = [c for c in all_cells() if c.arch != "minilm-embedder"]
+    for cell in cells:
+        key = (cell.arch, cell.shape)
+        if want is not None and key not in want:
+            continue
+        if key in done and want is None:
+            print(f"[skip] {cell.key}")
+            continue
+        t0 = time.time()
+        print(f"[roofline] {cell.key} ...", flush=True)
+        try:
+            probe = probe_cell(cell.arch, cell.shape, mesh)
+            mf_global = model_flops(cell.arch, cell.shape, cell.kind)
+            mf_dev = mf_global / N_CHIPS
+            terms = roofline_terms(probe["flops"], probe["bytes"],
+                                   probe["wire_bytes"])
+            rec = {
+                "arch": cell.arch, "shape": cell.shape, "kind": cell.kind,
+                "hlo_flops_dev": probe["flops"],
+                "hlo_bytes_dev": probe["bytes"],
+                "wire_bytes_dev": probe["wire_bytes"],
+                "coll_result_bytes_dev": probe["coll_bytes"],
+                "probe": probe["probe"],
+                **terms,
+                "model_flops_global": mf_global,
+                "model_flops_dev": mf_dev,
+                "useful_fraction": mf_dev / max(probe["flops"], 1e-30),
+                "peak_hbm_gb": (dry.get(key, {}).get("peak_bytes", 0)
+                                / 1e9),
+                "probe_wall_s": round(time.time() - t0, 1),
+            }
+            d = terms["dominant"]
+            print(f"  {d}-bound: comp={terms['compute_s']*1e3:.2f}ms "
+                  f"mem={terms['memory_s']*1e3:.2f}ms "
+                  f"coll={terms['collective_s']*1e3:.2f}ms "
+                  f"useful={rec['useful_fraction']:.2f}", flush=True)
+        except Exception as e:  # noqa
+            import traceback
+            rec = {"arch": cell.arch, "shape": cell.shape,
+                   "status": "fail", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-1500:]}
+            print(f"  FAIL {rec['error'][:200]}", flush=True)
+        results = [r for r in results if (r["arch"], r["shape"]) != key]
+        results.append(rec)
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+    ok = [r for r in results if "dominant" in r]
+    print(f"\n{len(ok)}/{len(results)} cells analysed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark runner — one function per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows:
+  Table II  -> update_performance
+  Table III -> query_latency
+  §V-B3     -> change_detection
+  §V-B4     -> storage_efficiency
+  §V-B5     -> temporal_accuracy
+
+The roofline/dry-run analysis (§Roofline) is a separate entry point
+(``python -m benchmarks.roofline``) because it must force 512 host
+devices before jax initializes.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (change_detection, query_latency, search_scaling,
+                   storage_efficiency, temporal_accuracy,
+                   update_performance)
+    suites = [
+        ("update_performance", update_performance),
+        ("query_latency", query_latency),
+        ("change_detection", change_detection),
+        ("storage_efficiency", storage_efficiency),
+        ("temporal_accuracy", temporal_accuracy),
+        ("search_scaling", search_scaling),
+    ]
+    print("name,value,notes")
+    failures = 0
+    for name, mod in suites:
+        t0 = time.perf_counter()
+        try:
+            rows = mod.main()
+            for row_name, val, note in rows:
+                if isinstance(val, float):
+                    print(f"{row_name},{val:.4f},{note}")
+                else:
+                    print(f"{row_name},{val},{note}")
+            print(f"_meta/{name}/wall_s,{time.perf_counter()-t0:.1f},")
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"_meta/{name}/ERROR,{type(e).__name__}: {e},")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Paper §V-B4: storage efficiency — hot tier holds only active chunks
+(paper: 1,200 active of 12,000 total = 10%; 90% fewer chunks in the
+expensive vector index)."""
+from __future__ import annotations
+
+import tempfile
+
+from repro.core.store import LiveVectorLake
+from repro.data.corpus import generate_corpus
+
+
+def run(n_docs: int = 100, n_versions: int = 5, seed: int = 0) -> dict:
+    corpus = generate_corpus(n_docs=n_docs, n_versions=n_versions,
+                             seed=seed)
+    from repro.core.chunking import chunk_document
+    with tempfile.TemporaryDirectory() as root:
+        store = LiveVectorLake(root, dim=384)
+        chunk_instances = 0          # paper's "total chunks": every chunk
+        for v in range(n_versions):  # of every version (their cold tier
+            for d in corpus.doc_ids():   # stores all_chunks per version)
+                chunk_instances += len(
+                    chunk_document(corpus.versions[v][d]))
+                store.ingest(d, corpus.versions[v][d],
+                             ts=corpus.timestamps[v])
+        st = store.stats()
+        hot_active = st["hot"]["active"]
+        cold_total = st["cold"]["total_records"]
+        # bytes: hot = active embeddings; cold = compressed segments
+        hot_bytes = hot_active * store.dim * 4
+        cold_bytes = st["cold"]["disk_bytes"]
+        return {
+            "hot_active_chunks": hot_active,
+            "chunk_version_instances": chunk_instances,
+            "cold_total_records": cold_total,
+            # paper-comparable: active fraction of ALL chunk-version
+            # instances (the paper's cold tier materializes each one)
+            "hot_fraction_paper_metric": hot_active
+            / max(chunk_instances, 1),
+            "hot_reduction_pct": 100.0 * (1 - hot_active
+                                          / max(chunk_instances, 1)),
+            # beyond-paper: delta-append cold tier stores only changed
+            # records — the duplication the paper's design carries
+            "cold_delta_savings_pct": 100.0 * (1 - cold_total
+                                               / max(chunk_instances, 1)),
+            "hot_fraction_of_stored_records": hot_active
+            / max(cold_total, 1),
+            "hot_bytes": hot_bytes,
+            "cold_bytes": cold_bytes,
+        }
+
+
+def main() -> list[tuple]:
+    r = run()
+    return [
+        ("storage/hot_active_chunks", r["hot_active_chunks"],
+         "paper: ~1200"),
+        ("storage/chunk_version_instances", r["chunk_version_instances"],
+         "paper: ~12000 (their cold tier stores each one)"),
+        ("storage/hot_fraction_paper_metric",
+         r["hot_fraction_paper_metric"],
+         "paper: 0.10-0.20 of history in hot tier"),
+        ("storage/hot_reduction_pct", r["hot_reduction_pct"],
+         "paper: ~90% fewer chunks in vector index"),
+        ("storage/cold_total_records", r["cold_total_records"],
+         "delta-append: only changed records stored"),
+        ("storage/cold_delta_savings_pct", r["cold_delta_savings_pct"],
+         "beyond-paper: duplication our delta cold tier avoids"),
+        ("storage/hot_bytes", r["hot_bytes"], "paper: 1.2MB"),
+        ("storage/cold_bytes", r["cold_bytes"], "paper: 2.7MB"),
+    ]
+
+
+if __name__ == "__main__":
+    for name, val, note in main():
+        print(f"{name},{val},{note}")

@@ -1,0 +1,75 @@
+"""Paper §V-B5: temporal query accuracy + leakage — historical queries
+with ground-truth answers (paper: 20 queries, 100% accuracy, 0%
+leakage). Every fact paragraph's value at every inter-version instant is
+machine-checkable against the corpus generator's FactSpec log."""
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+
+from repro.core.store import LiveVectorLake
+from repro.data.corpus import generate_corpus
+
+
+def run(n_docs: int = 60, n_versions: int = 5, seed: int = 0,
+        n_queries: int = 40) -> dict:
+    corpus = generate_corpus(n_docs=n_docs, n_versions=n_versions,
+                             seed=seed)
+    rng = np.random.default_rng(seed)
+    with tempfile.TemporaryDirectory() as root:
+        store = LiveVectorLake(root, dim=384)
+        for v in range(n_versions):
+            for d in corpus.doc_ids():
+                store.ingest(d, corpus.versions[v][d],
+                             ts=corpus.timestamps[v])
+
+        # facts that actually change value at some version
+        changing = [f for f in corpus.facts
+                    if any(x is not None for x in f.values[1:])]
+        rng.shuffle(changing)
+        n_correct = n_leak = n_total = 0
+        for fact in changing[:n_queries]:
+            # query at a random instant strictly between two versions
+            v = int(rng.integers(0, n_versions - 1))
+            ts = int((corpus.timestamps[v] + corpus.timestamps[v + 1]) // 2)
+            expected = fact.value_at_version(v)
+            results = store.query(fact.name, k=3, at=ts)
+            n_total += 1
+            # leakage check: no returned chunk may postdate ts
+            for r in results:
+                if not (r.valid_from <= ts < r.valid_to):
+                    n_leak += 1
+            # accuracy: top hit for this fact name carries the right value
+            hit = next((r for r in results if fact.name in r.text), None)
+            if hit is not None and f"equals {expected} units" in hit.text:
+                n_correct += 1
+
+        # ALSO current-query sanity: latest value is served from hot tier
+        n_cur_ok = 0
+        for fact in changing[:10]:
+            expected = fact.value_at_version(n_versions - 1)
+            res = store.query(fact.name, k=3)
+            hit = next((r for r in res if fact.name in r.text), None)
+            if hit is not None and f"equals {expected} units" in hit.text:
+                n_cur_ok += 1
+
+    return {"n_queries": n_total, "accuracy": n_correct / max(n_total, 1),
+            "leakage_rate": n_leak / max(n_total, 1),
+            "current_accuracy": n_cur_ok / 10}
+
+
+def main() -> list[tuple]:
+    r = run()
+    return [
+        ("temporal/n_queries", r["n_queries"], "paper: 20"),
+        ("temporal/accuracy", r["accuracy"], "paper: 1.0"),
+        ("temporal/leakage_rate", r["leakage_rate"], "paper: 0.0"),
+        ("temporal/current_accuracy", r["current_accuracy"],
+         "latest value served from hot tier"),
+    ]
+
+
+if __name__ == "__main__":
+    for name, val, note in main():
+        print(f"{name},{val},{note}")

@@ -1,0 +1,59 @@
+"""Quickstart: the LiveVectorLake lifecycle in 60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Ingests three versions of a document, shows CDC selective re-embedding,
+current vs point-in-time retrieval, and the audit trail.
+"""
+import tempfile
+
+from repro.core.store import LiveVectorLake
+
+V1 = """The incident response SLA is four hours.
+
+All database backups run nightly at 02:00 UTC.
+
+Access reviews happen every quarter."""
+
+V2 = """The incident response SLA is two hours.
+
+All database backups run nightly at 02:00 UTC.
+
+Access reviews happen every quarter."""
+
+V3 = V2 + "\n\nA new on-call rotation covers weekends."
+
+T1, T2, T3 = 1_000_000, 2_000_000, 3_000_000
+
+with tempfile.TemporaryDirectory() as root:
+    store = LiveVectorLake(root, dim=128)
+
+    # --- ingest three versions; only changed chunks are re-embedded ----
+    for ts, text in ((T1, V1), (T2, V2), (T3, V3)):
+        s = store.ingest("runbook", text, ts=ts)
+        print(f"v{s.version}: new={s.n_new} modified={s.n_modified} "
+              f"unchanged={s.n_unchanged} embedded={s.n_embedded} "
+              f"reprocessed={s.reprocess_fraction:.0%}")
+
+    # --- current query (hot tier) --------------------------------------
+    print("\ncurrent answer:")
+    for r in store.query("incident response SLA", k=1):
+        print(f"  [{r.tier}] {r.text}")
+
+    # --- point-in-time query (cold tier, leakage-guarded) --------------
+    print("what did we promise BEFORE the change? (ts between v1 and v2)")
+    for r in store.query("incident response SLA", k=1, at=1_500_000):
+        print(f"  [{r.tier}] {r.text}")
+
+    # --- audit trail -----------------------------------------------------
+    print("\naudit trail for paragraph 0:")
+    for h in store.cold.history("runbook"):
+        if h["position"] == 0:
+            print(f"  v{h['version']} [{h['valid_from']}, "
+                  f"{h['valid_to'] if h['valid_to'] < 2**62 else 'open'}) "
+                  f"{h['status']}: {h['text'][:60]}")
+
+    st = store.stats()
+    print(f"\nhot tier: {st['hot']['active']} active chunks | cold tier: "
+          f"{st['cold']['total_records']} records across "
+          f"{st['cold']['versions']} commits")

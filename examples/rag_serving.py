@@ -1,0 +1,66 @@
+"""End-to-end driver: serve a small model with batched requests over a
+versioned knowledge base (the paper's kind of system => serving driver).
+
+    PYTHONPATH=src python examples/rag_serving.py
+
+Pipeline per request: temporal-aware retrieval (hot tier for current,
+cold snapshot for as-of queries) -> prompt assembly -> prefill + greedy
+decode with a KV cache -> batched through the request batcher.
+"""
+import tempfile
+
+from repro.core.store import LiveVectorLake
+from repro.data.corpus import generate_corpus
+from repro.models.transformer import TransformerConfig
+from repro.serve.batcher import Batcher
+from repro.serve.engine import RAGEngine
+
+print("building versioned knowledge base (20 docs x 3 versions)...")
+corpus = generate_corpus(n_docs=20, n_versions=3, seed=7)
+
+with tempfile.TemporaryDirectory() as root:
+    store = LiveVectorLake(root, dim=384)
+    for v in range(corpus.n_versions):
+        for d in corpus.doc_ids():
+            store.ingest(d, corpus.versions[v][d],
+                         ts=corpus.timestamps[v])
+
+    lm = TransformerConfig(
+        name="rag-lm", vocab=30_522, d_model=128, n_layers=2, n_heads=4,
+        n_kv=2, d_head=32, d_ff=512, act="swiglu", remat=False)
+    engine = RAGEngine(store, lm)
+
+    fact = corpus.facts[0]
+    t_mid = (corpus.timestamps[0] + corpus.timestamps[1]) // 2
+
+    requests = [
+        (f"what is {fact.name} now", None),
+        (f"what was {fact.name} historically", int(t_mid)),
+        ("weekend on-call rotation status", None),
+        ("database backup schedule", None),
+    ]
+
+    def run_batch(payloads):
+        return [engine.answer(q, k=2, at=at, max_new_tokens=6)
+                for q, at in payloads]
+
+    batcher = Batcher(run_batch, max_batch=2)
+    reqs = [batcher.submit(p) for p in requests]
+    batcher.drain()
+
+    for r in reqs:
+        res = r.result
+        print(f"\nQ: {res.query}  (at={res.at})")
+        top = res.retrieved[0] if res.retrieved else None
+        if top:
+            print(f"   top context [{top.tier} v{top.version}]: "
+                  f"{top.text[:80]}")
+        print(f"   generated ids: {res.token_ids}")
+
+    print(f"\nbatcher: {batcher.stats}")
+    print("expected: the 'now' query retrieves the latest fact value "
+          "from the HOT tier; the historical one retrieves the old value "
+          "from the COLD snapshot — same question, different timestamp, "
+          "different grounded answer.")
+    print(f"fact {fact.name}: v0={fact.value_at_version(0)} "
+          f"latest={fact.value_at_version(corpus.n_versions-1)}")

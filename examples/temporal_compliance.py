@@ -1,0 +1,66 @@
+"""Compliance workflow: point-in-time reconstruction, audit trails, and
+crash recovery — the paper's regulatory use case (§I, §VI-B).
+
+    PYTHONPATH=src python examples/temporal_compliance.py
+"""
+import tempfile
+
+from repro.core.chunking import reassemble, chunk_document
+from repro.core.store import FaultInjected, LiveVectorLake
+from repro.core.types import Chunk
+
+POLICY_V1 = """Data retention period is 30 days.
+
+Encryption uses AES-128 for data at rest.
+
+Vendor access requires manager approval."""
+
+POLICY_V2 = """Data retention period is 90 days.
+
+Encryption uses AES-256 for data at rest.
+
+Vendor access requires manager approval."""
+
+T1, T2 = 1_000_000, 2_000_000
+BREACH_TS = 1_500_000          # incident detected between the versions
+
+with tempfile.TemporaryDirectory() as root:
+    store = LiveVectorLake(root, dim=128)
+    store.ingest("policy", POLICY_V1, ts=T1)
+    store.ingest("policy", POLICY_V2, ts=T2)
+
+    # --- "what was our security posture when the breach was detected?"
+    print("point-in-time retrieval at breach time:")
+    for r in store.query("encryption standard at rest", k=1, at=BREACH_TS):
+        print(f"  {r.text}   [valid {r.valid_from}..{r.valid_to})")
+        assert "AES-128" in r.text        # the historical truth
+
+    # --- full document reconstruction as of the breach ----------------
+    snap = store.cold.snapshot(as_of_ts=BREACH_TS)
+    chunks = [Chunk(text=snap.texts[i], position=int(snap.position[i]),
+                    chunk_id=snap.chunk_ids[i])
+              for i in range(len(snap)) if snap.doc_ids[i] == "policy"]
+    print("\nreconstructed policy document as of the breach:")
+    print("  " + reassemble(chunks).replace("\n\n", "\n  "))
+
+    # --- audit: exactly which paragraphs changed, and when -------------
+    print("\naudit trail (position-level change attribution):")
+    for h in store.cold.history("policy"):
+        state = h["status"]
+        print(f"  p{h['position']} v{h['version']} {state}: "
+              f"{h['text'][:45]}")
+
+    # --- crash recovery: WAL reconciliation ----------------------------
+    print("\nsimulating crash mid-ingest (after cold commit)...")
+    try:
+        store.ingest("policy", POLICY_V2 + "\n\nNew audit clause.",
+                     ts=3_000_000, fail_after="cold")
+    except FaultInjected:
+        pass
+    store2 = LiveVectorLake(root, dim=128)      # restart
+    assert not store2.wal.pending()
+    res = store2.query("audit clause", k=1)
+    print(f"  after restart the committed write IS visible: "
+          f"{res[0].text[:40]}")
+    print("  (cold tier is the source of truth; hot tier rebuilt "
+          "deterministically)")

@@ -1,0 +1,2 @@
+from .base import (ArchSpec, Cell, all_cells, get_arch,  # noqa: F401
+                   list_archs, register)

@@ -1,0 +1,102 @@
+"""Architecture/shape registry machinery.
+
+Every assigned architecture ships as one configs/<id>.py exposing ARCH, an
+ArchSpec whose cells() are its assigned input shapes. An (arch x shape)
+CELL fully determines:
+  - which step function is lowered (train_step / prefill / decode_step /
+    serve forward / retrieval scoring),
+  - the exact input ShapeDtypeStructs (no allocation — dry-run safe),
+  - a REDUCED variant of the same family for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+bf16 = jnp.bfloat16
+i32 = jnp.int32
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    """(architecture x input-shape) pair."""
+    arch: str
+    shape: str
+    kind: str            # train | prefill | decode | serve | retrieval
+    note: str = ""
+
+    @property
+    def key(self) -> str:
+        return f"{self.arch}/{self.shape}"
+
+
+@dataclasses.dataclass
+class ArchSpec:
+    name: str
+    family: str                           # lm | gnn | recsys
+    source: str                           # public-literature citation tag
+    model_config: Callable[[bool], Any]   # (reduced) -> family config obj
+    cells: Callable[[], list[Cell]]
+    input_specs: Callable[[str, bool], dict]   # (shape, reduced) -> specs
+    notes: str = ""
+
+    def cell(self, shape: str) -> Cell:
+        for c in self.cells():
+            if c.shape == shape:
+                return c
+        raise KeyError(f"{self.name}: unknown shape {shape!r}")
+
+
+_REGISTRY: dict[str, ArchSpec] = {}
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_arch(name: str) -> ArchSpec:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs() -> list[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def all_cells() -> list[Cell]:
+    _ensure_loaded()
+    out = []
+    for name in list_archs():
+        out.extend(_REGISTRY[name].cells())
+    return out
+
+
+_LOADED = False
+
+ARCH_MODULES = (
+    "mistral_nemo_12b", "nemotron_4_15b", "qwen1_5_32b", "kimi_k2_1t_a32b",
+    "qwen2_moe_a2_7b", "schnet", "fm", "bert4rec", "dlrm_mlperf",
+    "wide_deep", "minilm_embedder",
+)
+
+
+def _ensure_loaded() -> None:
+    global _LOADED
+    if _LOADED:
+        return
+    import importlib
+    for mod in ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{mod}")
+    _LOADED = True

@@ -1,0 +1,281 @@
+"""Cold tier: append-only columnar version store (paper §III-C2).
+
+TPU-native stand-in for Delta Lake + Parquet (see DESIGN.md §2): the
+*architecture* is preserved exactly —
+
+  - append-only segments of columnar arrays (structure-of-arrays), one
+    compressed .npz per commit (plays the role of Snappy-Parquet),
+  - a JSON transaction log with atomic-rename commits (the "delta log"):
+    every commit is one numbered log entry referencing its segment plus the
+    validity CLOSURES it applies (mark-superseded / mark-deleted are
+    append-only log facts, never in-place mutations),
+  - snapshot isolation + time travel: a reader resolves a snapshot at
+    (version | timestamp) by folding log entries up to the target, then
+    filters valid_from <= ts < valid_to. Validity filtering happens BEFORE
+    any similarity ranking (temporal-leakage prevention, §III-D3).
+
+ACID story: a commit is visible iff its log entry file exists (os.replace
+is atomic). Segment files are written and fsync'd before the log entry, so
+a crash leaves at worst an orphaned segment, never a dangling log entry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+import os
+import tempfile
+from typing import Optional
+
+import numpy as np
+
+from .hashing import blob_checksum
+from .types import (STATUS_ACTIVE, STATUS_DELETED, STATUS_SUPERSEDED,
+                    VALID_TO_OPEN, ChunkRecord)
+
+_LOG_DIR = "_log"
+_SEG_DIR = "segments"
+
+
+@dataclasses.dataclass
+class ColdSnapshot:
+    """Materialized point-in-time view: columnar arrays over all records
+    valid at the snapshot instant."""
+
+    embeddings: np.ndarray        # (n, d) float32
+    valid_from: np.ndarray        # (n,) int64
+    valid_to: np.ndarray          # (n,) int64
+    version: np.ndarray           # (n,) int32
+    position: np.ndarray          # (n,) int64
+    chunk_ids: list[str]
+    doc_ids: list[str]
+    texts: list[str]
+    as_of: int
+
+    def __len__(self) -> int:
+        return len(self.chunk_ids)
+
+
+def _atomic_write(path: str, data: bytes) -> None:
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+class ColdTier:
+    def __init__(self, root: str, dim: int):
+        self.root = root
+        self.dim = dim
+        os.makedirs(os.path.join(root, _LOG_DIR), exist_ok=True)
+        os.makedirs(os.path.join(root, _SEG_DIR), exist_ok=True)
+
+    # ------------------------------------------------------------------
+    # log handling
+    # ------------------------------------------------------------------
+    def _log_path(self, version: int) -> str:
+        return os.path.join(self.root, _LOG_DIR, f"{version:08d}.json")
+
+    def latest_version(self) -> int:
+        entries = [f for f in os.listdir(os.path.join(self.root, _LOG_DIR))
+                   if f.endswith(".json")]
+        return max((int(f.split(".")[0]) for f in entries), default=0)
+
+    def _read_log(self, up_to_version: Optional[int] = None,
+                  up_to_ts: Optional[int] = None) -> list[dict]:
+        out = []
+        for v in range(1, self.latest_version() + 1):
+            p = self._log_path(v)
+            if not os.path.exists(p):
+                continue  # gap = never-committed version number
+            with open(p) as f:
+                e = json.load(f)
+            if up_to_version is not None and e["version"] > up_to_version:
+                break
+            if up_to_ts is not None and e["ts"] > up_to_ts:
+                break
+            out.append(e)
+        return out
+
+    # ------------------------------------------------------------------
+    # commits (append-only)
+    # ------------------------------------------------------------------
+    def commit(self, records: list[ChunkRecord],
+               closures: list[dict], ts: int,
+               uncommitted: bool = False) -> int:
+        """One ACID commit = (appended records, validity closures).
+
+        closures: [{"doc_id", "position", "closed_at", "status"}] marking
+        previously-open records superseded/deleted at `closed_at`.
+        ``uncommitted=True`` writes the segment flagged for the WAL
+        reconciler (compensating-transaction support): readers skip it.
+        """
+        version = self.latest_version() + 1
+        seg_name = None
+        checksum = None
+        if records:
+            seg_name = f"seg-{version:08d}.npz"
+            emb = np.stack([np.asarray(r.embedding, dtype=np.float32)
+                            for r in records])
+            if emb.shape[1] != self.dim:
+                raise ValueError(f"embedding dim {emb.shape[1]} != {self.dim}")
+            buf = io.BytesIO()
+            np.savez_compressed(
+                buf,
+                embeddings=emb,
+                valid_from=np.array([r.valid_from for r in records], np.int64),
+                valid_to=np.array([r.valid_to for r in records], np.int64),
+                version=np.array([version] * len(records), np.int32),
+                position=np.array([r.position for r in records], np.int64),
+                chunk_ids=np.array([r.chunk_id for r in records]),
+                doc_ids=np.array([r.doc_id for r in records]),
+                texts=np.array([r.text for r in records]),
+                parent_hash=np.array([r.parent_hash or "" for r in records]),
+            )
+            data = buf.getvalue()
+            checksum = blob_checksum(data)
+            _atomic_write(os.path.join(self.root, _SEG_DIR, seg_name), data)
+
+        entry = {
+            "version": version,
+            "ts": ts,
+            "segment": seg_name,
+            "checksum": checksum,
+            "n_records": len(records),
+            "closures": closures,
+            "committed": not uncommitted,
+        }
+        _atomic_write(self._log_path(version),
+                      json.dumps(entry, indent=1).encode())
+        return version
+
+    def mark_committed(self, version: int, committed: bool = True) -> None:
+        """Flip the committed flag (WAL reconciliation: compensate or
+        finalize a previously-uncommitted segment)."""
+        p = self._log_path(version)
+        with open(p) as f:
+            e = json.load(f)
+        e["committed"] = committed
+        _atomic_write(p, json.dumps(e, indent=1).encode())
+
+    # ------------------------------------------------------------------
+    # reads: snapshot isolation + time travel
+    # ------------------------------------------------------------------
+    def _load_segment(self, seg_name: str, checksum: Optional[str]) -> dict:
+        p = os.path.join(self.root, _SEG_DIR, seg_name)
+        with open(p, "rb") as f:
+            data = f.read()
+        if checksum and blob_checksum(data) != checksum:
+            raise IOError(f"segment {seg_name}: checksum mismatch (corruption)")
+        with np.load(io.BytesIO(data)) as z:
+            return {k: z[k] for k in z.files}
+
+    def snapshot(self, as_of_ts: Optional[int] = None,
+                 version: Optional[int] = None,
+                 include_closed: bool = False) -> ColdSnapshot:
+        """Materialize the store as of (ts | version | now).
+
+        Fold log entries up to the target; apply closures to compute
+        valid_to; filter to records whose validity interval covers the
+        target instant. include_closed=True returns ALL records up to the
+        target (full history view, used for audits and storage stats).
+        """
+        entries = self._read_log(up_to_version=version, up_to_ts=as_of_ts)
+        entries = [e for e in entries if e.get("committed", True)]
+        if as_of_ts is None:
+            as_of_ts = entries[-1]["ts"] if entries else 0
+
+        cols: dict[str, list] = {k: [] for k in
+                                 ("embeddings", "valid_from", "valid_to",
+                                  "version", "position", "chunk_ids",
+                                  "doc_ids", "texts")}
+        # open-record index: (doc_id, position) -> flat row index
+        open_idx: dict[tuple[str, int], int] = {}
+        valid_to_acc: list[int] = []
+        n = 0
+        for e in entries:
+            for c in e["closures"]:
+                key = (c["doc_id"], int(c["position"]))
+                row = open_idx.pop(key, None)
+                if row is not None:
+                    valid_to_acc[row] = int(c["closed_at"])
+            if e["segment"]:
+                seg = self._load_segment(e["segment"], e.get("checksum"))
+                m = len(seg["position"])
+                cols["embeddings"].append(seg["embeddings"])
+                cols["valid_from"].append(seg["valid_from"])
+                cols["version"].append(seg["version"])
+                cols["position"].append(seg["position"])
+                cols["chunk_ids"].extend(seg["chunk_ids"].tolist())
+                cols["doc_ids"].extend(seg["doc_ids"].tolist())
+                cols["texts"].extend(seg["texts"].tolist())
+                for i in range(m):
+                    key = (seg["doc_ids"][i], int(seg["position"][i]))
+                    open_idx[key] = n + i
+                    valid_to_acc.append(VALID_TO_OPEN)
+                n += m
+
+        if n == 0:
+            z = np.zeros
+            return ColdSnapshot(z((0, self.dim), np.float32), z(0, np.int64),
+                                z(0, np.int64), z(0, np.int32), z(0, np.int64),
+                                [], [], [], as_of_ts)
+
+        emb = np.concatenate(cols["embeddings"], axis=0)
+        vf = np.concatenate(cols["valid_from"])
+        vt = np.array(valid_to_acc, np.int64)
+        ver = np.concatenate(cols["version"])
+        pos = np.concatenate(cols["position"])
+
+        if include_closed:
+            mask = np.ones(n, bool)
+        else:
+            # THE temporal-leakage guard: validity filter BEFORE any ranking
+            mask = (vf <= as_of_ts) & (as_of_ts < vt)
+        sel = np.nonzero(mask)[0]
+        return ColdSnapshot(
+            embeddings=emb[sel],
+            valid_from=vf[sel], valid_to=vt[sel],
+            version=ver[sel], position=pos[sel],
+            chunk_ids=[cols["chunk_ids"][i] for i in sel],
+            doc_ids=[cols["doc_ids"][i] for i in sel],
+            texts=[cols["texts"][i] for i in sel],
+            as_of=as_of_ts,
+        )
+
+    def history(self, doc_id: str) -> list[dict]:
+        """Full audit trail for one document: every record ever written,
+        with status + validity (paper §III-A4 audit precision)."""
+        snap = self.snapshot(include_closed=True)
+        out = []
+        for i, d in enumerate(snap.doc_ids):
+            if d != doc_id:
+                continue
+            closed = snap.valid_to[i] != VALID_TO_OPEN
+            out.append({
+                "position": int(snap.position[i]),
+                "chunk_id": snap.chunk_ids[i],
+                "version": int(snap.version[i]),
+                "valid_from": int(snap.valid_from[i]),
+                "valid_to": int(snap.valid_to[i]),
+                "status": STATUS_SUPERSEDED if closed else STATUS_ACTIVE,
+                "text": snap.texts[i],
+            })
+        out.sort(key=lambda r: (r["position"], r["valid_from"]))
+        return out
+
+    def stats(self) -> dict:
+        snap_all = self.snapshot(include_closed=True)
+        snap_cur = self.snapshot()
+        seg_dir = os.path.join(self.root, _SEG_DIR)
+        disk = sum(os.path.getsize(os.path.join(seg_dir, f))
+                   for f in os.listdir(seg_dir))
+        return {"total_records": len(snap_all), "active_records": len(snap_cur),
+                "versions": self.latest_version(), "disk_bytes": disk}

@@ -1,0 +1,91 @@
+"""IVF (inverted-file) index: the sub-linear hot-tier search path for
+larger-than-exact-scan corpora (DESIGN.md §2 — ScaNN/TPU-KNN style).
+
+k-means centroids partition the corpus; a query scores all centroids
+(tiny matmul), visits the ``nprobe`` nearest partitions, and runs the
+exact fused top-k only inside them. Recall is controlled by nprobe
+(nprobe == n_centroids -> exact). Centroid assignment and scan both run
+as dense MXU matmuls — no pointer chasing, static shapes, shardable by
+partition.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class IVFStats:
+    n_centroids: int
+    n_vectors: int
+    fraction_scanned: float
+
+
+class IVFIndex:
+    def __init__(self, n_centroids: int = 64, n_iters: int = 10,
+                 seed: int = 0):
+        self.n_centroids = n_centroids
+        self.n_iters = n_iters
+        self.seed = seed
+        self.centroids: np.ndarray | None = None     # (C, d)
+        self._lists: list[np.ndarray] = []           # row ids per centroid
+        self._vectors: np.ndarray | None = None
+
+    # -- build ----------------------------------------------------------
+    def build(self, vectors: np.ndarray) -> None:
+        """Lloyd k-means (deterministic seed), then invert."""
+        v = np.asarray(vectors, np.float32)
+        n = v.shape[0]
+        c = min(self.n_centroids, n)
+        rng = np.random.default_rng(self.seed)
+        centroids = v[rng.choice(n, c, replace=False)].copy()
+        for _ in range(self.n_iters):
+            assign = np.argmax(v @ centroids.T, axis=1)
+            for j in range(c):
+                members = v[assign == j]
+                if len(members):
+                    centroids[j] = members.mean(0)
+            norms = np.linalg.norm(centroids, axis=1, keepdims=True)
+            centroids = centroids / np.maximum(norms, 1e-9)
+        assign = np.argmax(v @ centroids.T, axis=1)
+        self.centroids = centroids
+        self._vectors = v
+        self._lists = [np.nonzero(assign == j)[0] for j in range(c)]
+
+    # -- search -----------------------------------------------------------
+    def search(self, queries: np.ndarray, k: int = 5, nprobe: int = 8
+               ) -> tuple[np.ndarray, np.ndarray, IVFStats]:
+        """Returns (scores (Q, k), row ids (Q, k), stats)."""
+        assert self.centroids is not None, "build() first"
+        q = np.atleast_2d(np.asarray(queries, np.float32))
+        nprobe = min(nprobe, len(self._lists))
+        c_scores = q @ self.centroids.T                   # (Q, C)
+        probe = np.argsort(-c_scores, axis=1)[:, :nprobe]
+        out_s = np.full((q.shape[0], k), -np.inf, np.float32)
+        out_i = np.full((q.shape[0], k), -1, np.int64)
+        scanned = 0
+        for qi in range(q.shape[0]):
+            rows = np.concatenate([self._lists[j] for j in probe[qi]]) \
+                if nprobe else np.empty(0, np.int64)
+            if len(rows) == 0:
+                continue
+            scanned += len(rows)
+            scores = self._vectors[rows] @ q[qi]
+            top = np.argsort(-scores)[:k]
+            out_s[qi, : len(top)] = scores[top]
+            out_i[qi, : len(top)] = rows[top]
+        stats = IVFStats(len(self._lists), len(self._vectors),
+                         scanned / max(q.shape[0] * len(self._vectors), 1))
+        return out_s, out_i, stats
+
+    def recall_at_k(self, queries: np.ndarray, k: int = 10,
+                    nprobe: int = 8) -> float:
+        """Measured recall vs the exact scan (validation/benchmarks)."""
+        q = np.atleast_2d(np.asarray(queries, np.float32))
+        _, approx, _ = self.search(q, k=k, nprobe=nprobe)
+        exact_scores = q @ self._vectors.T
+        exact = np.argsort(-exact_scores, axis=1)[:, :k]
+        hits = sum(len(set(approx[i]) & set(exact[i]))
+                   for i in range(q.shape[0]))
+        return hits / (q.shape[0] * k)

@@ -1,0 +1,244 @@
+"""LiveVectorLake facade: CDC ingestion + dual-tier storage + temporal
+query routing (paper §III, §IV-B).
+
+Ingest flow (paper's pseudo-code, with the WAL protocol of §III-C3):
+
+  1. chunk + content-address hash            (Layer 1)
+  2. CDC classify vs hash store              (Layer 1)
+  3. embed ONLY new+modified, dedup by hash  (Layer 2)
+  4. WAL INTENT
+  5. cold-tier ACID commit (append + closures)     -> WAL COLD_OK
+  6. hot-tier apply (delete closed / insert new)   -> WAL HOT_OK
+  7. hash-store update, WAL COMMIT
+
+Crash at any point is recovered by ``reconcile()``: cold tier committed =>
+roll forward (cold is the source of truth; the hot tier is a rebuildable
+cache); cold tier not committed => compensate/abort. ``fail_after`` is a
+fault-injection hook used by the fault-tolerance tests.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .cdc import detect_changes, positional_diff
+from .chunking import chunk_document
+from .cold_tier import ColdTier
+from .embedder import CachingEmbedder, Embedder, HashProjectionEmbedder
+from .hash_store import HashStore
+from .hot_tier import HotTier
+from .temporal import (CURRENT, COMPARATIVE, HISTORICAL, TemporalEngine,
+                       classify_query)
+from .types import (STATUS_DELETED, STATUS_SUPERSEDED, CDCSummary,
+                    ChunkRecord, SearchResult)
+
+
+class FaultInjected(RuntimeError):
+    """Raised by the fault-injection hook to simulate a crash."""
+
+
+class LiveVectorLake:
+    def __init__(self, root: str, embedder: Optional[Embedder] = None,
+                 dim: int = 384, hot_capacity: int = 4096,
+                 device_resident_history: bool = False):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        inner = embedder or HashProjectionEmbedder(dim=dim)
+        if inner.dim != dim:
+            dim = inner.dim
+        self.dim = dim
+        self.embedder = CachingEmbedder(inner)
+        self.hash_store = HashStore(os.path.join(root, "hash_store.json"))
+        self.cold = ColdTier(os.path.join(root, "cold"), dim)
+        self.hot = HotTier(dim, capacity=hot_capacity)
+        self.temporal = TemporalEngine(self.cold,
+                                       device_resident=device_resident_history)
+        from .wal import WriteAheadLog
+        self.wal = WriteAheadLog(os.path.join(root, "wal.jsonl"))
+        self._last_ts = 0
+        if self.cold.latest_version() > 0:
+            self.recover()
+
+    # ------------------------------------------------------------------
+    # ingestion
+    # ------------------------------------------------------------------
+    def ingest(self, doc_id: str, text: str, ts: Optional[int] = None,
+               fail_after: Optional[str] = None) -> CDCSummary:
+        """Ingest one document version. ``fail_after`` in {"intent",
+        "cold", "hot"} simulates a crash after that stage (tests only)."""
+        ts = self._monotonic_ts(ts)
+        chunks = chunk_document(text)
+        old_hashes = self.hash_store.get(doc_id)
+        cs = detect_changes(chunks, old_hashes)
+        doc_version = self.hash_store.version(doc_id) + 1
+
+        # Layer 2: embed only new+modified; content-address cache dedups
+        # moved/unchanged content and cross-document duplicates for free.
+        close_pos, append_pos = positional_diff(chunks, old_hashes)
+        append_chunks = [chunks[p] for p in append_pos]
+        h0, m0 = self.embedder.hits, self.embedder.misses
+        embeddings = self.embedder.embed_chunks(
+            [c.chunk_id for c in append_chunks],
+            [c.text for c in append_chunks])
+        n_dedup = self.embedder.hits - h0
+        n_embedded = self.embedder.misses - m0
+
+        records = []
+        for c, e in zip(append_chunks, embeddings):
+            parent = old_hashes[c.position] if c.position < len(old_hashes) else None
+            records.append(ChunkRecord(
+                chunk_id=c.chunk_id, doc_id=doc_id, position=c.position,
+                valid_from=ts, parent_hash=parent, text=c.text, embedding=e))
+        n_new_chunks = len(chunks)
+        closures = [{"doc_id": doc_id, "position": p, "closed_at": ts,
+                     "status": (STATUS_SUPERSEDED if p < n_new_chunks
+                                else STATUS_DELETED)}
+                    for p in close_pos]
+
+        # WAL protocol -------------------------------------------------
+        expected_version = self.cold.latest_version() + 1
+        txn = self.wal.begin("ingest", {
+            "doc_id": doc_id, "ts": ts, "cold_version": expected_version,
+            "doc_version": doc_version,
+            "hashes": [c.chunk_id for c in chunks]})
+        if fail_after == "intent":
+            raise FaultInjected("crash after WAL INTENT")
+
+        version = self.cold.commit(records, closures, ts)
+        assert version == expected_version
+        self.wal.mark(txn, "COLD_OK")
+        if fail_after == "cold":
+            raise FaultInjected("crash after cold-tier commit")
+
+        self._hot_apply(records, closures)
+        self.wal.mark(txn, "HOT_OK")
+        if fail_after == "hot":
+            raise FaultInjected("crash after hot-tier apply")
+
+        self.hash_store.put(doc_id, [c.chunk_id for c in chunks], doc_version)
+        self.wal.mark(txn, "COMMIT")
+        self.temporal.invalidate()
+
+        return CDCSummary(
+            doc_id=doc_id, version=doc_version, ts=ts,
+            n_new=len(cs.new), n_modified=len(cs.modified),
+            n_deleted=len(cs.deleted), n_unchanged=len(cs.unchanged),
+            n_moved=len(cs.moved), n_embedded=n_embedded,
+            n_dedup_hits=n_dedup, reprocess_fraction=cs.reprocess_fraction)
+
+    def ingest_batch(self, docs: Sequence[tuple[str, str]],
+                     ts: Optional[int] = None) -> list[CDCSummary]:
+        ts = self._monotonic_ts(ts)
+        return [self.ingest(doc_id, text, ts) for doc_id, text in docs]
+
+    def _hot_apply(self, records: list[ChunkRecord],
+                   closures: list[dict]) -> None:
+        # delete-then-insert keeps (doc, position) uniqueness; both ops are
+        # idempotent so WAL roll-forward can repeat them safely.
+        appended = {(r.doc_id, r.position) for r in records}
+        self.hot.delete([(c["doc_id"], c["position"]) for c in closures
+                         if (c["doc_id"], c["position"]) not in appended])
+        self.hot.insert(records)
+
+    def _monotonic_ts(self, ts: Optional[int]) -> int:
+        if ts is None:
+            ts = time.time_ns() // 1000
+        ts = max(int(ts), self._last_ts + 1)
+        self._last_ts = ts
+        return ts
+
+    # ------------------------------------------------------------------
+    # queries (paper §III-D)
+    # ------------------------------------------------------------------
+    def query(self, text: str, k: int = 5, at: Optional[int] = None,
+              window: Optional[tuple[int, int]] = None) -> list[SearchResult]:
+        intent = classify_query(text, at=at, window=window)
+        q_vec = self.embedder.embed([text])[0]
+        if intent.mode == CURRENT:
+            return self.hot.search(q_vec, k=k)[0]
+        if intent.mode == HISTORICAL:
+            results = self.temporal.query_at(q_vec, intent.at, k=k)
+            self.temporal.assert_no_leakage(results, intent.at)
+            return results
+        assert intent.mode == COMPARATIVE
+        return self.temporal.query_window(q_vec, *intent.window, k=k)
+
+    # ------------------------------------------------------------------
+    # fault tolerance
+    # ------------------------------------------------------------------
+    def recover(self) -> dict:
+        """Full restart path: reconcile the WAL, rebuild the hot tier and
+        hash store from the cold tier (source of truth), warm the
+        embedding cache."""
+        report = self.reconcile()
+        snap = self.cold.snapshot()
+        self.hot.clear()
+        by_doc: dict[str, list[tuple[int, str]]] = {}
+        records = []
+        for i in range(len(snap)):
+            records.append(ChunkRecord(
+                chunk_id=snap.chunk_ids[i], doc_id=snap.doc_ids[i],
+                position=int(snap.position[i]),
+                valid_from=int(snap.valid_from[i]),
+                version=int(snap.version[i]), text=snap.texts[i],
+                embedding=snap.embeddings[i]))
+            by_doc.setdefault(snap.doc_ids[i], []).append(
+                (int(snap.position[i]), snap.chunk_ids[i]))
+        self.hot.insert(records)
+        for doc_id, pairs in by_doc.items():
+            pairs.sort()
+            self.hash_store.put(doc_id, [h for _, h in pairs],
+                                max(self.hash_store.version(doc_id), 1))
+        full = self.cold.snapshot(include_closed=True)
+        self.embedder.warm(full.chunk_ids, full.embeddings)
+        self._last_ts = max(self._last_ts,
+                            int(full.valid_from.max()) if len(full) else 0)
+        self.temporal.invalidate()
+        report["hot_rebuilt"] = len(records)
+        return report
+
+    def reconcile(self, policy: str = "roll_forward") -> dict:
+        """WAL reconciliation (paper: 'periodic reconciliation cleans
+        uncommitted records').
+
+        roll_forward: if the cold commit landed, finish the transaction
+        (hot apply + hash store) — the paper's 'mark committed on success'.
+        compensate:  flag the cold version uncommitted and abort — the
+        paper's 'On Milvus failure, flag Delta record uncommitted'.
+        """
+        actions = {"rolled_forward": 0, "compensated": 0, "aborted": 0}
+        for txn, state, payload in self.wal.pending():
+            v = payload.get("cold_version")
+            cold_landed = v is not None and os.path.exists(
+                self.cold._log_path(v))
+            if not cold_landed:
+                self.wal.mark(txn, "ABORT")   # nothing durable: pure abort
+                actions["aborted"] += 1
+            elif policy == "compensate":
+                self.cold.mark_committed(v, committed=False)
+                self.wal.mark(txn, "ABORT")
+                actions["compensated"] += 1
+            else:
+                # roll forward from the durable cold state
+                doc_id = payload["doc_id"]
+                self.hash_store.put(doc_id, payload["hashes"],
+                                    payload.get("doc_version", 1))
+                self.wal.mark(txn, "COMMIT")
+                actions["rolled_forward"] += 1
+        return actions
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        cold = self.cold.stats()
+        hot = self.hot.stats()
+        total = max(cold["total_records"], 1)
+        return {
+            "hot": hot, "cold": cold,
+            "hot_fraction_of_history": hot["active"] / total,
+            "docs": len(self.hash_store),
+            "embed_cache": {"hits": self.embedder.hits,
+                            "misses": self.embedder.misses},
+        }

@@ -1,0 +1,145 @@
+"""Temporal query engine (paper §III-D).
+
+Query classification by temporal intent:
+  - current:     no temporal constraint            -> hot tier
+  - historical:  specific timestamp                -> cold tier, snapshot @ ts
+  - comparative: date range                        -> both tiers
+
+Temporal-leakage prevention (paper §III-D3): validity filtering precedes
+similarity ranking. Two enforcement layers:
+  1. the cold tier's snapshot() only materializes records whose validity
+     interval covers the target instant;
+  2. the scoring kernel (kernels/temporal_mask_score) re-applies the
+     interval test *inside* the fused score+top-k, so even a device-
+     resident full-history corpus can never rank an invalid chunk
+     (invalid rows are -inf BEFORE selection).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from datetime import datetime, timezone
+from typing import Optional
+
+import numpy as np
+
+from .cold_tier import ColdSnapshot, ColdTier
+from .types import SearchResult, VALID_TO_OPEN
+
+CURRENT = "current"
+HISTORICAL = "historical"
+COMPARATIVE = "comparative"
+
+_AS_OF = re.compile(r"\b(?:as of|as at|at|on)\s+(\d{4}-\d{2}-\d{2})\b", re.I)
+_BETWEEN = re.compile(
+    r"\bbetween\s+(\d{4}-\d{2}-\d{2})\s+and\s+(\d{4}-\d{2}-\d{2})\b", re.I)
+
+
+def _iso_to_us(s: str) -> int:
+    dt = datetime.strptime(s, "%Y-%m-%d").replace(tzinfo=timezone.utc)
+    return int(dt.timestamp() * 1_000_000)
+
+
+@dataclasses.dataclass(frozen=True)
+class TemporalIntent:
+    mode: str
+    at: Optional[int] = None                     # unix micros
+    window: Optional[tuple[int, int]] = None     # [t0, t1) unix micros
+
+
+def classify_query(text: str = "", at: Optional[int] = None,
+                   window: Optional[tuple[int, int]] = None) -> TemporalIntent:
+    """Classify by explicit arguments first, then by temporal expressions
+    in the query text ("as of 2025-03-01", "between A and B")."""
+    if window is not None:
+        return TemporalIntent(COMPARATIVE, window=tuple(window))
+    if at is not None:
+        return TemporalIntent(HISTORICAL, at=at)
+    m = _BETWEEN.search(text)
+    if m:
+        return TemporalIntent(
+            COMPARATIVE, window=(_iso_to_us(m.group(1)), _iso_to_us(m.group(2))))
+    m = _AS_OF.search(text)
+    if m:
+        return TemporalIntent(HISTORICAL, at=_iso_to_us(m.group(1)))
+    return TemporalIntent(CURRENT)
+
+
+def _snapshot_results(snap: ColdSnapshot, scores: np.ndarray,
+                      idx: np.ndarray, k: int) -> list[SearchResult]:
+    out = []
+    for j in range(min(k, idx.shape[0])):
+        i, s = int(idx[j]), float(scores[j])
+        if not np.isfinite(s):
+            continue
+        out.append(SearchResult(
+            chunk_id=snap.chunk_ids[i], doc_id=snap.doc_ids[i],
+            position=int(snap.position[i]), score=s, text=snap.texts[i],
+            valid_from=int(snap.valid_from[i]), valid_to=int(snap.valid_to[i]),
+            version=int(snap.version[i]), tier="cold"))
+    return out
+
+
+class TemporalEngine:
+    """Cold-path execution: snapshot load -> (validity-fused) scoring ->
+    top-k. ``device_resident=True`` keeps the FULL history on device and
+    relies on the fused kernel mask only (the beyond-paper fast path: no
+    per-query snapshot materialization)."""
+
+    def __init__(self, cold: ColdTier, device_resident: bool = False):
+        self.cold = cold
+        self.device_resident = device_resident
+        self._resident: Optional[ColdSnapshot] = None
+        self._resident_version = -1
+
+    def invalidate(self) -> None:
+        self._resident = None
+        self._resident_version = -1
+
+    def _full_history(self) -> ColdSnapshot:
+        v = self.cold.latest_version()
+        if self._resident is None or self._resident_version != v:
+            self._resident = self.cold.snapshot(include_closed=True)
+            self._resident_version = v
+        return self._resident
+
+    def query_at(self, q_vec: np.ndarray, ts: int, k: int = 5) -> list[SearchResult]:
+        from ..kernels.temporal_mask_score.ops import temporal_topk
+
+        if self.device_resident:
+            snap = self._full_history()
+        else:
+            snap = self.cold.snapshot(as_of_ts=ts)   # paper-faithful path
+        if len(snap) == 0:
+            return []
+        scores, idx = temporal_topk(
+            np.asarray(q_vec, np.float32).reshape(1, -1),
+            snap.embeddings, snap.valid_from, snap.valid_to, ts,
+            min(k, len(snap)))
+        return _snapshot_results(snap, np.asarray(scores)[0],
+                                 np.asarray(idx)[0], k)
+
+    def query_window(self, q_vec: np.ndarray, t0: int, t1: int,
+                     k: int = 5) -> list[SearchResult]:
+        """Records valid at ANY instant of [t0, t1): interval overlap
+        (valid_from < t1) and (valid_to > t0)."""
+        snap = self.cold.snapshot(as_of_ts=t1, include_closed=True)
+        if len(snap) == 0:
+            return []
+        overlap = (snap.valid_from < t1) & (snap.valid_to > t0)
+        if not overlap.any():
+            return []
+        q = np.asarray(q_vec, np.float32).reshape(-1)
+        scores = snap.embeddings @ q
+        scores = np.where(overlap, scores, -np.inf)
+        idx = np.argsort(-scores)[:k]
+        return _snapshot_results(snap, scores[idx], idx, k)
+
+    def assert_no_leakage(self, results: list[SearchResult], ts: int) -> None:
+        """Invariant check used by tests/benchmarks: every returned chunk's
+        validity interval must cover the query instant."""
+        for r in results:
+            if not (r.valid_from <= ts < r.valid_to):
+                raise AssertionError(
+                    f"temporal leakage: chunk {r.chunk_id[:12]} valid "
+                    f"[{r.valid_from}, {r.valid_to}) queried at {ts}")

@@ -1,0 +1,118 @@
+"""Write-ahead log with compensating transactions (paper §III-C3).
+
+Cross-tier consistency protocol:
+  1. INTENT        — ingest begins; payload captures everything needed to
+                     re-drive or compensate the transaction
+  2. COLD_OK       — cold-tier (durable, ACID) append committed
+  3. HOT_OK        — hot-tier apply finished
+  4. COMMIT        — transaction fully visible
+
+On crash, ``pending()`` returns in-flight transactions; the reconciler
+either rolls them FORWARD (cold tier committed => finish the hot-tier
+apply: the cold tier is the source of truth) or COMPENSATES (cold tier not
+committed => mark aborted, nothing became visible). This yields eventual
+consistency with bounded staleness (<1s in the paper's prototype).
+
+The log is an append-only JSONL file; every record is one fsync'd line, so
+a torn final line (crash mid-write) is detected and discarded on replay.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Optional
+
+INTENT = "INTENT"
+COLD_OK = "COLD_OK"
+HOT_OK = "HOT_OK"
+COMMIT = "COMMIT"
+ABORT = "ABORT"
+
+_TERMINAL = (COMMIT, ABORT)
+_ORDER = {INTENT: 0, COLD_OK: 1, HOT_OK: 2, COMMIT: 3, ABORT: 3}
+
+
+class WriteAheadLog:
+    def __init__(self, path: str):
+        self._path = path
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        self._next_txn = 1
+        self._state: dict[int, str] = {}
+        self._payload: dict[int, dict] = {}
+        if os.path.exists(path):
+            self._replay_file()
+
+    # -- writing ---------------------------------------------------------
+    def _append(self, rec: dict) -> None:
+        line = json.dumps(rec, separators=(",", ":"))
+        with open(self._path, "a") as f:
+            f.write(line + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+
+    def begin(self, op: str, payload: Optional[dict[str, Any]] = None) -> int:
+        txn = self._next_txn
+        self._next_txn += 1
+        rec = {"txn": txn, "state": INTENT, "op": op,
+               "payload": payload or {}, "ts": time.time_ns() // 1000}
+        self._append(rec)
+        self._state[txn] = INTENT
+        self._payload[txn] = rec["payload"]
+        return txn
+
+    def mark(self, txn: int, state: str) -> None:
+        if state not in _ORDER:
+            raise ValueError(f"unknown WAL state {state!r}")
+        cur = self._state.get(txn)
+        if cur is None:
+            raise KeyError(f"unknown txn {txn}")
+        if _ORDER[state] <= _ORDER[cur] and state != cur:
+            raise ValueError(f"txn {txn}: cannot move {cur} -> {state}")
+        self._append({"txn": txn, "state": state, "ts": time.time_ns() // 1000})
+        self._state[txn] = state
+
+    # -- recovery ----------------------------------------------------------
+    def _replay_file(self) -> None:
+        with open(self._path) as f:
+            for raw in f:
+                raw = raw.strip()
+                if not raw:
+                    continue
+                try:
+                    rec = json.loads(raw)
+                except json.JSONDecodeError:
+                    break  # torn final line from a crash mid-append
+                txn = rec["txn"]
+                self._state[txn] = rec["state"]
+                if "payload" in rec:
+                    self._payload[txn] = rec["payload"]
+                self._next_txn = max(self._next_txn, txn + 1)
+
+    def state(self, txn: int) -> Optional[str]:
+        return self._state.get(txn)
+
+    def payload(self, txn: int) -> dict:
+        return self._payload.get(txn, {})
+
+    def pending(self) -> list[tuple[int, str, dict]]:
+        """Transactions that began but never reached COMMIT/ABORT, oldest
+        first: [(txn, last_state, payload)]."""
+        return [(t, s, self._payload.get(t, {}))
+                for t, s in sorted(self._state.items()) if s not in _TERMINAL]
+
+    def truncate_committed(self) -> None:
+        """Compaction: rewrite the log keeping only non-terminal txns
+        (periodic reconciliation housekeeping)."""
+        keep = {t for t, s in self._state.items() if s not in _TERMINAL}
+        tmp = self._path + ".compact"
+        with open(tmp, "w") as f:
+            for t in sorted(keep):
+                f.write(json.dumps({"txn": t, "state": self._state[t],
+                                    "op": "?", "payload": self._payload.get(t, {}),
+                                    "ts": 0}) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self._path)
+        self._state = {t: self._state[t] for t in keep}
+        self._payload = {t: self._payload.get(t, {}) for t in keep}

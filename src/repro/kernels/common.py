@@ -1,0 +1,59 @@
+"""Kernel dispatch policy.
+
+Every kernel ships three execution paths:
+  - "pallas":    pl.pallas_call lowered for TPU (the TARGET).
+  - "interpret": same kernel body, interpret=True — executes on CPU for
+                 correctness validation (used by the kernel test suites).
+  - "ref":       the pure-jnp oracle from ref.py — the default on CPU hosts
+                 (fast XLA path; also what the dry-run lowers so roofline
+                 terms reflect the jnp compute graph).
+
+Select globally with REPRO_KERNEL_MODE in {auto, pallas, interpret, ref};
+"auto" = pallas on TPU backends, ref elsewhere.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def kernel_mode(override: str | None = None) -> str:
+    mode = override or os.environ.get("REPRO_KERNEL_MODE", "auto")
+    if mode == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    if mode not in ("pallas", "interpret", "ref"):
+        raise ValueError(f"bad kernel mode {mode!r}")
+    return mode
+
+
+def pad_to(x, axis: int, multiple: int, value=0):
+    """Pad one axis up to a multiple (static shapes for BlockSpec grids)."""
+    import jax.numpy as jnp
+    n = x.shape[axis]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=value), n
+
+
+def split_i64(x):
+    """Split non-negative int64 (numpy, host-side) into (hi:int32,
+    lo:uint32) device arrays — TPUs are 32-bit machines and JAX x64 is off;
+    lexicographic compare on (hi, lo) is exact for timestamps."""
+    import numpy as np
+    x = np.asarray(x, np.int64)
+    hi = (x >> 32).astype(np.int32)
+    lo = (x & np.int64(0xFFFFFFFF)).astype(np.uint32)
+    return hi, lo
+
+
+def le_i64(a_hi, a_lo, b_hi, b_lo):
+    """(a <= b) for split int64 pairs, elementwise (jnp)."""
+    return (a_hi < b_hi) | ((a_hi == b_hi) & (a_lo <= b_lo))
+
+
+def lt_i64(a_hi, a_lo, b_hi, b_lo):
+    return (a_hi < b_hi) | ((a_hi == b_hi) & (a_lo < b_lo))

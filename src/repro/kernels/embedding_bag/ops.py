@@ -1,0 +1,30 @@
+"""jit'd wrapper for EmbeddingBag."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import kernel_mode
+from .embedding_bag import embedding_bag_kernel
+from .ref import embedding_bag_ref
+
+
+@functools.partial(jax.jit, static_argnames=("combiner", "mode"))
+def _bag_jit(table, indices, weights, combiner: str, mode: str):
+    if mode == "ref":
+        return embedding_bag_ref(table, indices, weights, combiner)
+    return embedding_bag_kernel(table, indices, weights, combiner=combiner,
+                                interpret=(mode == "interpret"))
+
+
+def embedding_bag(table, indices, weights=None, combiner: str = "sum",
+                  mode: str | None = None):
+    """Multi-hot embedding lookup-reduce. indices: (B, L) int32 with -1
+    padding; weights default to 1. Returns (B, D)."""
+    indices = jnp.asarray(indices, jnp.int32)
+    if weights is None:
+        weights = jnp.ones(indices.shape, jnp.float32)
+    return _bag_jit(table, indices, jnp.asarray(weights, jnp.float32),
+                    combiner, kernel_mode(mode))

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for EmbeddingBag (gather + weighted segment reduce).
+
+JAX has no native nn.EmbeddingBag; this construction — take + masked
+weighted sum over fixed-shape padded bags — IS the system's embedding
+lookup substrate (kernel_taxonomy §RecSys / §B.11).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, indices, weights=None, combiner: str = "sum"):
+    """table: (V, D); indices: (B, L) int32, -1 = padding; weights:
+    (B, L) f32 or None. Returns (B, D)."""
+    valid = indices >= 0
+    safe = jnp.where(valid, indices, 0)
+    rows = jnp.take(table, safe, axis=0)                 # (B, L, D)
+    w = jnp.ones(indices.shape, jnp.float32) if weights is None \
+        else weights.astype(jnp.float32)
+    w = jnp.where(valid, w, 0.0)
+    out = jnp.einsum("bl,bld->bd", w, rows.astype(jnp.float32))
+    if combiner == "mean":
+        denom = jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+        out = out / denom
+    return out.astype(table.dtype)

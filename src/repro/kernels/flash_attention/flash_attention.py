@@ -1,0 +1,101 @@
+"""Block-streaming attention forward (FlashAttention-style online softmax),
+TPU-native Pallas kernel.
+
+Used by the embedder encoder and the LM prefill path. The (Sq, Skv) logit
+matrix never touches HBM: K/V stream through VMEM in ``bk``-row blocks
+while a running (m, l, acc) triple is maintained in VMEM scratch — the
+standard online-softmax recurrence. GQA is handled in the BlockSpec index
+map (q head h reads kv head h // group), so no K/V repetition is ever
+materialized.
+
+VMEM per step: bq*d (Q) + 2*bk*d (K, V) + bq*bk (logits) + bq*d (acc).
+Defaults bq=bk=128, d<=256 => well under 2 MB. MXU-aligned (multiples of
+128 on both matmul dims).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = float("-inf")
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, causal: bool, scale: float, bq: int, bk: int, q_offset: int):
+    iq, jk = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+    if causal:
+        rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+            + q_offset
+        cols = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(rows >= cols, s, _NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard fully-masked rows: exp(-inf - -inf) -> use safe m
+    m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+    p = jnp.exp(s - m_safe[:, None])                     # (bq, bk)
+    p = jnp.where(jnp.isneginf(s), 0.0, p)
+    alpha = jnp.where(jnp.isneginf(m_prev), 0.0,
+                      jnp.exp(m_prev - m_safe))
+    l_new = alpha * l_prev + jnp.sum(p, axis=1)
+    acc = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc
+
+    @pl.when(jk == pl.num_programs(3) - 1)
+    def _finalize():
+        l = l_ref[...]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True,
+                        scale: float | None = None, bq: int = 128,
+                        bk: int = 128, interpret: bool = False):
+    """q: (B, H, Sq, D); k, v: (B, KV, Skv, D). Sq % bq == Skv % bk == 0."""
+    b, h, sq, d = q.shape
+    _, kv, skv, _ = k.shape
+    assert h % kv == 0 and sq % bq == 0 and skv % bk == 0
+    group = h // kv
+    scale = scale if scale is not None else d ** -0.5
+    q_offset = skv - sq                                  # causal alignment
+    kern = functools.partial(_kernel, causal=causal, scale=scale,
+                             bq=bq, bk=bk, q_offset=q_offset)
+    grid = (b, h, sq // bq, skv // bk)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, i, j: (b_, h_ // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, i, j: (b_, h_ // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # running max m
+            pltpu.VMEM((bq,), jnp.float32),      # running denom l
+            pltpu.VMEM((bq, d), jnp.float32),    # accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,28 @@
+"""jit'd wrapper for block-streaming attention with GQA."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import kernel_mode
+from .flash_attention import flash_attention_fwd
+from .ref import attention_ref
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "mode"))
+def _flash_jit(q, k, v, causal: bool, bq: int, bk: int, mode: str):
+    if mode == "ref":
+        return attention_ref(q, k, v, causal=causal)
+    return flash_attention_fwd(q, k, v, causal=causal, bq=bq, bk=bk,
+                               interpret=(mode == "interpret"))
+
+
+def flash_attention(q, k, v, causal: bool = True, bq: int = 128,
+                    bk: int = 128, mode: str | None = None):
+    """Attention forward. q: (B, H, Sq, D); k, v: (B, KV, Skv, D)."""
+    sq, skv = q.shape[2], k.shape[2]
+    bq, bk = min(bq, sq), min(bk, skv)
+    return _flash_jit(q, k, v, causal, bq, bk, kernel_mode(mode))

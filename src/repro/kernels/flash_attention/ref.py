@@ -1,0 +1,26 @@
+"""Pure-jnp oracle: multi-head attention with GQA + optional causal mask."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True, scale: float | None = None):
+    """q: (B, H, Sq, D); k, v: (B, KV, Skv, D) with H % KV == 0.
+    Returns (B, H, Sq, D), same dtype as q. fp32 softmax internally."""
+    b, h, sq, d = q.shape
+    kv = k.shape[1]
+    group = h // kv
+    scale = scale if scale is not None else d ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    if causal:
+        skv = k.shape[2]
+        # queries are the LAST sq positions of the kv sequence
+        qpos = jnp.arange(sq)[:, None] + (skv - sq)
+        mask = qpos >= jnp.arange(skv)[None, :]
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jnp.exp(logits - logits.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, vf).astype(q.dtype)

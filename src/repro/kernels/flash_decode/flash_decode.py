@@ -1,0 +1,97 @@
+"""Split-K decode attention Pallas kernel (FlashDecoding-style).
+
+The decode_32k / long_500k serving path: ONE query token attends to a long
+KV cache. Sequential streaming (flash fwd) would serialize on cache
+length; instead the cache is split into ``nsplits`` independent chunks
+processed in parallel grid steps, each emitting a partial softmax triple
+(m, l, acc). The cheap (m, l)-weighted merge runs in the jit wrapper.
+
+This is also the cross-device story for the sequence-sharded KV cache of
+long_500k: each device computes its local (m, l, acc) and the merge is an
+all-gather of 2+d scalars per head — identical math to the in-kernel
+split merge (see launch/sharding.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = float("-inf")
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, m_ref, l_ref, acc_ref,
+            *, scale: float, bs: int):
+    j = pl.program_id(2)                                  # split index
+    q = q_ref[...].reshape(1, -1).astype(jnp.float32) * scale   # (1, d)
+    k = k_ref[0, 0].astype(jnp.float32)                   # (bs, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (1, bs)
+    cache_len = len_ref[0]
+    cols = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    s = jnp.where(cols < cache_len, s, _NEG_INF)
+
+    m = jnp.max(s)
+    m_safe = jnp.where(jnp.isneginf(m), 0.0, m)
+    p = jnp.where(jnp.isneginf(s), 0.0, jnp.exp(s - m_safe))   # (1, bs)
+    l = jnp.sum(p)
+    acc = jax.lax.dot_general(p, v_ref[0, 0].astype(jnp.float32),
+                              (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (1, d)
+    m_ref[0, 0, 0] = m
+    l_ref[0, 0, 0] = l
+    acc_ref[0, 0, 0] = acc[0]
+
+
+def flash_decode_partials(q, k_cache, v_cache, cache_len, *, scale: float,
+                          bs: int = 512, interpret: bool = False):
+    """q: (B, H, D); caches: (B, KV, S, D); cache_len: (1,) int32.
+    Returns per-split partials m, l: (B, H, nsplits), acc: (B, H, nsplits, D).
+    """
+    b, h, d = q.shape
+    kv, s_len = k_cache.shape[1], k_cache.shape[2]
+    assert s_len % bs == 0
+    group = h // kv
+    nsplits = s_len // bs
+    kern = functools.partial(_kernel, scale=scale, bs=bs)
+    grid = (b, h, nsplits)
+    m, l, acc = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda b_, h_, j: (b_, h_, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda b_, h_, j: (b_, h_ // group, j, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda b_, h_, j: (b_, h_ // group, j, 0)),
+            pl.BlockSpec((1,), lambda b_, h_, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1), lambda b_, h_, j: (b_, h_, j)),
+            pl.BlockSpec((1, 1, 1), lambda b_, h_, j: (b_, h_, j)),
+            pl.BlockSpec((1, 1, 1, d), lambda b_, h_, j: (b_, h_, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, nsplits), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, nsplits), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, nsplits, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, cache_len)
+    return m, l, acc
+
+
+def merge_partials(m, l, acc):
+    """Numerically-stable merge of split-softmax partials.
+    m, l: (..., nsplits); acc: (..., nsplits, D) -> (..., D)."""
+    m_glob = jnp.max(m, axis=-1, keepdims=True)
+    m_safe = jnp.where(jnp.isneginf(m_glob), 0.0, m_glob)
+    w = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_safe))
+    # per-split acc is the UNNORMALIZED p@v, so rescale by w and divide by
+    # the merged denominator sum_s w_s * l_s
+    l_glob = jnp.sum(w * l, axis=-1)                      # (...,)
+    num = jnp.einsum("...s,...sd->...d", w, acc)
+    den = jnp.where(l_glob == 0.0, 1.0, l_glob)
+    return num / den[..., None]

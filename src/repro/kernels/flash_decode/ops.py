@@ -1,0 +1,36 @@
+"""jit'd wrapper for split-K decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import kernel_mode
+from .flash_decode import flash_decode_partials, merge_partials
+from .ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "mode"))
+def _decode_jit(q, k_cache, v_cache, cache_len, bs: int, mode: str):
+    if mode == "ref":
+        return decode_attention_ref(
+            q, k_cache, v_cache,
+            cache_len=jnp.broadcast_to(cache_len, (q.shape[0],)))
+    d = q.shape[-1]
+    m, l, acc = flash_decode_partials(
+        q, k_cache, v_cache, cache_len, scale=d ** -0.5, bs=bs,
+        interpret=(mode == "interpret"))
+    return merge_partials(m, l, acc).astype(q.dtype)
+
+
+def flash_decode(q, k_cache, v_cache, cache_len=None, bs: int = 512,
+                 mode: str | None = None):
+    """Single-token decode attention. q: (B, H, D); caches: (B, KV, S, D);
+    cache_len: int or (1,) — valid cache prefix. Returns (B, H, D)."""
+    s = k_cache.shape[2]
+    if cache_len is None:
+        cache_len = s
+    cache_len = jnp.asarray(cache_len, jnp.int32).reshape(1)
+    bs = min(bs, s)
+    return _decode_jit(q, k_cache, v_cache, cache_len, bs, kernel_mode(mode))

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache.
+
+GQA-NATIVE: query heads are grouped per kv head and contracted with an
+einsum that keeps the kv-head dim intact — `jnp.repeat`ing the cache to
+H heads lowers to a broadcast that forces GSPMD to RESHARD (= all-gather)
+a sequence- or head-sharded cache: 4.3 GB of involuntary all-gather per
+two layers at mistral-nemo decode_32k scale (EXPERIMENTS.md §Perf decode
+iteration 1). The grouped form keeps every cache shard local and reduces
+only the (B, H, D) output (psum of ~2 MB).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len=None,
+                         scale: float | None = None):
+    """q: (B, H, D) one new token; k_cache/v_cache: (B, KV, S, D);
+    cache_len: (B,) int32 valid prefix length (None = full). Returns
+    (B, H, D)."""
+    b, h, d = q.shape
+    kv, s = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    scale = scale if scale is not None else d ** -0.5
+    qg = (q.astype(jnp.float32) * scale).reshape(b, kv, g, d)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    logits = jnp.einsum("bkgd,bksd->bkgs", qg, kf)
+    if cache_len is not None:
+        mask = jnp.arange(s)[None, None, None, :] < \
+            cache_len[:, None, None, None]
+        logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jnp.exp(logits - logits.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    out = jnp.einsum("bkgs,bksd->bkgd", probs, vf)
+    return out.reshape(b, h, d).astype(q.dtype)

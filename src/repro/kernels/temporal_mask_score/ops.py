@@ -1,0 +1,66 @@
+"""jit'd wrapper for the temporal validity-masked top-k kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..common import kernel_mode, le_i64, lt_i64, pad_to, split_i64
+from .ref import temporal_topk_ref
+from .temporal_mask_score import temporal_block_candidates
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bn", "mode"))
+def _temporal_topk_jit(q, corpus, vf_hi, vf_lo, vt_hi, vt_lo, ts_pair,
+                       k: int, bn: int, mode: str):
+    if mode == "ref_jnp":
+        # jnp variant of the oracle (used on-device; exact via split i64)
+        ts_hi, ts_lo = ts_pair[0], ts_pair[1].astype(jnp.uint32)
+        valid = le_i64(vf_hi, vf_lo.astype(jnp.uint32), ts_hi, ts_lo) & \
+            lt_i64(ts_hi, ts_lo, vt_hi, vt_lo.astype(jnp.uint32))
+        scores = jnp.dot(q, corpus.T)
+        scores = jnp.where(valid[None, :], scores, -jnp.inf)
+        top_s, top_i = jax.lax.top_k(scores, k)
+        return top_s, top_i.astype(jnp.int32)
+    corpus_p, _ = pad_to(corpus, 0, bn)
+    pad = lambda a, v: pad_to(a, 0, bn, value=v)[0]
+    # padded rows: empty validity interval (vf=max, vt=0) => always invalid
+    vf_hi_p, vf_lo_p = pad(vf_hi, np.int32(0x7FFFFFFF)), pad(vf_lo, -1)
+    vt_hi_p, vt_lo_p = pad(vt_hi, 0), pad(vt_lo, 0)
+    s_blk, i_blk = temporal_block_candidates(
+        q, corpus_p, vf_hi_p, vf_lo_p, vt_hi_p, vt_lo_p, ts_pair, k, bn=bn,
+        interpret=(mode == "interpret"))
+    nb = s_blk.shape[0]
+    s_all = jnp.transpose(s_blk, (1, 0, 2)).reshape(q.shape[0], nb * k)
+    i_all = jnp.transpose(i_blk, (1, 0, 2)).reshape(q.shape[0], nb * k)
+    top_s, pos = jax.lax.top_k(s_all, k)
+    top_i = jnp.take_along_axis(i_all, pos, axis=1)
+    return top_s, top_i
+
+
+def temporal_topk(q, corpus, valid_from, valid_to, ts: int, k: int,
+                  bn: int = 512, mode: str | None = None):
+    """Temporal query scoring: filter-before-rank fused top-k.
+
+    q: (Q, D); corpus: (N, D); valid_from/valid_to: (N,) int64 host arrays;
+    ts: int64 scalar. Returns (scores (Q, k), idx (Q, k)).
+    """
+    mode = kernel_mode(mode)
+    q = np.atleast_2d(np.asarray(q, np.float32))
+    k = int(min(k, corpus.shape[0]))
+    if mode == "ref":
+        return temporal_topk_ref(q, corpus, valid_from, valid_to, ts, k)
+    vf_hi, vf_lo = split_i64(valid_from)
+    vt_hi, vt_lo = split_i64(valid_to)
+    ts_hi, ts_lo = split_i64(np.array([ts]))
+    # int32 carrier for the (hi, lo) pair (uint32 bits preserved)
+    ts_pair = jnp.array([int(ts_hi[0]), int(np.int32(ts_lo.view(np.int32)[0]))],
+                        jnp.int32)
+    bn = int(min(bn, max(128, corpus.shape[0])))
+    return _temporal_topk_jit(
+        jnp.asarray(q), jnp.asarray(corpus, jnp.float32),
+        jnp.asarray(vf_hi), jnp.asarray(vf_lo.view(np.int32)),
+        jnp.asarray(vt_hi), jnp.asarray(vt_lo.view(np.int32)),
+        ts_pair, k, bn, mode)

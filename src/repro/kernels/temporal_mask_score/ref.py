@@ -1,0 +1,25 @@
+"""Pure oracle for validity-masked temporal scoring.
+
+numpy int64 end-to-end (host path): the validity test is exact at
+microsecond resolution.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def temporal_topk_ref(q: np.ndarray, corpus: np.ndarray,
+                      valid_from: np.ndarray, valid_to: np.ndarray,
+                      ts: int, k: int) -> tuple[np.ndarray, np.ndarray]:
+    """q: (Q, D), corpus: (N, D), valid_from/valid_to: (N,) int64, ts:
+    int64 scalar. Validity filter applied BEFORE ranking (leakage guard)."""
+    q = np.asarray(q, np.float32)
+    corpus = np.asarray(corpus, np.float32)
+    valid = (np.asarray(valid_from, np.int64) <= ts) & \
+            (ts < np.asarray(valid_to, np.int64))
+    scores = q @ corpus.T
+    scores = np.where(valid[None, :], scores, -np.inf)
+    k = min(k, corpus.shape[0])
+    idx = np.argsort(-scores, axis=1, kind="stable")[:, :k]
+    top = np.take_along_axis(scores, idx, axis=1)
+    return top.astype(np.float32), idx.astype(np.int32)

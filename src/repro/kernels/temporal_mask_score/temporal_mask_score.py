@@ -1,0 +1,86 @@
+"""Validity-masked scoring + streaming top-k Pallas kernel (cold-tier
+temporal query path; paper §III-D3 enforced AT KERNEL LEVEL).
+
+Identical streaming structure to kernels/topk_search, but the active mask
+is replaced by the temporal validity interval test
+
+    valid_from <= ts < valid_to
+
+evaluated INSIDE the kernel, before any score can enter the top-k
+selection — an invalid (future/superseded/deleted) chunk is -inf before
+ranking, so temporal leakage is impossible by construction even when the
+full version history is device-resident.
+
+Timestamps are int64 on the host; TPUs are 32-bit machines, so validity
+columns arrive as split (hi: int32, lo: uint32) pairs and the interval
+test is a lexicographic compare — exact at microsecond resolution (see
+kernels/common.split_i64).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import le_i64, lt_i64
+
+
+def _kernel(q_ref, c_ref, vf_hi_ref, vf_lo_ref, vt_hi_ref, vt_lo_ref,
+            ts_ref, out_s_ref, out_i_ref, *, k: int, bn: int):
+    j = pl.program_id(0)
+    scores = jax.lax.dot_general(
+        q_ref[...], c_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (Q, bn)
+
+    ts_hi, ts_lo = ts_ref[0], ts_ref[1]                  # split int64 scalar
+    ts_lo = ts_lo.astype(jnp.uint32)
+    vf_hi, vf_lo = vf_hi_ref[...], vf_lo_ref[...].astype(jnp.uint32)
+    vt_hi, vt_lo = vt_hi_ref[...], vt_lo_ref[...].astype(jnp.uint32)
+    # THE temporal-leakage guard: valid_from <= ts < valid_to, pre-ranking
+    valid = le_i64(vf_hi, vf_lo, ts_hi, ts_lo) & lt_i64(ts_hi, ts_lo,
+                                                        vt_hi, vt_lo)
+    scores = jnp.where(valid[None, :], scores, -jnp.inf)
+
+    idx_base = (j * bn).astype(jnp.int32)
+    cols = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+
+    def body(t, s):
+        best = jnp.max(s, axis=1)
+        arg = jnp.argmax(s, axis=1).astype(jnp.int32)
+        pl.store(out_s_ref, (0, slice(None), pl.dslice(t, 1)), best[:, None])
+        pl.store(out_i_ref, (0, slice(None), pl.dslice(t, 1)),
+                 (arg + idx_base)[:, None])
+        return jnp.where(cols == arg[:, None], -jnp.inf, s)
+
+    jax.lax.fori_loop(0, k, body, scores)
+
+
+def temporal_block_candidates(q, corpus, vf_hi, vf_lo, vt_hi, vt_lo, ts_pair,
+                              k: int, bn: int = 512, interpret: bool = False):
+    n, d = corpus.shape
+    nq = q.shape[0]
+    assert n % bn == 0
+    kern = functools.partial(_kernel, k=k, bn=bn)
+    blk1 = lambda j: (j,)
+    return pl.pallas_call(
+        kern,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((nq, d), lambda j: (0, 0)),
+            pl.BlockSpec((bn, d), lambda j: (j, 0)),
+            pl.BlockSpec((bn,), blk1), pl.BlockSpec((bn,), blk1),
+            pl.BlockSpec((bn,), blk1), pl.BlockSpec((bn,), blk1),
+            pl.BlockSpec((2,), lambda j: (0,)),          # ts (hi, lo)
+        ],
+        out_specs=[
+            pl.BlockSpec((1, nq, k), lambda j: (j, 0, 0)),
+            pl.BlockSpec((1, nq, k), lambda j: (j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n // bn, nq, k), jnp.float32),
+            jax.ShapeDtypeStruct((n // bn, nq, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, corpus, vf_hi, vf_lo, vt_hi, vt_lo, ts_pair)

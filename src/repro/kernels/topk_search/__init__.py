@@ -1,0 +1,1 @@
+from .ops import topk_search  # noqa: F401

@@ -1,0 +1,44 @@
+"""jit'd wrapper for the fused top-k search kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import kernel_mode, pad_to
+from .ref import topk_search_ref
+from .topk_search import topk_block_candidates
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bn", "mode"))
+def _topk_search_jit(q, corpus, mask, k: int, bn: int, mode: str):
+    if mode == "ref":
+        return topk_search_ref(q, corpus, mask, k)
+    corpus_p, n = pad_to(corpus, 0, bn)
+    mask_p, _ = pad_to(mask, 0, bn, value=False)
+    s_blk, i_blk = topk_block_candidates(
+        q, corpus_p, mask_p, k, bn=bn, interpret=(mode == "interpret"))
+    # global merge: (nblocks, Q, k) -> (Q, nblocks*k) -> top-k
+    nb = s_blk.shape[0]
+    s_all = jnp.transpose(s_blk, (1, 0, 2)).reshape(q.shape[0], nb * k)
+    i_all = jnp.transpose(i_blk, (1, 0, 2)).reshape(q.shape[0], nb * k)
+    top_s, pos = jax.lax.top_k(s_all, k)
+    top_i = jnp.take_along_axis(i_all, pos, axis=1)
+    return top_s, top_i
+
+
+def topk_search(q, corpus, mask, k: int, bn: int = 512,
+                mode: str | None = None):
+    """Masked exact top-k similarity search.
+
+    q: (Q, D) or (D,); corpus: (N, D); mask: (N,) bool. Returns
+    (scores (Q, k), idx (Q, k)). Rows with mask=False can never appear
+    unless fewer than k rows are active (callers drop -inf entries).
+    """
+    q = jnp.atleast_2d(jnp.asarray(q, jnp.float32))
+    corpus = jnp.asarray(corpus, jnp.float32)
+    mask = jnp.asarray(mask, bool)
+    k = int(min(k, corpus.shape[0]))
+    bn = int(min(bn, max(128, corpus.shape[0])))
+    return _topk_search_jit(q, corpus, mask, k, bn, kernel_mode(mode))

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused masked top-k similarity search."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_search_ref(q: jax.Array, corpus: jax.Array, mask: jax.Array,
+                    k: int) -> tuple[jax.Array, jax.Array]:
+    """q: (Q, D), corpus: (N, D), mask: (N,) bool. Returns
+    (scores (Q, k) f32 desc, idx (Q, k) i32). Masked rows score -inf."""
+    scores = jnp.dot(q.astype(jnp.float32), corpus.astype(jnp.float32).T)
+    scores = jnp.where(mask[None, :], scores, -jnp.inf)
+    top_s, top_i = jax.lax.top_k(scores, k)
+    return top_s, top_i.astype(jnp.int32)

@@ -1,0 +1,78 @@
+"""Fused similarity-scoring + streaming top-k Pallas kernel (hot-tier
+query hot path; DESIGN.md §2).
+
+The (Q, N) score matrix is NEVER materialized in HBM: corpus blocks of
+``bn`` rows stream through VMEM; each grid step computes Q x bn scores on
+the MXU, masks inactive slots, and reduces them to a per-block top-k via k
+iterative max/argmax passes (VPU reductions — k is small and static).
+Per-block candidates land in a (nblocks, Q, k) output; the cheap global
+merge over nblocks*k candidates happens in the jit'd wrapper (ops.py).
+
+VMEM working set per step: Q*D (queries, resident) + bn*D (corpus block)
++ Q*bn (scores) floats. Defaults (Q<=256, D=384, bn=512) ~= 1.7 MB — far
+inside the ~16 MB/core VMEM budget; dims padded to multiples of 128 for
+MXU alignment by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, c_ref, mask_ref, out_s_ref, out_i_ref, *, k: int, bn: int):
+    j = pl.program_id(0)
+    q = q_ref[...]                       # (Q, D)
+    c = c_ref[...]                       # (bn, D)
+    scores = jax.lax.dot_general(
+        q, c, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (Q, bn)
+    active = mask_ref[...]                               # (bn,) bool
+    scores = jnp.where(active[None, :], scores, -jnp.inf)
+
+    idx_base = (j * bn).astype(jnp.int32)
+    cols = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+
+    # streaming top-k: k max/argmax passes (VPU reductions), rolled into a
+    # fori_loop so the lowered graph stays O(1) in k
+    def body(t, s):
+        best = jnp.max(s, axis=1)
+        arg = jnp.argmax(s, axis=1).astype(jnp.int32)
+        pl.store(out_s_ref, (0, slice(None), pl.dslice(t, 1)), best[:, None])
+        pl.store(out_i_ref, (0, slice(None), pl.dslice(t, 1)),
+                 (arg + idx_base)[:, None])
+        return jnp.where(cols == arg[:, None], -jnp.inf, s)
+
+    jax.lax.fori_loop(0, k, body, scores)
+
+
+def topk_block_candidates(q: jax.Array, corpus: jax.Array, mask: jax.Array,
+                          k: int, bn: int = 512,
+                          interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Stage 1: per-corpus-block top-k. corpus (N, D) with N % bn == 0.
+    Returns (scores (nblocks, Q, k), idx (nblocks, Q, k))."""
+    n, d = corpus.shape
+    nq = q.shape[0]
+    assert n % bn == 0, (n, bn)
+    grid = (n // bn,)
+    kern = functools.partial(_kernel, k=k, bn=bn)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nq, d), lambda j: (0, 0)),     # queries: resident
+            pl.BlockSpec((bn, d), lambda j: (j, 0)),     # corpus block stream
+            pl.BlockSpec((bn,), lambda j: (j,)),         # active mask block
+        ],
+        out_specs=[
+            pl.BlockSpec((1, nq, k), lambda j: (j, 0, 0)),
+            pl.BlockSpec((1, nq, k), lambda j: (j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n // bn, nq, k), jnp.float32),
+            jax.ShapeDtypeStruct((n // bn, nq, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, corpus, mask)

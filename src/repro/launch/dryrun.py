@@ -1,0 +1,121 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape) cell: jax.jit(step).lower(specs)
+.compile() on the production mesh — 16x16=256 chips single-pod AND
+2x16x16=512 chips multi-pod. Records memory_analysis (proves it fits),
+cost_analysis (FLOPs/bytes for §Roofline), and the parsed collective
+schedule into a JSON results file consumed by benchmarks/roofline.py and
+EXPERIMENTS.md.
+
+NOTE the XLA_FLAGS line above MUST precede any jax import (device count
+locks at first init); this is why smoke tests / benches never import this
+module.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mistral-nemo-12b \
+      --shape train_4k [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] \
+      --out results/dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool = False,
+             collectives: bool = True) -> dict:
+    import jax  # noqa: deferred so XLA_FLAGS applies
+    from .hlo_analysis import collective_stats, cost_summary
+    from .mesh import make_production_mesh
+    from .steps import build_cell
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = 512 if multi_pod else 256
+    t0 = time.time()
+    bundle = build_cell(arch, shape, reduced=False)
+    lowered = bundle.lower(mesh)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    rec = {
+        "arch": arch, "shape": shape, "kind": bundle.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "optimizer": bundle.optimizer,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "status": "ok",
+    }
+    rec.update(cost_summary(compiled))
+    if collectives:
+        rec["collectives"] = collective_stats(compiled.as_text())
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    from ..configs import all_cells
+
+    if args.all:
+        cells = [(c.arch, c.shape) for c in all_cells()
+                 if c.arch != "minilm-embedder"]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+            if r.get("status") == "ok"}
+
+    for multi_pod in meshes:
+        mesh_name = "2x16x16" if multi_pod else "16x16"
+        for arch, shape in cells:
+            if args.skip_existing and (arch, shape, mesh_name) in done:
+                print(f"[skip] {arch}/{shape} @ {mesh_name}")
+                continue
+            print(f"[dryrun] {arch}/{shape} @ {mesh_name} ...", flush=True)
+            try:
+                rec = run_cell(arch, shape, multi_pod)
+                print(f"  ok: compile={rec['compile_s']}s "
+                      f"arg={rec['argument_bytes']/1e9:.2f}GB "
+                      f"temp={rec['temp_bytes']/1e9:.2f}GB "
+                      f"flops/dev={rec['flops']:.3e} "
+                      f"coll={rec['collectives']['total_bytes']/1e6:.1f}MB",
+                      flush=True)
+            except Exception as e:  # noqa: record failures, keep going
+                rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                       "status": "fail", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+                print(f"  FAIL: {rec['error'][:200]}", flush=True)
+            results = [r for r in results
+                       if not (r["arch"] == arch and r["shape"] == shape
+                               and r.get("mesh") == rec.get("mesh"))]
+            results.append(rec)
+            if args.out:
+                os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+
+    n_ok = sum(1 for r in results if r.get("status") == "ok")
+    print(f"\n{n_ok}/{len(results)} cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Post-SPMD HLO analysis: collective-byte accounting for the roofline.
+
+``compiled.as_text()`` (after GSPMD partitioning) lists per-device ops;
+cost_analysis() does NOT expose collective bytes, so we parse the module:
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute contributes its RESULT-shape bytes (per device).
+
+Caveats handled:
+  - async pairs (x-start / x-done): the -start is counted, -done skipped;
+  - tuple-shaped results: all elements summed;
+  - while (scan) bodies appear ONCE in the text: the caller corrects by
+    trip count via unrolled probe compiles (benchmarks/roofline.py) —
+    raw numbers here are documented as loop-body-once.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_LINE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_DONE_LINE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"-done\(")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        return max(int(m.group(2)), 1)     # [n_groups, group_size]<=[N]
+    m = _GROUPS_LIST.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 2                                # collective-permute etc.
+
+
+def _wire_bytes(op: str, result_bytes: int, g: int) -> float:
+    """Per-device ICI wire-byte estimate from the RESULT shape and group
+    size g (ring algorithms):
+      all-gather:     result = full gathered tensor -> (g-1)/g * result
+      all-reduce:     in == out -> ring sends 2*(g-1)/g * result
+      reduce-scatter: result = the shard -> each device moves (g-1)*shard
+      all-to-all:     (g-1)/g * result
+      collective-permute: result (one hop)
+    """
+    if g <= 1:
+        return 0.0
+    if op == "all-gather":
+        return result_bytes * (g - 1) / g
+    if op == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / g
+    if op == "reduce-scatter":
+        return float(result_bytes) * (g - 1)
+    if op == "all-to-all":
+        return result_bytes * (g - 1) / g
+    return float(result_bytes)              # collective-permute
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-op-kind byte/count tallies from an HLO module dump.
+    Returns {op: {bytes, wire_bytes, count}, total_bytes, total_wire_bytes}.
+    ``bytes`` = result-shape bytes (per device); ``wire_bytes`` = ring-
+    algorithm ICI traffic estimate per device."""
+    stats: dict = {op: {"bytes": 0, "wire_bytes": 0.0, "count": 0}
+                   for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        if _DONE_LINE.search(line):
+            continue
+        m = _OP_LINE.search(line)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        b = _shape_bytes(type_str)
+        g = _group_size(line)
+        stats[op]["bytes"] += b
+        stats[op]["wire_bytes"] += _wire_bytes(op, b, g)
+        stats[op]["count"] += 1
+    stats["total_bytes"] = sum(stats[op]["bytes"] for op in COLLECTIVE_OPS)
+    stats["total_wire_bytes"] = sum(stats[op]["wire_bytes"]
+                                    for op in COLLECTIVE_OPS)
+    return stats
+
+
+def cost_summary(compiled, per_device: bool = True) -> dict:
+    """Uniform view over compiled.cost_analysis() + memory_analysis()."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, list):           # older API returned [dict]
+        ca = ca[0] if ca else {}
+    ma = compiled.memory_analysis()
+    out = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+        "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+        "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+        "peak_bytes": int(getattr(ma, "temp_size_in_bytes", 0))
+        + int(getattr(ma, "argument_size_in_bytes", 0))
+        + int(getattr(ma, "output_size_in_bytes", 0)),
+    }
+    return out

@@ -1,0 +1,276 @@
+"""Sharding rules: map every cell's pytrees onto the production mesh.
+
+Scheme (DESIGN.md §3):
+  LM train:   DP over ('pod','data') for the batch; Megatron TP over
+              'model' (fused head*dh dim of QKV, d_ff, vocab); MoE expert
+              dim over 'model' (expert parallelism) with the capacity dim
+              over 'data'; ZeRO-1: optimizer state additionally sharded
+              over the DP axes on the largest divisible dim.
+  LM decode:  KV cache batch over DP, kv-heads over 'model' when
+              divisible, else the SEQUENCE over 'model' (kv<16 archs);
+              long_500k shards the 512k sequence over 'data' (split-
+              softmax merge is XLA's all-reduce over the contracted dim).
+  GNN:        edges sharded over every axis (scatter-reduce =
+              data-parallel segment_sum + psum); node arrays replicated
+              (d_hidden=64 is small).
+  RecSys:     embedding tables row-sharded over 'model'; batch over DP;
+              candidate matrices row-sharded over ALL axes.
+
+Every rule is divisibility-sanitized: an axis that does not divide the
+dim is dropped (replicated) rather than relying on GSPMD padding —
+except the fused-projection dims where padding is explicit and verified.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import dp_axes
+
+
+def _size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize(spec: P, shape: tuple, mesh) -> P:
+    """Drop spec axes that don't evenly divide the dim (replicate)."""
+    out = []
+    for i, axes in enumerate(spec):
+        if axes is None or i >= len(shape):
+            out.append(None)
+            continue
+        if shape[i] % _size(mesh, axes) == 0:
+            out.append(axes)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def named(mesh, spec: P, shape: Optional[tuple] = None) -> NamedSharding:
+    if shape is not None:
+        spec = sanitize(spec, shape, mesh)
+    return NamedSharding(mesh, spec)
+
+
+def tree_named(mesh, spec_tree, shape_tree) -> Any:
+    return jax.tree.map(
+        lambda sp, sh: named(mesh, sp, tuple(sh.shape)),
+        spec_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# LM params
+# ---------------------------------------------------------------------------
+def lm_param_specs(params_shape, mesh) -> Any:
+    """PartitionSpec tree mirroring the param tree. Layer-stacked params
+    carry a leading L dim (unsharded; scan iterates it)."""
+
+    def rule(path, leaf):
+        p = jax.tree_util.keystr(path)
+        nd = len(leaf.shape)
+        if "embed" in p:
+            return P("model", None)                    # vocab-sharded
+        if "lm_head" in p:
+            return P(None, "model")
+        if "'attn'" in p:
+            if p.endswith("['wo']"):                   # (L, H*dh, D)
+                return P(None, "model", None)
+            if nd == 3:                                # wq/wk/wv (L, D, E)
+                return P(None, None, "model")
+            if nd == 2:                                # biases (L, E)
+                return P(None, "model")
+        if "moe" in p:
+            if "router" in p:                          # (L, D, E)
+                return P(None, None, None)
+            if "shared_w_in" in p:                     # (L, D, Fs)
+                return P(None, None, "model")
+            if "shared_w_out" in p:                    # (L, Fs, D)
+                return P(None, "model", None)
+            if "w_in" in p:                            # (L, E, D, F)
+                # 2D expert sharding: experts over 'model' (EP) AND the
+                # per-expert d_model dim over 'data' — a 1T-param MoE is
+                # 2TB bf16; EP x 16 alone leaves 130GB/chip, EP x TP
+                # brings it to ~8GB/chip (DESIGN.md §6)
+                return P(None, "model", "data", None)
+            if "w_out" in p:                           # (L, E, F, D)
+                return P(None, "model", "data", None)
+        if "mlp" in p:
+            if "win" in p:                             # (L, D, F*)
+                return P(None, None, "model")
+            if "wout" in p:                            # (L, F, D)
+                return P(None, "model", None)
+        return P(*([None] * nd))                       # norms etc.
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: sanitize(rule(path, leaf), tuple(leaf.shape),
+                                    mesh),
+        params_shape)
+
+
+def zero1_opt_specs(param_specs, opt_shape, mesh) -> Any:
+    """Optimizer-state specs: mirror the param spec where shapes match
+    (adam m/v), and additionally shard the largest free dim over the DP
+    axes (ZeRO-1). Adafactor r/c (reduced shapes) get a shape-driven
+    variant of the same rule."""
+    dp = dp_axes(mesh)
+    dp_n = _size(mesh, dp)
+
+    def per_state(path, leaf):
+        p_str = jax.tree_util.keystr(path)
+        shape = tuple(leaf.shape)
+        # find the param spec whose path prefixes this state leaf
+        spec = _lookup_param_spec(param_specs, p_str)
+        if spec is not None and len(spec) == len(shape):
+            base = list(sanitize(spec, shape, mesh))
+        else:
+            base = [None] * len(shape)
+        # ZeRO-1: add DP on the largest unsharded divisible dim — unless
+        # a DP axis is already consumed by the param sharding (2D-sharded
+        # MoE expert weights use 'data' for the expert d_model dim)
+        used = set()
+        for axes in base:
+            if axes is None:
+                continue
+            used.update(axes if isinstance(axes, tuple) else (axes,))
+        free_dp = tuple(a for a in dp if a not in used)
+        free_n = _size(mesh, free_dp)
+        best, best_dim = -1, -1
+        for i, (axes, dim) in enumerate(zip(base, shape)):
+            if axes is None and free_dp and dim % free_n == 0 \
+                    and dim > best:
+                best, best_dim = dim, i
+        if best_dim >= 0:
+            base[best_dim] = free_dp if len(free_dp) > 1 else free_dp[0]
+        return P(*base)
+
+    return jax.tree_util.tree_map_with_path(per_state, opt_shape)
+
+
+def _lookup_param_spec(param_specs, state_path: str) -> Optional[P]:
+    """Match a state path like "['m']['layers']['attn']['wq']" (or
+    "['layers']...['r']") to its param spec by stripping state-level
+    keys."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        param_specs, is_leaf=lambda x: isinstance(x, P))
+    for path, spec in flat:
+        pstr = jax.tree_util.keystr(path)
+        core = pstr.replace("['m']", "").replace("['v']", "")
+        s_core = state_path
+        for k in ("['m']", "['v']", "['r']", "['c']"):
+            s_core = s_core.replace(k, "")
+        if core == s_core or pstr == s_core:
+            return spec
+    return None
+
+
+# ---------------------------------------------------------------------------
+# LM batch / cache
+# ---------------------------------------------------------------------------
+def lm_batch_specs(input_specs: dict, mesh, cfg, shape_kind: str,
+                   long_context: bool = False) -> dict:
+    dp = dp_axes(mesh)
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    out = {}
+    for name, s in input_specs.items():
+        shape = tuple(s.shape)
+        if name in ("tokens", "labels"):
+            out[name] = P(dp_spec, *([None] * (len(shape) - 1)))
+        elif name in ("cache_k", "cache_v"):
+            # (L, B, KV, S, Dh)
+            kv_div = shape[2] % mesh.shape["model"] == 0
+            if long_context:
+                # batch=1: shard the SEQUENCE over data; kv over model
+                out[name] = P(None, None, "model" if kv_div else None,
+                              dp_spec, None)
+            elif kv_div:
+                out[name] = P(None, dp_spec, "model", None, None)
+            else:
+                # kv heads don't divide: shard sequence over model
+                out[name] = P(None, dp_spec, None, "model", None)
+        elif name == "cache_len":
+            out[name] = P()
+        else:
+            out[name] = P(*([None] * len(shape)))
+    return {k: sanitize(v, tuple(input_specs[k].shape), mesh)
+            for k, v in out.items()}
+
+
+# ---------------------------------------------------------------------------
+# GNN
+# ---------------------------------------------------------------------------
+def gnn_param_specs(params_shape, mesh) -> Any:
+    # d_hidden=64: everything replicated (node arrays are the big ones and
+    # they are activations, not params)
+    return jax.tree.map(lambda l: P(*([None] * len(l.shape))), params_shape)
+
+
+def gnn_batch_specs(input_specs: dict, mesh) -> dict:
+    every = tuple(mesh.axis_names)
+    out = {}
+    for name, s in input_specs.items():
+        shape = tuple(s.shape)
+        if name == "edge_index":                     # (2, E)
+            out[name] = P(None, every)
+        elif name == "edge_dist":                    # (E,)
+            out[name] = P(every)
+        elif name == "node_feat":                    # (N, F): rows over DP
+            out[name] = P(dp_axes(mesh), None)
+        elif name in ("atom_z", "labels", "graph_ids"):
+            out[name] = P(dp_axes(mesh))
+        else:
+            out[name] = P(*([None] * len(shape)))
+    return {k: sanitize(v, tuple(input_specs[k].shape), mesh)
+            for k, v in out.items()}
+
+
+# ---------------------------------------------------------------------------
+# RecSys
+# ---------------------------------------------------------------------------
+def recsys_param_specs(params_shape, mesh) -> Any:
+    def rule(path, leaf):
+        p = jax.tree_util.keystr(path)
+        nd = len(leaf.shape)
+        big = leaf.shape[0] >= 4096 if nd >= 1 else False
+        if ("table" in p or "'v'" in p or "'w'" in p or "embed" in p or
+                "wide_w" in p) and nd >= 1 and big:
+            return P("model", *([None] * (nd - 1)))  # row-sharded table
+        if nd == 2 and min(leaf.shape) >= 256:
+            return P(None, "model")                  # big MLP weights: TP
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: sanitize(rule(path, leaf), tuple(leaf.shape),
+                                    mesh),
+        params_shape)
+
+
+def recsys_batch_specs(input_specs: dict, mesh) -> dict:
+    dp = dp_axes(mesh)
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    every = tuple(mesh.axis_names)
+    out = {}
+    skip_sanitize = set()
+    for name, s in input_specs.items():
+        shape = tuple(s.shape)
+        if name == "candidates":                     # (N_pad, d): everywhere
+            out[name] = P(every, None)
+        elif name == "candidate_mask":
+            out[name] = P(every)
+        elif name == "query":
+            out[name] = P(*([None] * len(shape)))
+        else:                                        # batch-leading arrays
+            out[name] = P(dp_spec, *([None] * (len(shape) - 1)))
+    return {k: (v if k in skip_sanitize
+                else sanitize(v, tuple(input_specs[k].shape), mesh))
+            for k, v in out.items()}

@@ -1,0 +1,49 @@
+"""TransformerEmbedder: MiniLM-class JAX encoder (paper §III-B uses
+all-MiniLM-L6-v2: 6 layers, d=384, 12 heads, mean pooling, 384-d output).
+
+Shares the LM layer stack (models/transformer with causal=False) — the
+embedding layer of LiveVectorLake is literally a small instance of the
+same model substrate that the big assigned LM archs use, so every
+distribution feature (sharded batch encode, checkpointing) applies to the
+embedder for free.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data.tokenizer import HashTokenizer
+from .transformer import TransformerConfig, forward_pooled, init_params
+
+MINILM_CONFIG = TransformerConfig(
+    name="minilm-embedder", vocab=30_522, d_model=384, n_layers=6,
+    n_heads=12, n_kv=12, d_head=32, d_ff=1536, act="gelu", causal=False,
+    rope_theta=10_000.0, remat=False)
+
+
+class TransformerEmbedder:
+    """Batched text -> 384-d unit vectors. Satisfies core.embedder.Embedder."""
+
+    def __init__(self, cfg: TransformerConfig = MINILM_CONFIG,
+                 max_len: int = 128, seed: int = 0, params=None):
+        self.cfg = cfg
+        self.dim = cfg.d_model
+        self.max_len = max_len
+        self.tokenizer = HashTokenizer(cfg.vocab)
+        self.params = params if params is not None else init_params(
+            jax.random.PRNGKey(seed), cfg)
+        self._encode = jax.jit(
+            lambda p, toks: forward_pooled(p, toks, cfg))
+
+    def embed(self, texts: Sequence[str], batch_size: int = 32) -> np.ndarray:
+        out = []
+        for i in range(0, len(texts), batch_size):
+            chunk = list(texts[i: i + batch_size])
+            toks = self.tokenizer.encode_batch(chunk, self.max_len)
+            out.append(np.asarray(self._encode(self.params,
+                                               jnp.asarray(toks))))
+        return np.concatenate(out, axis=0) if out else \
+            np.zeros((0, self.dim), np.float32)

@@ -1,0 +1,279 @@
+"""Shared NN layer library (pure JAX, dict pytrees — no flax).
+
+Conventions:
+  - params are nested dicts of jnp arrays; stacked (n_layers, ...) leading
+    dim for scan-over-layers.
+  - every initializer takes an explicit PRNGKey and dtype.
+  - attention uses the kernels/ package (flash on TPU, ref on CPU/dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm(x, gamma, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) \
+        * gamma
+
+
+def layernorm(x, gamma, beta, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma + beta
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+def rope_frequencies(d_head: int, theta: float = 10_000.0):
+    return theta ** (-jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head)
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, H, Dh); positions: (..., S) int32."""
+    d_head = x.shape[-1]
+    freqs = rope_frequencies(d_head, theta)                       # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs     # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]                           # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+def activation(name: str):
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "silu":
+        return jax.nn.silu
+    if name == "relu":
+        return jax.nn.relu
+    if name == "sq_relu":            # squared ReLU (Primer; Nemotron-4)
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name == "ssp":                # shifted softplus (SchNet)
+        return lambda x: jax.nn.softplus(x) - jnp.log(2.0)
+    raise ValueError(f"unknown activation {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA) block
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_head: int
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    causal: bool = True
+
+
+def attention_params(key, cfg: AttentionConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_head
+    p = {
+        "wq": dense_init(ks[0], d, h * dh, dtype),
+        "wk": dense_init(ks[1], d, kv * dh, dtype),
+        "wv": dense_init(ks[2], d, kv * dh, dtype),
+        "wo": dense_init(ks[3], h * dh, d, dtype, scale=(h * dh) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dtype)
+        p["bk"] = jnp.zeros((kv * dh,), dtype)
+        p["bv"] = jnp.zeros((kv * dh,), dtype)
+    return p
+
+
+def attention_qkv(p, x, cfg: AttentionConfig, positions):
+    """Project + rope. x: (B, S, D) -> q (B, H, S, Dh), k/v (B, KV, S, Dh)."""
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,de->bse", x, p["wq"])
+    k = jnp.einsum("bsd,de->bse", x, p["wk"])
+    v = jnp.einsum("bsd,de->bse", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = k.reshape(b, s, cfg.n_kv, cfg.d_head)
+    v = v.reshape(b, s, cfg.n_kv, cfg.d_head)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    # layout (B, H, S, Dh) for the attention kernels
+    return (jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+            jnp.swapaxes(v, 1, 2))
+
+
+def chunked_attention(q, k, v, causal: bool = True, chunk: int = 1024,
+                      scale: Optional[float] = None):
+    """Memory-efficient attention: lax.scan over KV chunks with an online
+    softmax carry (m, l, acc) — the flash recurrence expressed in pure jnp.
+
+    Never materializes the (Sq, Skv) logit matrix, is differentiable,
+    remat-friendly, and GSPMD-shardable — this is what the big-sequence
+    train/prefill graphs lower (the Pallas flash kernel is the TPU runtime
+    fast path with identical math; see kernels/flash_attention).
+
+    q: (B, H, Sq, Dh); k, v: (B, KV, Skv, Dh). Returns (B, H, Sq, Dh).
+    """
+    b, h, sq, dh = q.shape
+    kv, skv = k.shape[1], k.shape[2]
+    group = h // kv
+    scale = scale if scale is not None else dh ** -0.5
+    chunk = min(chunk, skv)
+    assert skv % chunk == 0, (skv, chunk)
+    nc = skv // chunk
+    q_off = skv - sq                      # causal: q rows are last sq pos
+
+    # GQA-native: group q heads per kv head — NEVER jnp.repeat the KV
+    # (the repeat broadcast forces GSPMD to reshard/all-gather sharded
+    # caches; see kernels/flash_decode/ref.py + EXPERIMENTS.md §Perf)
+    qf = (q.astype(jnp.float32) * scale).reshape(b, kv, group, sq, dh)
+    kc = k.reshape(b, kv, nc, chunk, dh).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, kv, nc, chunk, dh).transpose(2, 0, 1, 3, 4)
+
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        j, k_j, v_j = inp
+        k_j = k_j.astype(jnp.float32)          # (b, kv, chunk, dh)
+        v_j = v_j.astype(jnp.float32)
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", qf, k_j)
+        if causal:
+            rows = jnp.arange(sq)[:, None] + q_off
+            cols = j * chunk + jnp.arange(chunk)[None, :]
+            s = jnp.where((rows >= cols)[None, None, None], s, -jnp.inf)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.where(jnp.isneginf(s), 0.0, jnp.exp(s - m_safe[..., None]))
+        alpha = jnp.where(jnp.isneginf(m_prev), 0.0, jnp.exp(m_prev - m_safe))
+        l_new = alpha * l_prev + p.sum(-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bkgqc,bkcd->bkgqd",
+                                                      p, v_j)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, kv, group, sq), -jnp.inf, jnp.float32),
+            jnp.zeros((b, kv, group, sq), jnp.float32),
+            jnp.zeros((b, kv, group, sq, dh), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(step, init,
+                                  (jnp.arange(nc), kc, vc))
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    out = acc / l_safe[..., None]
+    return out.reshape(b, h, sq, dh).astype(q.dtype)
+
+
+def attention_impl(q, k, v, causal: bool, impl: Optional[str] = None):
+    """Select the attention execution path.
+
+    auto: Pallas flash kernel on TPU; chunked jnp scan when the kv length
+    is large (memory-bound graphs: train/prefill); plain ref otherwise.
+    """
+    import jax as _jax
+    impl = impl or "auto"
+    if impl == "auto":
+        if _jax.default_backend() == "tpu":
+            impl = "flash"
+        elif k.shape[2] > 2048:
+            impl = "chunked"
+        else:
+            impl = "ref"
+    if impl == "flash":
+        from ..kernels.flash_attention.ops import flash_attention
+        return flash_attention(q, k, v, causal=causal)
+    if impl == "chunked":
+        return chunked_attention(q, k, v, causal=causal)
+    from ..kernels.flash_attention.ref import attention_ref
+    return attention_ref(q, k, v, causal=causal)
+
+
+def attention_block(p, x, cfg: AttentionConfig, positions=None,
+                    impl: Optional[str] = None):
+    """Full self-attention over x (B, S, D) -> (B, S, D)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    q, k, v = attention_qkv(p, x, cfg, positions)
+    o = attention_impl(q, k, v, cfg.causal, impl)
+    o = jnp.swapaxes(o, 1, 2).reshape(b, s, cfg.n_heads * cfg.d_head)
+    return jnp.einsum("bse,ed->bsd", o, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# dense MLP block
+# ---------------------------------------------------------------------------
+def mlp_params(key, d_model: int, d_ff: int, act: str, dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key)
+    gated = act in ("swiglu", "geglu")
+    return {
+        "win": dense_init(k1, d_model, d_ff * (2 if gated else 1), dtype),
+        "wout": dense_init(k2, d_ff, d_model, dtype, scale=d_ff ** -0.5),
+    }
+
+
+def mlp_block(p, x, act: str):
+    h = jnp.einsum("bsd,df->bsf", x, p["win"])
+    if act in ("swiglu", "geglu"):
+        gate, up = jnp.split(h, 2, axis=-1)
+        inner = jax.nn.silu(gate) if act == "swiglu" else jax.nn.gelu(gate)
+        h = inner * up
+    else:
+        h = activation(act)(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["wout"])
+
+
+def grad_cast(x):
+    """Identity whose COTANGENT is cast to the primal dtype.
+
+    Backward passes of bf16 params pick up f32 cotangents from
+    downstream f32 ops (norms, CE); applied to each scanned layer's
+    param slice, this casts the cotangent BEFORE lax.scan stacks it —
+    the stacked gradient is bf16 instead of f32, halving ~35 GB/chip of
+    grad-stack temps for the 1T MoE (EXPERIMENTS.md §Perf G7)."""
+
+    @jax.custom_vjp
+    def f(y):
+        return y
+
+    def fwd(y):
+        return y, None
+
+    def bwd(_, g):
+        return (g.astype(x.dtype),)
+
+    f.defvjp(fwd, bwd)
+    return f(x)
+
+
+def cross_entropy_loss(logits, labels, ignore_id: int = -1):
+    """logits (B, S, V) f32/bf16; labels (B, S) int32. Mean NLL over
+    non-ignored positions."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

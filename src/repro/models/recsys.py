@@ -1,0 +1,327 @@
+"""RecSys model family: FM, DLRM, Wide&Deep, BERT4Rec.
+
+All four share the sparse substrate: huge row-sharded embedding tables +
+kernels/embedding_bag (gather + weighted segment reduce — JAX has no
+native EmbeddingBag; building it IS part of the system). The
+``retrieval_cand`` serving shape (1 query x 1e6 candidates) is scored by
+the SAME fused top-k kernel as the LiveVectorLake hot tier — the paper's
+search path and the recsys retrieval path are one substrate (DESIGN.md
+§Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+from .transformer import TransformerConfig
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+def mlp_params_list(key, dims: Sequence[int], dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, len(dims) - 1)
+    return {
+        f"w{i}": dense_init(ks[i], dims[i], dims[i + 1], dtype)
+        for i in range(len(dims) - 1)
+    } | {
+        f"b{i}": jnp.zeros((dims[i + 1],), dtype)
+        for i in range(len(dims) - 1)
+    }
+
+
+def mlp_apply(p, x, n: int, final_act: bool = False):
+    for i in range(n):
+        x = x @ p[f"w{i}"] + p[f"b{i}"]
+        if i < n - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def bce_loss(logits, labels):
+    logits = logits.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def lookup(table, ids):
+    """Single-id-per-field lookup (multi-hot goes via kernels/embedding_bag)."""
+    return jnp.take(table, ids, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Factorization Machine  [Rendle, ICDM'10]
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FMConfig:
+    name: str = "fm"
+    n_sparse: int = 39
+    embed_dim: int = 10
+    vocab_per_field: int = 1_000_000
+    dtype: object = jnp.float32
+
+    @property
+    def total_vocab(self) -> int:
+        return self.n_sparse * self.vocab_per_field
+
+    def n_params(self) -> int:
+        return 1 + self.total_vocab * (1 + self.embed_dim)
+
+
+def fm_init(key, cfg: FMConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w0": jnp.zeros((), cfg.dtype),
+        "w": (jax.random.normal(k1, (cfg.total_vocab,)) * 0.01
+              ).astype(cfg.dtype),
+        "v": (jax.random.normal(k2, (cfg.total_vocab, cfg.embed_dim))
+              * 0.01).astype(cfg.dtype),
+    }
+
+
+def fm_forward(params, cfg: FMConfig, ids):
+    """ids: (B, F) global ids (field f offset f*vocab). The O(nk)
+    sum-square trick: pairwise = 0.5 * ((sum v)^2 - sum v^2)."""
+    linear = lookup(params["w"], ids).sum(-1)                 # (B,)
+    v = lookup(params["v"], ids)                              # (B, F, k)
+    sum_v = v.sum(1)
+    pairwise = 0.5 * (jnp.square(sum_v) - jnp.square(v).sum(1)).sum(-1)
+    return params["w0"] + linear + pairwise
+
+
+def fm_loss(params, cfg: FMConfig, batch):
+    return bce_loss(fm_forward(params, cfg, batch["ids"]), batch["labels"])
+
+
+def fm_user_embedding(params, cfg: FMConfig, ids):
+    """Retrieval tower: normalized mean of field factors."""
+    v = lookup(params["v"], ids).mean(1).astype(jnp.float32)
+    return v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# DLRM  [arXiv:1906.00091], MLPerf config (Criteo 1TB)
+# ---------------------------------------------------------------------------
+# MLPerf DLRM benchmark embedding-table row counts (Criteo Terabyte).
+MLPERF_TABLE_SIZES = (
+    45833188, 36746, 17245, 7413, 20243, 3, 7114, 1441, 62, 29275261,
+    1572176, 345138, 10, 2209, 11267, 128, 4, 974, 14, 48937457,
+    11316796, 40094537, 452104, 12606, 104, 35)
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-mlperf"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 128
+    bot_mlp: tuple = (13, 512, 256, 128)
+    top_mlp: tuple = (1024, 1024, 512, 256, 1)
+    table_sizes: tuple = MLPERF_TABLE_SIZES
+    multi_hot: int = 1            # ids per field (bag width)
+    dtype: object = jnp.float32
+
+    @property
+    def padded_table_sizes(self) -> tuple:
+        """Row counts padded to multiples of 256 so tables shard evenly
+        over any <=256-way model axis (MLPerf sizes are odd; an unpadded
+        45,833,188-row table silently REPLICATES = 90 GB/chip — see
+        EXPERIMENTS.md §Perf G5). ids stay < the true vocab."""
+        return tuple(-(-v // 256) * 256 for v in self.table_sizes)
+
+    def n_params(self) -> int:
+        emb = sum(self.table_sizes) * self.embed_dim
+        bot = sum(a * b + b for a, b in zip(self.bot_mlp, self.bot_mlp[1:]))
+        n_f = self.n_sparse + 1
+        d_int = n_f * (n_f - 1) // 2 + self.embed_dim
+        dims = (d_int,) + self.top_mlp
+        top = sum(a * b + b for a, b in zip(dims, dims[1:]))
+        return emb + bot + top
+
+
+def dlrm_init(key, cfg: DLRMConfig) -> dict:
+    ks = jax.random.split(key, 3 + len(cfg.table_sizes))
+    tables = {
+        f"table_{i}": (jax.random.normal(ks[3 + i], (v, cfg.embed_dim))
+                       * v ** -0.25).astype(cfg.dtype)
+        for i, v in enumerate(cfg.padded_table_sizes)
+    }
+    n_f = cfg.n_sparse + 1
+    d_int = n_f * (n_f - 1) // 2 + cfg.embed_dim
+    return {
+        "tables": tables,
+        "bot": mlp_params_list(ks[0], cfg.bot_mlp, cfg.dtype),
+        "top": mlp_params_list(ks[1], (d_int,) + cfg.top_mlp, cfg.dtype),
+    }
+
+
+def dlrm_forward(params, cfg: DLRMConfig, dense, sparse_ids, weights=None):
+    """dense: (B, 13); sparse_ids: (B, 26, L) multi-hot (L=1 one-hot)."""
+    from ..kernels.embedding_bag.ops import embedding_bag
+    b = dense.shape[0]
+    x_bot = mlp_apply(params["bot"], dense.astype(cfg.dtype),
+                      len(cfg.bot_mlp) - 1, final_act=True)      # (B, 128)
+    embs = []
+    for i in range(cfg.n_sparse):
+        ids_i = sparse_ids[:, i]                                 # (B, L)
+        w_i = None if weights is None else weights[:, i]
+        embs.append(embedding_bag(params["tables"][f"table_{i}"],
+                                  ids_i, w_i, "sum"))
+    feats = jnp.stack([x_bot] + embs, axis=1)                    # (B, 27, k)
+    # dot interaction: upper triangle of pairwise dots
+    inter = jnp.einsum("bik,bjk->bij", feats, feats)
+    iu, ju = jnp.triu_indices(feats.shape[1], k=1)
+    flat = inter[:, iu, ju]                                      # (B, 351)
+    top_in = jnp.concatenate([x_bot, flat], axis=-1)
+    return mlp_apply(params["top"], top_in, len(cfg.top_mlp))[:, 0]
+
+
+def dlrm_loss(params, cfg: DLRMConfig, batch):
+    logits = dlrm_forward(params, cfg, batch["dense"], batch["sparse_ids"],
+                          batch.get("weights"))
+    return bce_loss(logits, batch["labels"])
+
+
+def dlrm_user_embedding(params, cfg: DLRMConfig, dense, sparse_ids):
+    from ..kernels.embedding_bag.ops import embedding_bag
+    x = mlp_apply(params["bot"], dense.astype(cfg.dtype),
+                  len(cfg.bot_mlp) - 1, final_act=True)
+    x = x.astype(jnp.float32)
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Wide & Deep  [arXiv:1606.07792]
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class WideDeepConfig:
+    name: str = "wide-deep"
+    n_sparse: int = 40
+    embed_dim: int = 32
+    mlp: tuple = (1024, 512, 256)
+    vocab_per_field: int = 1_000_000
+    dtype: object = jnp.float32
+
+    @property
+    def total_vocab(self) -> int:
+        return self.n_sparse * self.vocab_per_field
+
+    def n_params(self) -> int:
+        deep_in = self.n_sparse * self.embed_dim
+        dims = (deep_in,) + self.mlp + (1,)
+        deep = sum(a * b + b for a, b in zip(dims, dims[1:]))
+        return self.total_vocab * (1 + self.embed_dim) + deep
+
+
+def widedeep_init(key, cfg: WideDeepConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    deep_in = cfg.n_sparse * cfg.embed_dim
+    return {
+        "wide_w": (jax.random.normal(k1, (cfg.total_vocab,)) * 0.01
+                   ).astype(cfg.dtype),
+        "wide_b": jnp.zeros((), cfg.dtype),
+        "embed": (jax.random.normal(k2, (cfg.total_vocab, cfg.embed_dim))
+                  * 0.01).astype(cfg.dtype),
+        "deep": mlp_params_list(k3, (deep_in,) + cfg.mlp + (1,), cfg.dtype),
+    }
+
+
+def widedeep_forward(params, cfg: WideDeepConfig, ids):
+    """ids: (B, F) global ids. wide linear + deep MLP over concat embeds."""
+    wide = lookup(params["wide_w"], ids).sum(-1) + params["wide_b"]
+    emb = lookup(params["embed"], ids)                        # (B, F, k)
+    deep_in = emb.reshape(ids.shape[0], -1)
+    deep = mlp_apply(params["deep"], deep_in, len(cfg.mlp) + 1)[:, 0]
+    return wide + deep
+
+
+def widedeep_loss(params, cfg: WideDeepConfig, batch):
+    return bce_loss(widedeep_forward(params, cfg, batch["ids"]),
+                    batch["labels"])
+
+
+def widedeep_user_embedding(params, cfg: WideDeepConfig, ids):
+    emb = lookup(params["embed"], ids).mean(1).astype(jnp.float32)
+    return emb / jnp.maximum(jnp.linalg.norm(emb, axis=-1, keepdims=True),
+                             1e-9)
+
+
+# ---------------------------------------------------------------------------
+# BERT4Rec  [arXiv:1904.06690]
+# ---------------------------------------------------------------------------
+def bert4rec_config(n_items: int = 30_000, dtype=jnp.float32,
+                    name: str = "bert4rec") -> TransformerConfig:
+    """Bidirectional sequential recommender = encoder transformer over the
+    item vocabulary; masked-item prediction (Cloze) objective.
+
+    vocab = n_items + PAD + MASK, padded to a multiple of 512 so the
+    item-logit head TP-shards (30,002 unpadded replicates the (B, S, V)
+    logits: 98 GB/chip at train_batch scale — EXPERIMENTS.md §Perf G5).
+    """
+    vocab = -(-(n_items + 2) // 512) * 512
+    return TransformerConfig(
+        name=name, vocab=vocab,
+        d_model=64, n_layers=2, n_heads=2, n_kv=2, d_head=32, d_ff=256,
+        act="gelu", causal=False, dtype=dtype, remat=False)
+
+
+def bert4rec_loss(params, cfg: TransformerConfig, batch):
+    """batch: {tokens (B, S) with MASK ids, labels (B, S) = item id at
+    masked positions, -1 elsewhere}."""
+    from .transformer import forward, logits_fn
+    from .layers import cross_entropy_loss
+    hidden, _ = forward(params, batch["tokens"], cfg)
+    return cross_entropy_loss(logits_fn(params, hidden), batch["labels"])
+
+
+def bert4rec_user_embedding(params, cfg: TransformerConfig, tokens):
+    from .transformer import forward_pooled
+    return forward_pooled(params, tokens, cfg)
+
+
+# ---------------------------------------------------------------------------
+# retrieval scoring (shared): 1 query x N candidates — the LiveVectorLake
+# hot-tier kernel applied to recsys retrieval
+# ---------------------------------------------------------------------------
+def score_candidates(user_vec, cand_table, k: int = 100, mode=None,
+                     n_blocks: int = 512, mask=None):
+    """user_vec: (B, d); cand_table: (N, d). Returns top-k (scores, ids).
+    Batched dot on the MXU via kernels/topk_search — NOT a loop.
+
+    Distributed path: TWO-STAGE top-k (same shape as the Pallas kernel's
+    streaming reduction, expressed shardably). A single global
+    lax.top_k over row-sharded scores makes GSPMD replicate the scores
+    for a global sort (~40MB/device at N=1e6); reshaping into n_blocks
+    row-blocks keeps stage-1 top-k LOCAL to each device's shard and the
+    global merge sees only n_blocks*k candidates (EXPERIMENTS.md §Perf,
+    fm/retrieval_cand iteration 1)."""
+    from ..kernels.topk_search.ops import topk_search
+
+    n = cand_table.shape[0]
+    if mask is None:
+        mask = jnp.ones((n,), bool)
+    if n_blocks <= 1 or n < n_blocks * k:
+        return topk_search(user_vec, cand_table, mask, k, mode=mode)
+
+    b = user_vec.shape[0]
+    blk = -(-n // n_blocks)                       # ceil
+    pad = n_blocks * blk - n
+    scores = jnp.einsum("bd,nd->bn", user_vec.astype(jnp.float32),
+                        cand_table.astype(jnp.float32))
+    scores = jnp.where(mask[None, :], scores, -jnp.inf)
+    scores = jnp.pad(scores, ((0, 0), (0, pad)),
+                     constant_values=-jnp.inf)
+    blocked = scores.reshape(b, n_blocks, blk)
+    # stage 1: per-block top-k — block dim aligns with the row sharding,
+    # so this sorts each device's shard locally
+    s1, i1 = jax.lax.top_k(blocked, k)            # (B, n_blocks, k)
+    base = (jnp.arange(n_blocks, dtype=jnp.int32) * blk)[None, :, None]
+    i1 = i1.astype(jnp.int32) + base
+    # stage 2: tiny global merge over n_blocks*k candidates
+    s2, pos = jax.lax.top_k(s1.reshape(b, n_blocks * k), k)
+    i2 = jnp.take_along_axis(i1.reshape(b, n_blocks * k), pos, axis=1)
+    return s2, i2

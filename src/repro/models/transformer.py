@@ -1,0 +1,288 @@
+"""Decoder/encoder transformer family (pure JAX, scan-over-layers).
+
+One parametric implementation covers all five assigned LM architectures
+(dense GQA: mistral-nemo / nemotron-4 / qwen1.5; MoE: kimi-k2 /
+qwen2-moe), the MiniLM-class embedder, and BERT4Rec's bidirectional
+backbone. Layer params are stacked on a leading (L, ...) axis and the
+forward pass is a jax.lax.scan with optional remat — compile time and HLO
+size stay O(1) in depth, which is what makes the 61-layer / 1T-param
+dry-run tractable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (AttentionConfig, attention_block, attention_qkv,
+                     cross_entropy_loss, dense_init, embed_init, grad_cast,
+                     mlp_block, mlp_params, rmsnorm)
+from .moe import MoEConfig, moe_block, moe_params
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv: int
+    d_head: int
+    d_ff: int
+    act: str = "swiglu"
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    causal: bool = True
+    moe: Optional[MoEConfig] = None
+    remat: bool = True
+    dtype: Any = jnp.float32           # parameter / activation dtype
+    attn_impl: Optional[str] = None    # None=auto | flash | chunked | ref
+    # roofline probes: python-loop the layers instead of lax.scan so XLA
+    # cost_analysis counts every layer (scan bodies are counted ONCE);
+    # used with n_layers in {1, 2} + linear extrapolation
+    unroll_layers: bool = False
+    # production mesh for the explicit expert-parallel shard_map MoE path
+    # (launch/steps.py injects it at lower time; None = pjit/GSPMD MoE)
+    moe_mesh: Any = None
+
+    @property
+    def attn(self) -> AttentionConfig:
+        return AttentionConfig(self.d_model, self.n_heads, self.n_kv,
+                               self.d_head, self.qkv_bias, self.rope_theta,
+                               self.causal)
+
+    def n_params(self) -> int:
+        """Total parameter count (for roofline MODEL_FLOPS)."""
+        d, dh = self.d_model, self.d_head
+        attn = d * dh * (self.n_heads + 2 * self.n_kv) + self.n_heads * dh * d
+        gated = self.act in ("swiglu", "geglu")
+        if self.moe:
+            f = self.moe.d_ff
+            ffn = self.moe.n_experts * (d * f * (2 if gated else 1) + f * d)
+            ffn += d * self.moe.n_experts          # router
+            if self.moe.n_shared:
+                fs = self.moe.n_shared * f
+                ffn += d * fs * (2 if gated else 1) + fs * d
+        else:
+            ffn = d * self.d_ff * (2 if gated else 1) + self.d_ff * d
+        per_layer = attn + ffn + 2 * d
+        return (self.n_layers * per_layer + 2 * self.vocab * d + d)
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: top_k + shared experts only)."""
+        if not self.moe:
+            return self.n_params()
+        d = self.d_model
+        gated = 2 if self.act in ("swiglu", "geglu") else 1
+        f = self.moe.d_ff
+        per_tok_ffn = self.moe.top_k * (d * f * gated + f * d) \
+            + d * self.moe.n_experts
+        if self.moe.n_shared:
+            fs = self.moe.n_shared * f
+            per_tok_ffn += d * fs * gated + fs * d
+        dh = self.d_head
+        attn = d * dh * (self.n_heads + 2 * self.n_kv) + self.n_heads * dh * d
+        return self.n_layers * (attn + per_tok_ffn + 2 * d) \
+            + 2 * self.vocab * d + d
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _layer_params(key, cfg: TransformerConfig) -> dict:
+    from .layers import attention_params
+    k_attn, k_ffn = jax.random.split(key)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+        "ln2": jnp.ones((cfg.d_model,), cfg.dtype),
+        "attn": attention_params(k_attn, cfg.attn, cfg.dtype),
+    }
+    if cfg.moe:
+        p["moe"] = moe_params(k_ffn, cfg.d_model, cfg.moe, cfg.dtype)
+    else:
+        p["mlp"] = mlp_params(k_ffn, cfg.d_model, cfg.d_ff, cfg.act,
+                              cfg.dtype)
+    return p
+
+
+def init_params(key, cfg: TransformerConfig) -> dict:
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: _layer_params(k, cfg))(layer_keys)
+    return {
+        "embed": embed_init(k_embed, cfg.vocab, cfg.d_model, cfg.dtype),
+        "layers": layers,
+        "final_ln": jnp.ones((cfg.d_model,), cfg.dtype),
+        "lm_head": dense_init(k_head, cfg.d_model, cfg.vocab, cfg.dtype),
+    }
+
+
+def params_shape(cfg: TransformerConfig):
+    """Shape-only param tree (no allocation) — dry-run entry point."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def _moe_dispatch(lp, h, cfg: TransformerConfig, dropless: bool = False):
+    from .moe import moe_block_sharded, sharded_moe_applicable
+    if sharded_moe_applicable(cfg.moe, cfg.moe_mesh, cfg.d_model,
+                              batch=h.shape[0]):
+        return moe_block_sharded(lp["moe"], h, cfg.moe, cfg.moe_mesh,
+                                 dropless=dropless)
+    return moe_block(lp["moe"], h, cfg.moe, dropless=dropless)
+
+
+def _layer_fn(lp, x, cfg: TransformerConfig, positions):
+    h = attention_block(lp["attn"], rmsnorm(x, lp["ln1"]), cfg.attn,
+                        positions=positions, impl=cfg.attn_impl)
+    x = x + h
+    if cfg.moe:
+        f, aux = _moe_dispatch(lp, rmsnorm(x, lp["ln2"]), cfg)
+    else:
+        f = mlp_block(lp["mlp"], rmsnorm(x, lp["ln2"]), cfg.act)
+        aux = jnp.zeros((), jnp.float32)
+    return x + f, aux
+
+
+def forward(params, tokens, cfg: TransformerConfig,
+            positions=None) -> tuple[jax.Array, jax.Array]:
+    """tokens (B, S) int32 -> (hidden (B, S, D), aux_loss)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if positions is None:
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
+
+    def scan_body(carry, lp):
+        x = carry
+        # cast each layer's weight cotangents to the param dtype before
+        # scan stacks them (see layers.grad_cast)
+        lp = jax.tree.map(grad_cast, lp)
+        fn = _layer_fn
+        if cfg.remat:
+            fn = jax.checkpoint(fn, static_argnums=(2,))
+        x, aux = fn(lp, x, cfg, positions)
+        return x, aux
+
+    if cfg.unroll_layers:
+        fn = _layer_fn
+        if cfg.remat:
+            fn = jax.checkpoint(fn, static_argnums=(2,))
+        aux_total = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, aux = fn(lp, x, cfg, positions)
+            aux_total = aux_total + aux
+        return rmsnorm(x, params["final_ln"]), aux_total
+
+    x, auxs = jax.lax.scan(scan_body, x, params["layers"])
+    return rmsnorm(x, params["final_ln"]), jnp.sum(auxs)
+
+
+def logits_fn(params, hidden):
+    return jnp.einsum("bsd,dv->bsv", hidden, params["lm_head"])
+
+
+def loss_fn(params, batch, cfg: TransformerConfig):
+    hidden, aux = forward(params, batch["tokens"], cfg)
+    logits = logits_fn(params, hidden)
+    return cross_entropy_loss(logits, batch["labels"]) + aux
+
+
+def forward_pooled(params, tokens, cfg: TransformerConfig, mask=None):
+    """Mean-pooled L2-normalized sequence embedding (embedder path)."""
+    hidden, _ = forward(params, tokens, cfg)
+    if mask is None:
+        mask = (tokens > 0).astype(hidden.dtype)
+    pooled = (hidden * mask[..., None]).sum(1) / \
+        jnp.maximum(mask.sum(1)[..., None], 1.0)
+    norm = jnp.linalg.norm(pooled.astype(jnp.float32), axis=-1,
+                           keepdims=True)
+    return (pooled.astype(jnp.float32) / jnp.maximum(norm, 1e-9)).astype(
+        hidden.dtype)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+def prefill(params, tokens, cfg: TransformerConfig, cache_size: int):
+    """Process the full prompt; return (last-token logits (B, V),
+    cache {k, v: (L, B, KV, cache_size, Dh)}, cache_len)."""
+    b, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    def scan_body(x, lp):
+        h = rmsnorm(x, lp["ln1"])
+        q, k, v = attention_qkv(lp["attn"], h, cfg.attn, positions)
+        from .layers import attention_impl
+        o = attention_impl(q, k, v, causal=cfg.causal, impl=cfg.attn_impl)
+        o = jnp.swapaxes(o, 1, 2).reshape(b, s, cfg.n_heads * cfg.d_head)
+        x = x + jnp.einsum("bse,ed->bsd", o, lp["attn"]["wo"])
+        if cfg.moe:
+            f, _ = _moe_dispatch(lp, rmsnorm(x, lp["ln2"]), cfg)
+        else:
+            f = mlp_block(lp["mlp"], rmsnorm(x, lp["ln2"]), cfg.act)
+        pad = [(0, 0), (0, 0), (0, cache_size - s), (0, 0)]
+        return x + f, (jnp.pad(k, pad), jnp.pad(v, pad))
+
+    if cfg.unroll_layers:
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, (k_i, v_i) = scan_body(x, lp)
+            ks.append(k_i)
+            vs.append(v_i)
+        ck, cv = jnp.stack(ks), jnp.stack(vs)
+    else:
+        x, (ck, cv) = jax.lax.scan(scan_body, x, params["layers"])
+    hidden = rmsnorm(x[:, -1:], params["final_ln"])
+    logits = logits_fn(params, hidden)[:, 0]
+    return logits, {"k": ck, "v": cv}, jnp.asarray(s, jnp.int32)
+
+
+def decode_step(params, tokens, cache, cache_len, cfg: TransformerConfig):
+    """One-token decode. tokens (B, 1); cache k/v (L, B, KV, S, Dh);
+    cache_len () int32 = #valid entries. Returns (logits (B, V),
+    new_cache, new_len). Lowered by the decode_32k / long_500k cells."""
+    b = tokens.shape[0]
+    positions = jnp.full((b, 1), cache_len, jnp.int32)
+    x = jnp.take(params["embed"], tokens, axis=0)      # (B, 1, D)
+
+    def scan_body(x, inp):
+        lp, ck, cv = inp
+        h = rmsnorm(x, lp["ln1"])
+        q, k_new, v_new = attention_qkv(lp["attn"], h, cfg.attn, positions)
+        # write the new token's K/V at cache_len
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k_new, cache_len, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v_new, cache_len, axis=2)
+        from ..kernels.flash_decode.ops import flash_decode
+        o = flash_decode(q[:, :, 0], ck, cv, cache_len=cache_len + 1)
+        o = o.reshape(b, 1, cfg.n_heads * cfg.d_head).astype(x.dtype)
+        x = x + jnp.einsum("bse,ed->bsd", o, lp["attn"]["wo"])
+        if cfg.moe:
+            # dropless: exact routing for serving (t is tiny at decode)
+            f, _ = _moe_dispatch(lp, rmsnorm(x, lp["ln2"]), cfg,
+                                 dropless=True)
+        else:
+            f = mlp_block(lp["mlp"], rmsnorm(x, lp["ln2"]), cfg.act)
+        return x + f, (ck, cv)
+
+    if cfg.unroll_layers:
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, (k_i, v_i) = scan_body(
+                x, (lp, cache["k"][i], cache["v"][i]))
+            ks.append(k_i)
+            vs.append(v_i)
+        ck, cv = jnp.stack(ks), jnp.stack(vs)
+    else:
+        x, (ck, cv) = jax.lax.scan(
+            scan_body, x, (params["layers"], cache["k"], cache["v"]))
+    hidden = rmsnorm(x, params["final_ln"])
+    logits = logits_fn(params, hidden)[:, 0]
+    return logits, {"k": ck, "v": cv}, cache_len + 1

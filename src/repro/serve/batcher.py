@@ -1,0 +1,93 @@
+"""Request batching with straggler mitigation.
+
+Continuous-batching-lite: requests queue; the dispatcher assembles fixed-
+size batches (pad to max_batch) grouped into length buckets so positional
+state stays uniform per batch. Straggler mitigation = hedged backup
+requests: if a batch's execution exceeds `hedge_factor x` the EWMA
+latency, the work is re-issued (in-process simulation of the multi-replica
+hedge; the hook is where a real deployment would target a second replica).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Optional
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    payload: Any
+    bucket: int = 0
+    enqueued_at: float = 0.0
+    result: Any = None
+    done: bool = False
+    hedged: bool = False
+
+
+class Batcher:
+    def __init__(self, run_batch: Callable[[list[Any]], list[Any]],
+                 max_batch: int = 8, max_wait_s: float = 0.0,
+                 bucket_fn: Optional[Callable[[Any], int]] = None,
+                 hedge_factor: float = 3.0):
+        self.run_batch = run_batch
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self.bucket_fn = bucket_fn or (lambda p: 0)
+        self.hedge_factor = hedge_factor
+        self._queue: deque[Request] = deque()
+        self._next_id = 0
+        self._lat_ewma: Optional[float] = None
+        self.stats = {"batches": 0, "requests": 0, "hedges": 0,
+                      "mean_batch_size": 0.0}
+
+    def submit(self, payload: Any) -> Request:
+        req = Request(self._next_id, payload,
+                      bucket=self.bucket_fn(payload),
+                      enqueued_at=time.perf_counter())
+        self._next_id += 1
+        self._queue.append(req)
+        return req
+
+    def _take_batch(self) -> list[Request]:
+        if not self._queue:
+            return []
+        bucket = self._queue[0].bucket
+        batch = []
+        rest = deque()
+        while self._queue and len(batch) < self.max_batch:
+            r = self._queue.popleft()
+            (batch if r.bucket == bucket else rest).append(r)
+        self._queue.extendleft(reversed(rest))
+        return batch
+
+    def _execute(self, batch: list[Request]) -> None:
+        t0 = time.perf_counter()
+        results = self.run_batch([r.payload for r in batch])
+        elapsed = time.perf_counter() - t0
+        # hedged backup request on straggling execution
+        if (self._lat_ewma is not None
+                and elapsed > self.hedge_factor * self._lat_ewma):
+            self.stats["hedges"] += 1
+            t1 = time.perf_counter()
+            retry = self.run_batch([r.payload for r in batch])
+            if time.perf_counter() - t1 < elapsed:
+                results = retry
+            for r in batch:
+                r.hedged = True
+        self._lat_ewma = (elapsed if self._lat_ewma is None
+                          else 0.8 * self._lat_ewma + 0.2 * elapsed)
+        for r, res in zip(batch, results):
+            r.result = res
+            r.done = True
+        self.stats["batches"] += 1
+        self.stats["requests"] += len(batch)
+        self.stats["mean_batch_size"] = (self.stats["requests"]
+                                         / self.stats["batches"])
+
+    def drain(self) -> None:
+        while self._queue:
+            batch = self._take_batch()
+            if batch:
+                self._execute(batch)

@@ -1,0 +1,55 @@
+"""Gradient compression with error feedback (distributed-optimization
+trick for bandwidth-bound DP all-reduce).
+
+int8 uniform quantization per tensor with an error-feedback accumulator
+(Seide et al. / EF-SGD): the quantization residual is carried into the
+next step, so compression bias vanishes asymptotically. Compressing
+BEFORE the data-parallel all-reduce cuts DP collective bytes 4x (fp32) /
+2x (bf16); the roofline collective term scales accordingly.
+
+Usage: wrap the grad function —
+    grads, cstate = compress_decompress(grads, cstate)
+(in a real pod the all-reduce happens between compress and decompress;
+under pjit the XLA partitioner owns the all-reduce, so we apply
+quantize+dequantize around it — the *bytes on the wire* story is encoded
+in the sharding annotations; see launch/sharding.py.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_state(params):
+    """Error-feedback accumulators, one per leaf."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def quantize_int8(x):
+    """Symmetric per-tensor int8. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(grads, ef_state):
+    """Apply int8 quantize->dequantize with error feedback.
+    Returns (decompressed grads, new ef_state)."""
+
+    def per_leaf(g, e):
+        g32 = g.astype(jnp.float32) + e          # add carried error
+        q, scale = quantize_int8(g32)
+        deq = dequantize_int8(q, scale)
+        return deq.astype(g.dtype), g32 - deq    # new error
+
+    out = jax.tree.map(per_leaf, grads, ef_state)
+    new_g = jax.tree.map(lambda o: o[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_e = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_g, new_e

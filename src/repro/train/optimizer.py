@@ -1,0 +1,190 @@
+"""Sharded optimizers (pure JAX, optax-free).
+
+Two tiers, chosen per architecture by memory napkin math (DESIGN.md §6):
+
+  - AdamW: dense LMs (12-32B params). fp32 m/v states; with ZeRO-1 the
+    states shard over BOTH mesh axes (launch/sharding.py), so the per-chip
+    footprint is params_bf16/TP + 8 bytes/param / (DP*TP).
+
+  - Adafactor: the 1T-param MoE (kimi-k2). Factored second moment — row
+    and column accumulators instead of a full (d_in, d_out) tensor —
+    ~2 bytes/param total state. This is what makes a 1T model fit 16GB
+    chips at 512-way sharding.
+
+Both expose the same (init, update) pair over arbitrary pytrees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    # update(grads, opt_state, params, step) -> (new_params, new_state)
+
+
+def _layer_mapped(fn, out_ndim_hint=None):
+    """Stream an elementwise per-leaf update over the leading (layer)
+    dim with lax.map when the leaf is layer-stacked (ndim >= 3): the fp32
+    working copies then cost 1/L of the leaf instead of materializing a
+    full f32 cast of, e.g., a 5 GB expert-weight shard (EXPERIMENTS.md
+    §Perf G7)."""
+
+    def wrapped(*arrays):
+        if arrays[0].ndim >= 3 and arrays[0].shape[0] > 1:
+            def body(xs):
+                # optimization_barrier stops XLA from hoisting the
+                # per-slice f32 converts OUT of the loop (which would
+                # materialize full f32 stacks and defeat the streaming)
+                return fn(*jax.lax.optimization_barrier(xs))
+            return jax.lax.map(body, arrays)
+        return fn(*arrays)
+
+    return wrapped
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw(lr: float = 1e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.01,
+          warmup_steps: int = 100) -> Optimizer:
+    def schedule(step):
+        warm = jnp.minimum(1.0, (step + 1) / warmup_steps)
+        return lr * warm
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        lr_t = schedule(step)
+        bc1 = 1.0 - b1 ** (step + 1.0)
+        bc2 = 1.0 - b2 ** (step + 1.0)
+
+        def upd_leaf(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g
+            v_new = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + \
+                weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), \
+                m_new, v_new
+
+        upd = _layer_mapped(upd_leaf)
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern, factored second moment)
+# ---------------------------------------------------------------------------
+def adafactor(lr: float = 1e-3, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0,
+              warmup_steps: int = 100) -> Optimizer:
+    """Factored state for >=2D params (row/col accumulators over the two
+    trailing dims); full state for 0/1D. bf16-param friendly: no fp32
+    master copy, no momentum."""
+
+    def schedule(step):
+        warm = jnp.minimum(1.0, (step + 1) / warmup_steps)
+        return lr * warm
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(params):
+        def per_leaf(p):
+            if _factored(p):
+                row_shape = p.shape[:-1]           # reduce over last dim
+                col_shape = p.shape[:-2] + p.shape[-1:]
+                return {"r": jnp.zeros(row_shape, jnp.float32),
+                        "c": jnp.zeros(col_shape, jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return jax.tree.map(per_leaf, params)
+
+    def update(grads, state, params, step):
+        lr_t = schedule(step)
+        beta = 1.0 - (step + 1.0) ** -decay        # increasing decay
+
+        def clip_apply(u, p):
+            # update clipping (RMS(u) <= clip_threshold) — applied per
+            # layer slice under lax.map = per logical parameter matrix
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+
+        def upd_factored(g, r_s, c_s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            r = beta * r_s + (1 - beta) * g2.mean(axis=-1)
+            c = beta * c_s + (1 - beta) * g2.mean(axis=-2)
+            r_norm = r / jnp.maximum(r.mean(axis=-1, keepdims=True), eps)
+            v_inv = jax.lax.rsqrt(
+                jnp.maximum(r_norm[..., None] * c[..., None, :], eps))
+            return clip_apply(g * v_inv, p), r, c
+
+        def upd_full(g, v_s, p):
+            g = g.astype(jnp.float32)
+            v = beta * v_s + (1 - beta) * (jnp.square(g) + eps)
+            return clip_apply(g * jax.lax.rsqrt(jnp.maximum(v, eps)),
+                              p), v
+
+        flat_p, tree = jax.tree_util.tree_flatten(params)
+        flat_g = tree.flatten_up_to(grads)
+        flat_s = tree.flatten_up_to(state)
+        new = []
+        for g, s, p in zip(flat_g, flat_s, flat_p):
+            if _factored(p):
+                np_, r, c = _layer_mapped(upd_factored)(g, s["r"], s["c"],
+                                                        p)
+                new.append((np_, {"r": r, "c": c}))
+            else:
+                np_, v = _layer_mapped(upd_full)(g, s["v"], p)
+                new.append((np_, {"v": v}))
+        new_params = tree.unflatten([n[0] for n in new])
+        new_state = tree.unflatten([n[1] for n in new])
+        return new_params, new_state
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: float = 1e-2) -> Optimizer:
+    def init(params):
+        return {}
+
+    def update(grads, state, params, step):
+        new = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    if name == "sgd":
+        return sgd(**kw)
+    raise ValueError(f"unknown optimizer {name!r}")

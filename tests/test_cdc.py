@@ -1,0 +1,107 @@
+"""CDC classification tests (paper §III-A3 + §V-B3 ground-truth check)."""
+from repro.core.cdc import detect_changes, positional_diff
+from repro.core.chunking import chunk_document
+
+
+def _hashes(text):
+    return [c.chunk_id for c in chunk_document(text)]
+
+
+DOC_V1 = "Alpha paragraph.\n\nBeta paragraph.\n\nGamma paragraph."
+
+
+class TestDetectChanges:
+    def test_initial_ingest_all_new(self):
+        cs = detect_changes(chunk_document(DOC_V1), [])
+        assert len(cs.new) == 3
+        assert cs.n_changed == 3 and cs.reprocess_fraction == 1.0
+
+    def test_no_change(self):
+        cs = detect_changes(chunk_document(DOC_V1), _hashes(DOC_V1))
+        assert len(cs.unchanged) == 3
+        assert cs.n_changed == 0 and cs.reprocess_fraction == 0.0
+
+    def test_single_modification(self):
+        v2 = "Alpha paragraph.\n\nBeta paragraph EDITED.\n\nGamma paragraph."
+        cs = detect_changes(chunk_document(v2), _hashes(DOC_V1))
+        assert len(cs.modified) == 1 and cs.modified[0].position == 1
+        assert len(cs.unchanged) == 2
+        assert not cs.deleted and not cs.new
+        assert abs(cs.reprocess_fraction - 1 / 3) < 1e-9
+
+    def test_append_is_new(self):
+        v2 = DOC_V1 + "\n\nDelta paragraph."
+        cs = detect_changes(chunk_document(v2), _hashes(DOC_V1))
+        assert len(cs.new) == 1 and cs.new[0].position == 3
+        assert len(cs.unchanged) == 3 and not cs.deleted
+
+    def test_truncation_is_deleted(self):
+        v2 = "Alpha paragraph.\n\nBeta paragraph."
+        cs = detect_changes(chunk_document(v2), _hashes(DOC_V1))
+        assert len(cs.deleted) == 1
+        assert cs.deleted[0][0] == 2          # gamma's old position
+
+    def test_modification_not_double_counted_as_delete(self):
+        v2 = "Alpha paragraph.\n\nBeta paragraph EDITED.\n\nGamma paragraph."
+        cs = detect_changes(chunk_document(v2), _hashes(DOC_V1))
+        assert not cs.deleted                  # superseded, NOT deleted
+
+    def test_move_needs_no_reembedding(self):
+        v2 = "Beta paragraph.\n\nAlpha paragraph.\n\nGamma paragraph."
+        cs = detect_changes(chunk_document(v2), _hashes(DOC_V1))
+        assert len(cs.moved) == 2 and len(cs.unchanged) == 1
+        assert cs.n_changed == 0               # zero embedding work
+
+    def test_front_deletion_detected_as_single_delete(self):
+        v2 = "Beta paragraph.\n\nGamma paragraph."
+        cs = detect_changes(chunk_document(v2), _hashes(DOC_V1))
+        assert len(cs.moved) == 2
+        assert len(cs.deleted) == 1            # alpha gone
+        assert cs.n_changed == 0
+
+    def test_duplicate_content_occurrences(self):
+        v1 = "Same.\n\nSame.\n\nOther."
+        v2 = "Same.\n\nOther."
+        cs = detect_changes(chunk_document(v2), _hashes(v1))
+        # one 'Same' occurrence deleted, one kept
+        assert len(cs.deleted) == 1
+
+    def test_100_percent_detection_accuracy(self):
+        """Paper §V-B3: 147/147 TP, 0 FP, 0 FN on ground-truth edits."""
+        import random
+        rng = random.Random(7)
+        words = ["alpha", "beta", "gamma", "delta", "eps", "zeta", "eta"]
+        tp = fp = fn = 0
+        for trial in range(50):
+            paras = [" ".join(rng.choices(words, k=12)) + f" p{i}"
+                     for i in range(10)]
+            v1 = "\n\n".join(paras)
+            edit_pos = rng.randrange(10)
+            paras2 = list(paras)
+            paras2[edit_pos] = paras2[edit_pos] + " EDITED"
+            v2 = "\n\n".join(paras2)
+            cs = detect_changes(chunk_document(v2), _hashes(v1))
+            detected = {c.position for c in cs.modified}
+            tp += int(edit_pos in detected)
+            fp += len(detected - {edit_pos}) + len(cs.new) + len(cs.deleted)
+            fn += int(edit_pos not in detected)
+        assert (tp, fp, fn) == (50, 0, 0)
+
+
+class TestPositionalDiff:
+    def test_modify(self):
+        v2 = "Alpha paragraph.\n\nBeta EDITED.\n\nGamma paragraph."
+        close, append = positional_diff(chunk_document(v2), _hashes(DOC_V1))
+        assert close == [1] and append == [1]
+
+    def test_append_and_truncate(self):
+        close, append = positional_diff(chunk_document(DOC_V1 + "\n\nD."),
+                                        _hashes(DOC_V1))
+        assert close == [] and append == [3]
+        close, append = positional_diff(
+            chunk_document("Alpha paragraph."), _hashes(DOC_V1))
+        assert close == [1, 2] and append == []
+
+    def test_initial(self):
+        close, append = positional_diff(chunk_document(DOC_V1), [])
+        assert close == [] and append == [0, 1, 2]

@@ -1,0 +1,65 @@
+"""Layer 1 unit tests: semantic chunking + content-addressable hashing."""
+import pytest
+
+from repro.core.chunking import chunk_document, reassemble, split_blocks
+from repro.core.hashing import chunk_hash, normalize
+
+
+class TestNormalize:
+    def test_whitespace_invariance(self):
+        assert normalize("Hello   World") == normalize("hello world")
+        assert normalize("  a\tb  ") == normalize("A B")
+
+    def test_newline_canonicalization(self):
+        assert normalize("a\r\nb") == normalize("a\nb") == normalize("a\rb")
+
+    def test_casefold(self):
+        assert normalize("STRASSE") == normalize("strasse")
+
+    def test_content_change_changes_hash(self):
+        assert chunk_hash("the rate is 5%") != chunk_hash("the rate is 6%")
+
+    def test_hash_deterministic(self):
+        assert chunk_hash("abc") == chunk_hash("abc")
+        assert len(chunk_hash("abc")) == 64
+
+
+class TestChunking:
+    def test_paragraph_split(self):
+        doc = "Para one.\n\nPara two.\n\n\nPara three."
+        blocks = split_blocks(doc)
+        assert blocks == ["Para one.", "Para two.", "Para three."]
+
+    def test_code_block_atomic(self):
+        doc = "Intro.\n\n```python\ndef f():\n\n    return 1\n```\n\nOutro."
+        blocks = split_blocks(doc)
+        assert len(blocks) == 3
+        assert blocks[1].startswith("```python")
+        assert "return 1" in blocks[1]
+
+    def test_table_atomic(self):
+        doc = "Before.\n\n| a | b |\n|---|---|\n| 1 | 2 |\n\nAfter."
+        blocks = split_blocks(doc)
+        assert len(blocks) == 3
+        assert blocks[1].count("|") >= 6
+
+    def test_list_atomic(self):
+        doc = "Head.\n\n- item one\n- item two\n\n- item three\n\nTail."
+        blocks = split_blocks(doc)
+        # list items merge into ONE atomic block even across blank lines
+        assert len(blocks) == 3
+
+    def test_positions_and_reassembly(self):
+        doc = "A.\n\nB.\n\nC."
+        chunks = chunk_document(doc)
+        assert [c.position for c in chunks] == [0, 1, 2]
+        assert reassemble(chunks) == "A.\n\nB.\n\nC."
+
+    def test_identical_content_identical_id(self):
+        c1 = chunk_document("Same paragraph.")[0]
+        c2 = chunk_document("Other.\n\nSame   PARAGRAPH.")[1]
+        assert c1.chunk_id == c2.chunk_id
+
+    def test_empty_doc(self):
+        assert chunk_document("") == []
+        assert chunk_document("\n\n\n") == []

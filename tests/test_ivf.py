@@ -1,0 +1,47 @@
+"""IVF index: recall vs exact scan, nprobe monotonicity, scan fraction."""
+import numpy as np
+import pytest
+
+from repro.core.ivf import IVFIndex
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(0)
+    # clustered corpus: 16 clusters in 64-d
+    centers = rng.standard_normal((16, 64)).astype(np.float32)
+    pts = np.concatenate([
+        c + 0.15 * rng.standard_normal((200, 64)).astype(np.float32)
+        for c in centers])
+    pts /= np.linalg.norm(pts, axis=1, keepdims=True)
+    return pts
+
+
+def test_exact_when_nprobe_full(corpus):
+    idx = IVFIndex(n_centroids=16)
+    idx.build(corpus)
+    assert idx.recall_at_k(corpus[:32], k=10, nprobe=16) == 1.0
+
+
+def test_recall_improves_with_nprobe(corpus):
+    idx = IVFIndex(n_centroids=32)
+    idx.build(corpus)
+    q = corpus[100:140]
+    recalls = [idx.recall_at_k(q, k=10, nprobe=p) for p in (1, 4, 16, 32)]
+    assert recalls[-1] == 1.0
+    assert all(b >= a - 1e-9 for a, b in zip(recalls, recalls[1:]))
+    assert recalls[1] >= 0.8             # clustered data: few probes win
+
+
+def test_sublinear_scan_fraction(corpus):
+    idx = IVFIndex(n_centroids=32)
+    idx.build(corpus)
+    _, _, stats = idx.search(corpus[:8], k=5, nprobe=4)
+    assert stats.fraction_scanned < 0.4
+
+
+def test_self_query_top1(corpus):
+    idx = IVFIndex(n_centroids=16)
+    idx.build(corpus)
+    s, i, _ = idx.search(corpus[7:8], k=1, nprobe=4)
+    assert int(i[0, 0]) == 7

@@ -1,0 +1,103 @@
+"""flash_attention + flash_decode kernel validation vs jnp oracles
+(interpret=True on CPU), swept over shapes, dtypes, GQA groups."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_decode.ops import flash_decode
+from repro.kernels.flash_decode.ref import decode_attention_ref
+
+
+def _rand(shape, seed, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape).astype(dtype)
+
+
+@pytest.mark.parametrize("b,h,kv,sq,skv,d,causal", [
+    (1, 4, 4, 128, 128, 64, True),      # MHA causal
+    (2, 8, 2, 128, 256, 64, True),      # GQA group=4, prefill vs longer kv
+    (1, 4, 1, 256, 256, 32, False),     # MQA bidirectional
+    (1, 2, 2, 128, 384, 128, True),     # d=128 MXU-width
+])
+def test_flash_attention_matches_ref(b, h, kv, sq, skv, d, causal):
+    q = _rand((b, h, sq, d), 1)
+    k = _rand((b, kv, skv, d), 2)
+    v = _rand((b, kv, skv, d), 3)
+    ref = attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                        causal=causal)
+    out = flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                          causal=causal, mode="interpret")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q = _rand((1, 4, 128, 64), 1).astype(jnp.bfloat16)
+    k = _rand((1, 2, 128, 64), 2).astype(jnp.bfloat16)
+    v = _rand((1, 2, 128, 64), 3).astype(jnp.bfloat16)
+    ref = attention_ref(q, k, v, causal=True)
+    out = flash_attention(q, k, v, causal=True, mode="interpret")
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_flash_attention_block_sweep():
+    q, k, v = (_rand((1, 2, 256, 64), i) for i in range(3))
+    ref = None
+    for bq, bk in [(64, 64), (128, 256), (256, 128)]:
+        out = np.asarray(flash_attention(
+            jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal=True,
+            bq=bq, bk=bk, mode="interpret"))
+        if ref is None:
+            ref = out
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,h,kv,s,d,bs,cache_len", [
+    (1, 4, 4, 512, 64, 256, None),       # full cache
+    (2, 8, 2, 1024, 64, 256, 700),       # partial cache, GQA
+    (1, 4, 1, 512, 128, 512, 512),       # MQA single split
+    (1, 2, 2, 2048, 32, 256, 1),         # single valid token
+])
+def test_flash_decode_matches_ref(b, h, kv, s, d, bs, cache_len):
+    q = _rand((b, h, d), 1)
+    kc = _rand((b, kv, s, d), 2)
+    vc = _rand((b, kv, s, d), 3)
+    cl = s if cache_len is None else cache_len
+    ref = decode_attention_ref(jnp.asarray(q), jnp.asarray(kc),
+                               jnp.asarray(vc),
+                               cache_len=jnp.full((b,), cl, jnp.int32))
+    out = flash_decode(jnp.asarray(q), jnp.asarray(kc), jnp.asarray(vc),
+                       cache_len=cl, bs=bs, mode="interpret")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_decode_split_invariance():
+    """Split count must not change the result (merge correctness)."""
+    q, kc, vc = _rand((1, 4, 64), 1), _rand((1, 4, 1024, 64), 2), \
+        _rand((1, 4, 1024, 64), 3)
+    outs = [np.asarray(flash_decode(jnp.asarray(q), jnp.asarray(kc),
+                                    jnp.asarray(vc), cache_len=900, bs=bs,
+                                    mode="interpret"))
+            for bs in (128, 256, 1024)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)
+
+
+def test_decode_matches_flash_attention_last_token():
+    """Consistency across kernels: decode(q_last) == attention last row."""
+    b, h, s, d = 1, 2, 256, 64
+    k = _rand((b, h, s, d), 5)
+    v = _rand((b, h, s, d), 6)
+    q_full = _rand((b, h, s, d), 7)
+    full = np.asarray(flash_attention(
+        jnp.asarray(q_full), jnp.asarray(k), jnp.asarray(v), causal=True,
+        mode="interpret"))
+    dec = np.asarray(flash_decode(
+        jnp.asarray(q_full[:, :, -1]), jnp.asarray(k), jnp.asarray(v),
+        cache_len=s, bs=128, mode="interpret"))
+    np.testing.assert_allclose(dec, full[:, :, -1], rtol=2e-5, atol=2e-5)

@@ -1,0 +1,72 @@
+"""EmbeddingBag kernel vs oracle, swept over shapes/dtypes/combiners."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+def _setup(v, d, b, bag, seed=0, pad_frac=0.3, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    table = rng.standard_normal((v, d)).astype(dtype)
+    idx = rng.integers(0, v, (b, bag)).astype(np.int32)
+    idx = np.where(rng.random((b, bag)) < pad_frac, -1, idx)
+    w = rng.random((b, bag)).astype(np.float32)
+    return table, idx, w
+
+
+@pytest.mark.parametrize("v,d,b,bag,combiner", [
+    (1000, 64, 8, 16, "sum"),
+    (5000, 128, 4, 8, "mean"),
+    (128, 32, 16, 4, "sum"),
+    (10000, 16, 2, 32, "mean"),
+])
+def test_embedding_bag_matches_ref(v, d, b, bag, combiner):
+    table, idx, w = _setup(v, d, b, bag)
+    ref = embedding_bag_ref(jnp.asarray(table), jnp.asarray(idx),
+                            jnp.asarray(w), combiner)
+    out = embedding_bag(jnp.asarray(table), idx, w, combiner,
+                        mode="interpret")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_all_padding_row():
+    table, idx, w = _setup(100, 16, 4, 8)
+    idx[2] = -1
+    out = np.asarray(embedding_bag(jnp.asarray(table), idx, w, "sum",
+                                   mode="interpret"))
+    np.testing.assert_allclose(out[2], 0.0, atol=1e-7)
+    out_m = np.asarray(embedding_bag(jnp.asarray(table), idx, w, "mean",
+                                     mode="interpret"))
+    assert np.all(np.isfinite(out_m))
+
+
+def test_default_weights():
+    table, idx, _ = _setup(100, 16, 4, 8)
+    a = np.asarray(embedding_bag(jnp.asarray(table), idx, None, "sum",
+                                 mode="interpret"))
+    ones = np.ones(idx.shape, np.float32)
+    b = np.asarray(embedding_bag(jnp.asarray(table), idx, ones, "sum",
+                                 mode="interpret"))
+    np.testing.assert_allclose(a, b)
+
+
+def test_bf16_table():
+    table, idx, w = _setup(500, 64, 4, 8)
+    t16 = jnp.asarray(table, jnp.bfloat16)
+    ref = embedding_bag_ref(t16, jnp.asarray(idx), jnp.asarray(w), "sum")
+    out = embedding_bag(t16, idx, w, "sum", mode="interpret")
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_ref_mode_dispatch():
+    table, idx, w = _setup(200, 32, 4, 8)
+    a = np.asarray(embedding_bag(jnp.asarray(table), idx, w, "sum",
+                                 mode="ref"))
+    b = np.asarray(embedding_bag(jnp.asarray(table), idx, w, "sum",
+                                 mode="interpret"))
+    np.testing.assert_allclose(a, b, rtol=1e-6)

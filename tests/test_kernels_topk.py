@@ -1,0 +1,106 @@
+"""Kernel validation: fused top-k search + temporal masked scoring vs the
+pure oracles, interpret=True on CPU, swept over shapes/dtypes."""
+import numpy as np
+import pytest
+
+from repro.core.types import VALID_TO_OPEN
+from repro.kernels.topk_search.ops import topk_search
+from repro.kernels.topk_search.ref import topk_search_ref
+from repro.kernels.temporal_mask_score.ops import temporal_topk
+from repro.kernels.temporal_mask_score.ref import temporal_topk_ref
+
+
+def _rand(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(shape).astype(np.float32)
+    return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+
+
+@pytest.mark.parametrize("nq,n,d,k,bn", [
+    (1, 256, 128, 5, 128),
+    (4, 1000, 384, 10, 256),     # n not a multiple of bn -> padding path
+    (8, 512, 64, 3, 512),
+    (2, 130, 384, 7, 128),
+    (3, 64, 256, 64, 128),       # k == n
+])
+def test_topk_matches_ref(nq, n, d, k, bn):
+    q, c = _rand((nq, d), 1), _rand((n, d), 2)
+    mask = np.random.default_rng(3).random(n) > 0.3
+    s_ref, i_ref = topk_search_ref(q, c, mask, min(k, n))
+    s_k, i_k = topk_search(q, c, mask, k, bn=bn, mode="interpret")
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_ref),
+                               rtol=1e-5, atol=1e-5)
+    # indices may differ on exact score ties; verify score-equivalence at
+    # every FINITE slot (indices of -inf slots are meaningless)
+    finite = np.isfinite(np.asarray(s_ref))
+    s_at_k = np.einsum("qd,qkd->qk", q, c[np.asarray(i_k) % n])
+    s_at_r = np.einsum("qd,qkd->qk", q, c[np.asarray(i_ref) % n])
+    np.testing.assert_allclose(s_at_k[finite], s_at_r[finite],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_topk_all_masked_returns_neg_inf():
+    q, c = _rand((2, 64)), _rand((100, 64))
+    s, i = topk_search(q, c, np.zeros(100, bool), 5, mode="interpret")
+    assert np.all(np.isneginf(np.asarray(s)))
+
+
+def test_topk_ref_mode_matches_interpret():
+    q, c = _rand((3, 384), 5), _rand((700, 384), 6)
+    mask = np.ones(700, bool)
+    s_r, _ = topk_search(q, c, mask, 9, mode="ref")
+    s_i, _ = topk_search(q, c, mask, 9, mode="interpret")
+    np.testing.assert_allclose(np.asarray(s_r), np.asarray(s_i),
+                               rtol=1e-5, atol=1e-5)
+
+
+class TestTemporalKernel:
+    def _setup(self, n=600, d=384, seed=0):
+        rng = np.random.default_rng(seed)
+        c = _rand((n, d), seed)
+        base = 1_700_000_000_000_000          # realistic unix micros
+        vf = base + rng.integers(0, 10**9, n).astype(np.int64)
+        vt = np.where(rng.random(n) < 0.5, VALID_TO_OPEN,
+                      vf + rng.integers(1, 10**9, n)).astype(np.int64)
+        return c, vf, vt, base
+
+    @pytest.mark.parametrize("k,bn,offset", [(5, 128, 5 * 10**8),
+                                             (10, 256, 0),
+                                             (3, 512, 2 * 10**9)])
+    def test_matches_ref(self, k, bn, offset):
+        c, vf, vt, base = self._setup()
+        q = _rand((2, 384), 9)
+        ts = base + offset
+        s_ref, i_ref = temporal_topk_ref(q, c, vf, vt, ts, k)
+        s_k, i_k = temporal_topk(q, c, vf, vt, ts, k, bn=bn, mode="interpret")
+        np.testing.assert_allclose(np.asarray(s_k), s_ref, rtol=1e-5, atol=1e-5)
+
+    def test_no_leakage_microsecond_boundaries(self):
+        """Exactness at the validity boundary: ts == valid_from is valid,
+        ts == valid_to is NOT (half-open interval), at 1us resolution."""
+        d = 64
+        c = _rand((4, d), 3)
+        vf = np.array([100, 200, 200, 300], np.int64) + 1_700_000_000_000_000
+        vt = np.array([200, 300, 201, VALID_TO_OPEN], np.int64)
+        vt[:3] += 1_700_000_000_000_000 - np.int64(1_700_000_000_000_000)
+        vt = np.array([vf[0] + 100, vf[1] + 100, vf[2] + 1, VALID_TO_OPEN],
+                      np.int64)
+        q = _rand((1, d), 4)
+        for mode in ("ref", "interpret"):
+            s, i = temporal_topk(q, c, vf, vt, int(vf[1]), 4, mode=mode)
+            s = np.asarray(s)[0]
+            i = np.asarray(i)[0]
+            valid_rows = {j for j in range(4)
+                          if vf[j] <= vf[1] < vt[j]}
+            got = {int(i[j]) for j in range(4) if np.isfinite(s[j])}
+            assert got == valid_rows, mode
+
+    def test_future_chunks_never_returned(self):
+        c, vf, vt, base = self._setup(300)
+        q = _rand((1, 384), 11)
+        ts = int(np.quantile(vf.astype(np.float64), 0.2))
+        for mode in ("ref", "interpret"):
+            s, i = temporal_topk(q, c, vf, vt, ts, 20, mode=mode)
+            i = np.asarray(i)[0][np.isfinite(np.asarray(s)[0])]
+            assert np.all(vf[i] <= ts), mode
+            assert np.all(ts < vt[i]), mode

@@ -1,0 +1,161 @@
+"""Transformer model tests: forward shape/NaN, prefill==forward,
+decode==teacher-forcing, MoE dispatch vs dense oracle, chunked attention
+vs oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.layers import chunked_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.models.moe import (MoEConfig, moe_block, moe_block_dense_ref,
+                              moe_params)
+from repro.models.transformer import (TransformerConfig, decode_step,
+                                      forward, init_params, logits_fn,
+                                      loss_fn, prefill)
+
+TINY = TransformerConfig(
+    name="tiny", vocab=128, d_model=32, n_layers=2, n_heads=4, n_kv=2,
+    d_head=8, d_ff=64, act="swiglu", remat=False)
+
+TINY_MOE = TransformerConfig(
+    name="tiny-moe", vocab=128, d_model=32, n_layers=2, n_heads=4, n_kv=4,
+    d_head=8, d_ff=64, act="swiglu", remat=False,
+    moe=MoEConfig(n_experts=8, top_k=2, d_ff=16, n_shared=1,
+                  capacity_factor=8.0))   # drop-free for exact-match tests
+
+TINY_BIAS = TransformerConfig(
+    name="tiny-bias", vocab=128, d_model=32, n_layers=2, n_heads=4, n_kv=4,
+    d_head=8, d_ff=64, act="sq_relu", qkv_bias=True, remat=False)
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("cfg", [TINY, TINY_MOE, TINY_BIAS],
+                         ids=lambda c: c.name)
+class TestForward:
+    def test_shapes_and_finite(self, cfg, rng):
+        params = init_params(rng, cfg)
+        tokens = jax.random.randint(rng, (2, 16), 0, cfg.vocab)
+        hidden, aux = forward(params, tokens, cfg)
+        assert hidden.shape == (2, 16, cfg.d_model)
+        assert np.all(np.isfinite(np.asarray(hidden)))
+        logits = logits_fn(params, hidden)
+        assert logits.shape == (2, 16, cfg.vocab)
+
+    def test_loss_and_grads_finite(self, cfg, rng):
+        params = init_params(rng, cfg)
+        tokens = jax.random.randint(rng, (2, 16), 0, cfg.vocab)
+        batch = {"tokens": tokens, "labels": tokens}
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch, cfg)
+        assert np.isfinite(float(loss))
+        flat = jax.tree_util.tree_leaves(grads)
+        assert all(np.all(np.isfinite(np.asarray(g))) for g in flat)
+
+    def test_prefill_matches_forward(self, cfg, rng):
+        params = init_params(rng, cfg)
+        tokens = jax.random.randint(rng, (2, 12), 0, cfg.vocab)
+        hidden, _ = forward(params, tokens, cfg)
+        full_logits = logits_fn(params, hidden)
+        pre_logits, cache, clen = prefill(params, tokens, cfg,
+                                          cache_size=16)
+        np.testing.assert_allclose(np.asarray(pre_logits),
+                                   np.asarray(full_logits[:, -1]),
+                                   rtol=2e-4, atol=2e-4)
+        assert cache["k"].shape == (cfg.n_layers, 2, cfg.n_kv, 16,
+                                    cfg.d_head)
+        assert int(clen) == 12
+
+    def test_decode_matches_teacher_forcing(self, cfg, rng):
+        """Decoding token t with a cache must equal running the full
+        sequence through forward (causal consistency)."""
+        params = init_params(rng, cfg)
+        b, s_p, n_dec = 2, 8, 3
+        tokens = jax.random.randint(rng, (b, s_p + n_dec), 0, cfg.vocab)
+        _, cache, clen = prefill(params, tokens[:, :s_p], cfg,
+                                 cache_size=s_p + n_dec)
+        for i in range(n_dec):
+            step_logits, cache, clen = decode_step(
+                params, tokens[:, s_p + i: s_p + i + 1], cache, clen, cfg)
+            hidden, _ = forward(params, tokens[:, : s_p + i + 1], cfg)
+            ref_logits = logits_fn(params, hidden)[:, -1]
+            np.testing.assert_allclose(np.asarray(step_logits),
+                                       np.asarray(ref_logits),
+                                       rtol=5e-4, atol=5e-4)
+
+
+class TestChunkedAttention:
+    @pytest.mark.parametrize("sq,skv,chunk,causal", [
+        (64, 64, 16, True), (32, 128, 32, True), (64, 64, 64, False),
+        (16, 256, 128, True)])
+    def test_matches_oracle(self, sq, skv, chunk, causal):
+        key = jax.random.PRNGKey(1)
+        q = jax.random.normal(key, (2, 4, sq, 16))
+        k = jax.random.normal(jax.random.PRNGKey(2), (2, 2, skv, 16))
+        v = jax.random.normal(jax.random.PRNGKey(3), (2, 2, skv, 16))
+        out = chunked_attention(q, k, v, causal=causal, chunk=chunk)
+        ref = attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_grad_flows(self):
+        q = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 32, 8))
+        k = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 32, 8))
+        v = jax.random.normal(jax.random.PRNGKey(3), (1, 2, 32, 8))
+        g = jax.grad(lambda q: chunked_attention(q, k, v, chunk=8).sum())(q)
+        assert np.all(np.isfinite(np.asarray(g)))
+
+
+class TestMoE:
+    def test_dispatch_matches_dense_oracle(self):
+        """With generous capacity (no drops), sort-based dispatch must
+        equal the O(E) dense reference."""
+        cfg = MoEConfig(n_experts=4, top_k=2, d_ff=16, n_shared=1,
+                        capacity_factor=8.0)
+        params = moe_params(jax.random.PRNGKey(0), 24, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 24))
+        out, aux = moe_block(params, x, cfg)
+        ref = moe_block_dense_ref(params, x, cfg)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+        assert np.isfinite(float(aux))
+
+    def test_capacity_drops_bounded(self):
+        """With capacity_factor ~1, some tokens drop but output stays
+        finite and within norm bounds of the reference."""
+        cfg = MoEConfig(n_experts=4, top_k=2, d_ff=16,
+                        capacity_factor=1.0)
+        params = moe_params(jax.random.PRNGKey(0), 16, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 16))
+        out, _ = moe_block(params, x, cfg)
+        assert np.all(np.isfinite(np.asarray(out)))
+
+    def test_grads_finite(self):
+        cfg = MoEConfig(n_experts=4, top_k=2, d_ff=8, capacity_factor=2.0)
+        params = moe_params(jax.random.PRNGKey(0), 16, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16))
+
+        def f(p):
+            out, aux = moe_block(p, x, cfg)
+            return jnp.sum(out ** 2) + aux
+
+        g = jax.grad(f)(params)
+        assert all(np.all(np.isfinite(np.asarray(v)))
+                   for v in jax.tree_util.tree_leaves(g))
+
+
+class TestEmbedder:
+    def test_transformer_embedder(self):
+        from repro.models.embedder import TransformerEmbedder, MINILM_CONFIG
+        import dataclasses
+        small = dataclasses.replace(MINILM_CONFIG, n_layers=2, vocab=512)
+        emb = TransformerEmbedder(small, max_len=16)
+        vecs = emb.embed(["hello world", "hello world", "other text"])
+        assert vecs.shape == (3, 384)
+        np.testing.assert_allclose(np.linalg.norm(vecs, axis=1), 1.0,
+                                   rtol=1e-4)
+        # determinism + identical text => identical embedding
+        np.testing.assert_allclose(vecs[0], vecs[1])

@@ -1,0 +1,139 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cdc import detect_changes, positional_diff
+from repro.core.chunking import chunk_document, split_blocks
+from repro.core.hashing import chunk_hash, normalize
+from repro.core.types import VALID_TO_OPEN
+from repro.kernels.common import le_i64, lt_i64, split_i64
+
+# text strategy: paragraphs of printable words
+_word = st.text(alphabet=st.characters(min_codepoint=33, max_codepoint=126),
+                min_size=1, max_size=8)
+_para = st.lists(_word, min_size=1, max_size=12).map(" ".join)
+_doc = st.lists(_para, min_size=0, max_size=10).map("\n\n".join)
+
+
+class TestHashingProperties:
+    @given(_para)
+    @settings(max_examples=200, deadline=None)
+    def test_normalize_idempotent(self, text):
+        assert normalize(normalize(text)) == normalize(text)
+
+    @given(_para)
+    @settings(max_examples=200, deadline=None)
+    def test_hash_whitespace_case_invariant(self, text):
+        assert chunk_hash(text) == chunk_hash("  " + text.upper() + " \t")
+
+    @given(_para, _para)
+    @settings(max_examples=200, deadline=None)
+    def test_distinct_normalized_content_distinct_hash(self, a, b):
+        if normalize(a) != normalize(b):
+            assert chunk_hash(a) != chunk_hash(b)
+
+
+class TestChunkingProperties:
+    @given(_doc)
+    @settings(max_examples=100, deadline=None)
+    def test_positions_sequential(self, doc):
+        chunks = chunk_document(doc)
+        assert [c.position for c in chunks] == list(range(len(chunks)))
+
+    @given(_doc)
+    @settings(max_examples=100, deadline=None)
+    def test_chunking_deterministic(self, doc):
+        a = [c.chunk_id for c in chunk_document(doc)]
+        b = [c.chunk_id for c in chunk_document(doc)]
+        assert a == b
+
+    @given(_doc)
+    @settings(max_examples=100, deadline=None)
+    def test_blocks_nonempty(self, doc):
+        for blk in split_blocks(doc):
+            assert blk.strip()
+
+
+class TestCDCProperties:
+    @given(_doc)
+    @settings(max_examples=100, deadline=None)
+    def test_self_diff_is_empty(self, doc):
+        chunks = chunk_document(doc)
+        cs = detect_changes(chunks, [c.chunk_id for c in chunks])
+        assert not cs.new and not cs.modified and not cs.deleted
+        assert not cs.moved
+        assert len(cs.unchanged) == len(chunks)
+
+    @given(_doc, _doc)
+    @settings(max_examples=100, deadline=None)
+    def test_class_partition(self, old_doc, new_doc):
+        """Every new-version chunk lands in exactly one class."""
+        old = [c.chunk_id for c in chunk_document(old_doc)]
+        new_chunks = chunk_document(new_doc)
+        cs = detect_changes(new_chunks, old)
+        n = (len(cs.new) + len(cs.modified) + len(cs.unchanged)
+             + len(cs.moved))
+        assert n == len(new_chunks)
+
+    @given(_doc, _doc)
+    @settings(max_examples=100, deadline=None)
+    def test_positional_diff_conserves_slots(self, old_doc, new_doc):
+        old = [c.chunk_id for c in chunk_document(old_doc)]
+        new_chunks = chunk_document(new_doc)
+        close, append = positional_diff(new_chunks, old)
+        n_old, n_new = len(old), len(new_chunks)
+        # final live record count must equal the new version's chunk count
+        assert n_old - len(close) + len(append) == n_new
+        assert all(p < n_old for p in close)
+        assert all(p < n_new for p in append)
+
+    @given(_doc, _doc)
+    @settings(max_examples=60, deadline=None)
+    def test_embedding_work_bounded(self, old_doc, new_doc):
+        """to_embed never exceeds the new version's chunk count, and is
+        zero when content is a permutation (move-only update)."""
+        old = [c.chunk_id for c in chunk_document(old_doc)]
+        new_chunks = chunk_document(new_doc)
+        cs = detect_changes(new_chunks, old)
+        assert len(cs.to_embed) <= len(new_chunks)
+
+
+class TestTimestampSplitProperties:
+    @given(st.lists(st.integers(min_value=0, max_value=2**62),
+                    min_size=1, max_size=50),
+           st.integers(min_value=0, max_value=2**62))
+    @settings(max_examples=200, deadline=None)
+    def test_split_i64_comparisons_exact(self, xs, ts):
+        """Lexicographic (hi, lo) compare == int64 compare, always."""
+        import jax.numpy as jnp
+        xs_np = np.array(xs, np.int64)
+        x_hi, x_lo = split_i64(xs_np)
+        t_hi, t_lo = split_i64(np.array([ts], np.int64))
+        le = np.asarray(le_i64(jnp.asarray(x_hi),
+                               jnp.asarray(x_lo.view(np.int32)).astype(jnp.uint32),
+                               jnp.asarray(t_hi)[0],
+                               jnp.asarray(t_lo.view(np.int32)).astype(jnp.uint32)[0]))
+        np.testing.assert_array_equal(le, xs_np <= ts)
+        lt = np.asarray(lt_i64(jnp.asarray(x_hi),
+                               jnp.asarray(x_lo.view(np.int32)).astype(jnp.uint32),
+                               jnp.asarray(t_hi)[0],
+                               jnp.asarray(t_lo.view(np.int32)).astype(jnp.uint32)[0]))
+        np.testing.assert_array_equal(lt, xs_np < ts)
+
+
+class TestValiditySemantics:
+    @given(st.lists(st.tuples(st.integers(0, 100), st.integers(0, 100)),
+                    min_size=1, max_size=20),
+           st.integers(0, 100))
+    @settings(max_examples=100, deadline=None)
+    def test_half_open_interval_filter(self, pairs, ts):
+        """snapshot validity semantics: valid iff vf <= ts < vt."""
+        vf = np.array([min(a, b) for a, b in pairs], np.int64)
+        vt = np.array([max(a, b) + 1 for a, b in pairs], np.int64)
+        valid = (vf <= ts) & (ts < vt)
+        # boundary: at ts == vf valid; at ts == vt invalid
+        for i in range(len(pairs)):
+            if ts == vf[i]:
+                assert valid[i]
+            if ts == vt[i]:
+                assert not valid[i]

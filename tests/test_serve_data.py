@@ -1,0 +1,174 @@
+"""Serving substrate + data pipeline tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.corpus import generate_corpus
+from repro.data.pipeline import (Prefetcher, synthetic_lm_batches,
+                                 synthetic_recsys_batches)
+from repro.data.sampler import make_csr, sample_subgraph
+from repro.serve.batcher import Batcher
+from repro.serve.kv_cache import (CacheConfig, KVCacheArena, dequantize_kv,
+                                  quantize_kv)
+
+
+class TestCorpus:
+    def test_shapes_and_determinism(self):
+        c1 = generate_corpus(n_docs=10, n_versions=3, seed=4)
+        c2 = generate_corpus(n_docs=10, n_versions=3, seed=4)
+        assert c1.versions[0] == c2.versions[0]
+        assert len(c1.versions) == 3 and len(c1.versions[0]) == 10
+        assert len(c1.timestamps) == 3
+
+    def test_edit_rate_in_paper_band(self):
+        """Reprocessing fraction ~10-15% (paper Table II)."""
+        from repro.core.cdc import detect_changes
+        from repro.core.chunking import chunk_document
+        c = generate_corpus(n_docs=20, n_versions=4, seed=0)
+        fracs = []
+        for v in range(1, 4):
+            for d in c.doc_ids():
+                new = chunk_document(c.versions[v][d])
+                old = [ch.chunk_id for ch in
+                       chunk_document(c.versions[v - 1][d])]
+                cs = detect_changes(new, old)
+                fracs.append(cs.reprocess_fraction)
+        mean = float(np.mean(fracs))
+        assert 0.08 <= mean <= 0.20, mean
+
+    def test_edit_log_matches_cdc(self):
+        """The generator's ground-truth log agrees with CDC detection."""
+        from repro.core.cdc import detect_changes
+        from repro.core.chunking import chunk_document
+        c = generate_corpus(n_docs=8, n_versions=3, seed=1)
+        for v in range(1, 3):
+            logs = {l.doc_id: l for l in c.edit_logs[v]}
+            for d in c.doc_ids():
+                new = chunk_document(c.versions[v][d])
+                old = [ch.chunk_id for ch in
+                       chunk_document(c.versions[v - 1][d])]
+                cs = detect_changes(new, old)
+                detected_mod = {ch.position for ch in cs.modified}
+                expected_mod = set(logs[d].modified)
+                assert detected_mod == expected_mod, (d, v)
+
+    def test_fact_values_change(self):
+        c = generate_corpus(n_docs=5, n_versions=4, seed=2)
+        f = c.facts[0]
+        vals = [f.value_at_version(v) for v in range(4)]
+        assert len(set(vals)) >= 2               # at least one change
+
+
+class TestSampler:
+    def test_fanout_subgraph(self):
+        rng = np.random.default_rng(0)
+        edges = rng.integers(0, 200, (2, 2000)).astype(np.int64)
+        indptr, indices = make_csr(200, edges)
+        seeds = np.arange(8)
+        sg = sample_subgraph(indptr, indices, seeds, (5, 3), rng)
+        assert sg.edge_index.shape == (2, 8 * 5 + 8 * 5 * 3)
+        assert sg.node_ids.shape == (8 + 40 + 120,)
+        assert sg.seed_mask[:8].all() and not sg.seed_mask[8:].any()
+        # every real edge points from a later layer toward its parent
+        valid = sg.edge_dist < 10.0
+        assert (sg.edge_index[0][valid] > sg.edge_index[1][valid]).all() \
+            or valid.sum() == 0
+
+    def test_padded_edges_beyond_cutoff(self):
+        rng = np.random.default_rng(0)
+        edges = np.zeros((2, 2), np.int64)       # nearly edgeless graph
+        indptr, indices = make_csr(10, edges)
+        sg = sample_subgraph(indptr, indices, np.arange(4), (3,), rng,
+                             cutoff=10.0)
+        pad = sg.edge_dist >= 10.0
+        assert pad.sum() >= sg.edge_dist.shape[0] - 2
+
+
+class TestKVCache:
+    def _cfg(self, quant=False):
+        return CacheConfig(n_layers=2, n_kv=2, d_head=8, max_seq=16,
+                           max_batch=4, quantize_int8=quant)
+
+    def test_slot_lifecycle(self):
+        arena = KVCacheArena(self._cfg())
+        slots = [arena.claim() for _ in range(4)]
+        assert arena.claim() is None             # full
+        arena.release(slots[1])
+        assert arena.claim() == slots[1]
+
+    def test_prefill_roundtrip(self):
+        arena = KVCacheArena(self._cfg())
+        slot = arena.claim()
+        k = jnp.ones((2, 2, 5, 8)) * 0.5
+        arena.write_prefill(slot, k, k * 2)
+        kk, vv = arena.dequantized([slot])
+        np.testing.assert_allclose(np.asarray(kk[:, 0, :, :5]), 0.5)
+        assert arena.lengths[slot] == 5
+
+    def test_int8_quantization_error(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((2, 2, 8, 8)).astype(np.float32))
+        q, s = quantize_kv(x)
+        x2 = dequantize_kv(q, s, jnp.float32)
+        err = np.abs(np.asarray(x2 - x)).max()
+        assert err < np.abs(np.asarray(x)).max() / 100
+
+    def test_int8_memory_halves(self):
+        # realistic head dim: per-vector f32 scale amortizes to 1/32
+        cfg16 = CacheConfig(n_layers=2, n_kv=2, d_head=128, max_seq=16,
+                            max_batch=4, quantize_int8=False)
+        cfg8 = CacheConfig(n_layers=2, n_kv=2, d_head=128, max_seq=16,
+                           max_batch=4, quantize_int8=True)
+        a16, a8 = KVCacheArena(cfg16), KVCacheArena(cfg8)
+        assert a8.memory_bytes() < 0.55 * a16.memory_bytes()
+
+
+class TestBatcher:
+    def test_batching_and_buckets(self):
+        calls = []
+
+        def run(payloads):
+            calls.append(len(payloads))
+            return [p * 2 for p in payloads]
+
+        b = Batcher(run, max_batch=4, bucket_fn=lambda p: p % 2)
+        reqs = [b.submit(i) for i in range(10)]
+        b.drain()
+        assert all(r.done for r in reqs)
+        assert all(r.result == r.payload * 2 for r in reqs)
+        assert max(calls) <= 4
+
+    def test_hedging_triggers_on_straggler(self):
+        import time as _t
+        state = {"n": 0}
+
+        def run(payloads):
+            state["n"] += 1
+            if state["n"] == 5:
+                _t.sleep(0.2)                    # simulated straggler
+            else:
+                _t.sleep(0.01)
+            return payloads
+
+        b = Batcher(run, max_batch=1, hedge_factor=3.0)
+        for i in range(8):
+            b.submit(i)
+        b.drain()
+        assert b.stats["hedges"] >= 1
+
+
+class TestPipeline:
+    def test_prefetcher(self):
+        def gen():
+            for i in range(5):
+                yield i
+
+        assert list(Prefetcher(gen())) == [0, 1, 2, 3, 4]
+
+    def test_synthetic_streams(self):
+        b = next(synthetic_lm_batches(100, 4, 8))
+        assert b["tokens"].shape == (4, 8)
+        assert b["tokens"].min() >= 4 and b["tokens"].max() < 100
+        r = next(synthetic_recsys_batches(5, 50, 8))
+        assert r["ids"].shape == (8, 5)
+        assert (r["ids"] < 250).all()

@@ -1,0 +1,211 @@
+"""End-to-end LiveVectorLake behaviour: ingest -> dual-tier -> query,
+WAL crash recovery, temporal leakage prevention (paper §III, §V)."""
+import numpy as np
+import pytest
+
+from repro.core.store import FaultInjected, LiveVectorLake
+from repro.core.types import VALID_TO_OPEN
+
+DIM = 64
+
+V1 = """The quarterly revenue was 10 million dollars.
+
+Security policy requires two factor authentication.
+
+The incident response time target is four hours."""
+
+V2 = """The quarterly revenue was 12 million dollars.
+
+Security policy requires two factor authentication.
+
+The incident response time target is four hours."""
+
+V3 = """The quarterly revenue was 12 million dollars.
+
+Security policy requires hardware security keys for all staff.
+
+The incident response time target is two hours.
+
+A new disaster recovery site was opened in Frankfurt."""
+
+
+@pytest.fixture
+def store(tmp_path):
+    return LiveVectorLake(str(tmp_path / "lvl"), dim=DIM)
+
+
+class TestIngestCDC:
+    def test_initial_ingest(self, store):
+        s = store.ingest("doc1", V1, ts=1_000_000)
+        assert s.n_new == 3 and s.n_embedded == 3
+        assert s.reprocess_fraction == 1.0
+        assert len(store.hot) == 3
+
+    def test_selective_reprocessing(self, store):
+        store.ingest("doc1", V1, ts=1_000_000)
+        s2 = store.ingest("doc1", V2, ts=2_000_000)
+        assert s2.n_modified == 1 and s2.n_unchanged == 2
+        assert s2.n_embedded == 1                      # only the changed chunk
+        assert abs(s2.reprocess_fraction - 1 / 3) < 1e-9
+        s3 = store.ingest("doc1", V3, ts=3_000_000)
+        assert s3.n_modified == 2 and s3.n_new == 1 and s3.n_unchanged == 1
+
+    def test_cross_document_dedup(self, store):
+        store.ingest("doc1", V1, ts=1_000_000)
+        s = store.ingest("doc2", V1, ts=2_000_000)     # same content, new doc
+        assert s.n_new == 3
+        assert s.n_embedded == 0 and s.n_dedup_hits == 3   # zero embed ops
+
+    def test_hot_tier_only_active(self, store):
+        store.ingest("doc1", V1, ts=1_000_000)
+        store.ingest("doc1", V2, ts=2_000_000)
+        store.ingest("doc1", V3, ts=3_000_000)
+        assert len(store.hot) == 4                     # V3 has 4 chunks
+        st = store.stats()
+        assert st["cold"]["total_records"] == 3 + 1 + 3   # all versions kept
+        assert st["hot_fraction_of_history"] < 1.0
+
+    def test_document_truncation_deletes(self, store):
+        store.ingest("doc1", V3, ts=1_000_000)
+        store.ingest("doc1", V1, ts=2_000_000)         # 4 chunks -> 3
+        assert len(store.hot) == 3
+
+
+class TestQueries:
+    def test_current_query_hot_tier(self, store):
+        store.ingest("doc1", V1, ts=1_000_000)
+        res = store.query("quarterly revenue dollars", k=2)
+        assert res and res[0].tier == "hot"
+        assert "revenue" in res[0].text
+
+    def test_current_reflects_update(self, store):
+        store.ingest("doc1", V1, ts=1_000_000)
+        store.ingest("doc1", V2, ts=2_000_000)
+        res = store.query("quarterly revenue", k=1)
+        assert "12 million" in res[0].text
+
+    def test_historical_query_returns_old_version(self, store):
+        store.ingest("doc1", V1, ts=1_000_000)
+        store.ingest("doc1", V2, ts=2_000_000)
+        res = store.query("quarterly revenue", k=1, at=1_500_000)
+        assert res[0].tier == "cold"
+        assert "10 million" in res[0].text             # the historical truth
+
+    def test_temporal_leakage_prevention(self, store):
+        """Chunks created later must NEVER surface at an earlier ts."""
+        store.ingest("doc1", V1, ts=1_000_000)
+        store.ingest("doc1", V3, ts=2_000_000)
+        res = store.query("disaster recovery Frankfurt", k=5, at=1_500_000)
+        assert all("frankfurt" not in r.text.lower() for r in res)
+        res_now = store.query("disaster recovery Frankfurt", k=5)
+        assert any("Frankfurt" in r.text for r in res_now)
+
+    def test_deleted_chunk_not_in_history_after(self, store):
+        store.ingest("doc1", V3, ts=1_000_000)         # has Frankfurt para
+        store.ingest("doc1", V1, ts=2_000_000)         # removed
+        res = store.query("disaster recovery", k=5, at=2_500_000)
+        assert all("frankfurt" not in r.text.lower() for r in res)
+        res_old = store.query("disaster recovery", k=5, at=1_500_000)
+        assert any("Frankfurt" in r.text for r in res_old)
+
+    def test_comparative_window(self, store):
+        store.ingest("doc1", V1, ts=1_000_000)
+        store.ingest("doc1", V2, ts=2_000_000)
+        res = store.query("quarterly revenue", k=5,
+                          window=(500_000, 2_500_000))
+        texts = {r.text for r in res if "revenue" in r.text}
+        assert len(texts) == 2                         # both versions visible
+
+    def test_text_temporal_parsing(self, store):
+        from repro.core.temporal import classify_query
+        i = classify_query("security policy as of 2025-03-01")
+        assert i.mode == "historical" and i.at is not None
+        i = classify_query("revenue between 2025-01-01 and 2025-06-01")
+        assert i.mode == "comparative"
+        assert classify_query("plain query").mode == "current"
+
+
+class TestFaultTolerance:
+    def test_crash_after_cold_rolls_forward(self, tmp_path):
+        root = str(tmp_path / "lvl")
+        store = LiveVectorLake(root, dim=DIM)
+        store.ingest("doc1", V1, ts=1_000_000)
+        with pytest.raises(FaultInjected):
+            store.ingest("doc1", V2, ts=2_000_000, fail_after="cold")
+        # restart
+        store2 = LiveVectorLake(root, dim=DIM)
+        assert not store2.wal.pending()
+        res = store2.query("quarterly revenue", k=1)
+        assert "12 million" in res[0].text             # V2 is visible
+        assert len(store2.hot) == 3
+
+    def test_crash_after_intent_aborts(self, tmp_path):
+        root = str(tmp_path / "lvl")
+        store = LiveVectorLake(root, dim=DIM)
+        store.ingest("doc1", V1, ts=1_000_000)
+        with pytest.raises(FaultInjected):
+            store.ingest("doc1", V2, ts=2_000_000, fail_after="intent")
+        store2 = LiveVectorLake(root, dim=DIM)
+        assert not store2.wal.pending()
+        res = store2.query("quarterly revenue", k=1)
+        assert "10 million" in res[0].text             # V2 never happened
+
+    def test_compensation_policy(self, tmp_path):
+        root = str(tmp_path / "lvl")
+        store = LiveVectorLake(root, dim=DIM)
+        store.ingest("doc1", V1, ts=1_000_000)
+        with pytest.raises(FaultInjected):
+            store.ingest("doc1", V2, ts=2_000_000, fail_after="cold")
+        report = store.reconcile(policy="compensate")
+        assert report["compensated"] == 1
+        # the compensated commit is invisible to readers
+        snap = store.cold.snapshot()
+        texts = " ".join(snap.texts)
+        assert "12 million" not in texts
+
+    def test_hot_tier_rebuild_deterministic(self, tmp_path):
+        root = str(tmp_path / "lvl")
+        store = LiveVectorLake(root, dim=DIM)
+        store.ingest("doc1", V1, ts=1_000_000)
+        store.ingest("doc1", V3, ts=2_000_000)
+        store.ingest("doc2", V2, ts=3_000_000)
+        before = sorted(store.hot._by_key)
+        store2 = LiveVectorLake(root, dim=DIM)
+        assert sorted(store2.hot._by_key) == before
+        q = "incident response time"
+        r1, r2 = store.query(q, k=3), store2.query(q, k=3)
+        assert [x.chunk_id for x in r1] == [x.chunk_id for x in r2]
+
+    def test_wal_torn_line_recovery(self, tmp_path):
+        root = str(tmp_path / "lvl")
+        store = LiveVectorLake(root, dim=DIM)
+        store.ingest("doc1", V1, ts=1_000_000)
+        with open(store.wal._path, "a") as f:
+            f.write('{"txn": 99, "state": "INT')        # torn write
+        store2 = LiveVectorLake(root, dim=DIM)           # must not crash
+        assert len(store2.hot) == 3
+
+
+class TestAuditTrail:
+    def test_history_positions(self, store):
+        store.ingest("doc1", V1, ts=1_000_000)
+        store.ingest("doc1", V2, ts=2_000_000)
+        hist = store.cold.history("doc1")
+        pos0 = [h for h in hist if h["position"] == 0]
+        assert len(pos0) == 2                          # original + superseded
+        assert pos0[0]["status"] == "superseded"
+        assert pos0[0]["valid_to"] == 2_000_000
+        assert pos0[1]["status"] == "active"
+        assert pos0[1]["valid_from"] == 2_000_000
+
+    def test_validity_intervals_contiguous(self, store):
+        store.ingest("doc1", V1, ts=1_000_000)
+        store.ingest("doc1", V2, ts=2_000_000)
+        store.ingest("doc1", V3, ts=3_000_000)
+        hist = store.cold.history("doc1")
+        for pos in range(3):
+            recs = sorted((h for h in hist if h["position"] == pos),
+                          key=lambda h: h["valid_from"])
+            for a, b in zip(recs, recs[1:]):
+                assert a["valid_to"] == b["valid_from"]   # no gaps, no overlap
+            assert recs[-1]["valid_to"] == VALID_TO_OPEN

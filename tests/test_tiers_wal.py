@@ -1,0 +1,171 @@
+"""Focused unit tests: hot-tier slot mechanics, WAL state machine,
+cold-tier snapshot isolation, embedding cache."""
+import numpy as np
+import pytest
+
+from repro.core.cold_tier import ColdTier
+from repro.core.embedder import CachingEmbedder, HashProjectionEmbedder
+from repro.core.hot_tier import HotTier
+from repro.core.types import ChunkRecord, VALID_TO_OPEN
+from repro.core.wal import (ABORT, COLD_OK, COMMIT, HOT_OK, INTENT,
+                            WriteAheadLog)
+
+
+def _rec(doc, pos, text, ts=1000, dim=8, seed=0):
+    rng = np.random.default_rng(seed + pos)
+    e = rng.standard_normal(dim).astype(np.float32)
+    e /= np.linalg.norm(e)
+    return ChunkRecord(chunk_id=f"h{doc}{pos}", doc_id=doc, position=pos,
+                       valid_from=ts, text=text, embedding=e)
+
+
+class TestHotTier:
+    def test_grow_beyond_capacity(self):
+        ht = HotTier(dim=8, capacity=4)
+        ht.insert([_rec("d", i, f"t{i}") for i in range(10)])
+        assert len(ht) == 10 and ht.capacity >= 10
+
+    def test_replace_same_key_reuses_slot(self):
+        ht = HotTier(dim=8, capacity=8)
+        ht.insert([_rec("d", 0, "old")])
+        ht.insert([_rec("d", 0, "new", seed=9)])
+        assert len(ht) == 1
+        res = ht.search(ht._emb[ht._by_key[("d", 0)]], k=1)[0]
+        assert res[0].text == "new"
+
+    def test_delete_frees_and_masks(self):
+        ht = HotTier(dim=8, capacity=8)
+        ht.insert([_rec("d", i, f"t{i}") for i in range(3)])
+        q = ht._emb[ht._by_key[("d", 1)]].copy()
+        ht.delete([("d", 1)])
+        assert len(ht) == 2
+        for r in ht.search(q, k=3)[0]:
+            assert r.position != 1               # deleted never returned
+
+    def test_search_empty(self):
+        ht = HotTier(dim=8)
+        assert ht.search(np.ones(8, np.float32), k=3) == [[]]
+
+    def test_clear(self):
+        ht = HotTier(dim=8, capacity=4)
+        ht.insert([_rec("d", 0, "x")])
+        ht.clear()
+        assert len(ht) == 0 and ht.capacity == 4
+
+
+class TestWALStateMachine:
+    def test_happy_path(self, tmp_path):
+        wal = WriteAheadLog(str(tmp_path / "wal.jsonl"))
+        t = wal.begin("ingest", {"doc": "d"})
+        for s in (COLD_OK, HOT_OK, COMMIT):
+            wal.mark(t, s)
+        assert wal.pending() == []
+
+    def test_no_backwards_transition(self, tmp_path):
+        wal = WriteAheadLog(str(tmp_path / "wal.jsonl"))
+        t = wal.begin("ingest")
+        wal.mark(t, HOT_OK)
+        with pytest.raises(ValueError):
+            wal.mark(t, COLD_OK)
+
+    def test_unknown_txn(self, tmp_path):
+        wal = WriteAheadLog(str(tmp_path / "wal.jsonl"))
+        with pytest.raises(KeyError):
+            wal.mark(99, COMMIT)
+
+    def test_restart_recovers_states(self, tmp_path):
+        p = str(tmp_path / "wal.jsonl")
+        wal = WriteAheadLog(p)
+        t1 = wal.begin("a")
+        t2 = wal.begin("b", {"k": 1})
+        wal.mark(t1, COLD_OK)
+        wal.mark(t2, COMMIT)
+        wal2 = WriteAheadLog(p)
+        assert wal2.state(t1) == COLD_OK and wal2.state(t2) == COMMIT
+        assert [t for t, _, _ in wal2.pending()] == [t1]
+        assert wal2.payload(t2) == {"k": 1}
+        t3 = wal2.begin("c")
+        assert t3 > t2                            # ids keep increasing
+
+    def test_compaction_keeps_pending(self, tmp_path):
+        p = str(tmp_path / "wal.jsonl")
+        wal = WriteAheadLog(p)
+        t1 = wal.begin("a")
+        wal.mark(t1, COMMIT)
+        t2 = wal.begin("b")
+        wal.truncate_committed()
+        wal3 = WriteAheadLog(p)
+        assert wal3.state(t1) is None
+        assert wal3.state(t2) == INTENT
+
+
+class TestColdTierIsolation:
+    def test_uncommitted_invisible(self, tmp_path):
+        ct = ColdTier(str(tmp_path), dim=8)
+        ct.commit([_rec("d", 0, "visible", ts=100)], [], ts=100)
+        ct.commit([_rec("d", 1, "hidden", ts=200)], [], ts=200,
+                  uncommitted=True)
+        snap = ct.snapshot()
+        assert snap.texts == ["visible"]
+        ct.mark_committed(2)
+        assert len(ct.snapshot()) == 2
+
+    def test_snapshot_at_version(self, tmp_path):
+        ct = ColdTier(str(tmp_path), dim=8)
+        ct.commit([_rec("d", 0, "v1", ts=100)], [], ts=100)
+        ct.commit([_rec("d", 0, "v2", ts=200)],
+                  [{"doc_id": "d", "position": 0, "closed_at": 200,
+                    "status": "superseded"}], ts=200)
+        s1 = ct.snapshot(version=1)
+        assert s1.texts == ["v1"]
+        s2 = ct.snapshot(version=2)
+        assert s2.texts == ["v2"]
+
+    def test_corrupt_segment_detected(self, tmp_path):
+        import os
+        ct = ColdTier(str(tmp_path), dim=8)
+        ct.commit([_rec("d", 0, "x", ts=100)], [], ts=100)
+        seg_dir = os.path.join(str(tmp_path), "segments")
+        seg = os.path.join(seg_dir, os.listdir(seg_dir)[0])
+        with open(seg, "r+b") as f:
+            f.seek(-1, 2)
+            last = f.read(1)
+            f.seek(-1, 2)
+            f.write(bytes([last[0] ^ 0xFF]))     # guaranteed bit flip
+        with pytest.raises(IOError, match="checksum"):
+            ct.snapshot()
+
+
+class TestEmbeddingCache:
+    def test_dedup_across_calls(self):
+        ce = CachingEmbedder(HashProjectionEmbedder(dim=16))
+        a = ce.embed_chunks(["h1", "h2"], ["text one", "text two"])
+        b = ce.embed_chunks(["h1", "h3"], ["text one", "text three"])
+        assert ce.hits == 1 and ce.misses == 3
+        np.testing.assert_array_equal(a[0], b[0])
+
+    def test_warm_preseeds(self):
+        ce = CachingEmbedder(HashProjectionEmbedder(dim=16))
+        ce.warm(["hx"], np.ones((1, 16), np.float32))
+        out = ce.embed_chunks(["hx"], ["whatever"])
+        assert ce.hits == 1 and ce.misses == 0
+        np.testing.assert_array_equal(out[0], np.ones(16, np.float32))
+
+
+class TestRAGEngine:
+    def test_end_to_end_generation(self, tmp_path):
+        from repro.core.store import LiveVectorLake
+        from repro.models.transformer import TransformerConfig
+        from repro.serve.engine import RAGEngine
+        store = LiveVectorLake(str(tmp_path / "s"), dim=64)
+        store.ingest("d", "The API limit is 500 requests.", ts=1000)
+        store.ingest("d", "The API limit is 900 requests.", ts=2000)
+        cfg = TransformerConfig(name="t", vocab=512, d_model=32,
+                                n_layers=1, n_heads=2, n_kv=2, d_head=16,
+                                d_ff=64, act="swiglu", remat=False)
+        eng = RAGEngine(store, cfg, max_prompt=64)
+        now = eng.answer("API limit", k=1, max_new_tokens=3)
+        old = eng.answer("API limit", k=1, at=1500, max_new_tokens=3)
+        assert "900" in now.retrieved[0].text
+        assert "500" in old.retrieved[0].text
+        assert len(now.token_ids) == 3
