@@ -19,7 +19,7 @@ import time
 
 def main() -> None:
     from . import (change_detection, query_latency, search_scaling,
-                   storage_efficiency, temporal_accuracy,
+                   storage_efficiency, streaming_churn, temporal_accuracy,
                    update_performance)
     suites = [
         ("update_performance", update_performance),
@@ -28,6 +28,7 @@ def main() -> None:
         ("storage_efficiency", storage_efficiency),
         ("temporal_accuracy", temporal_accuracy),
         ("search_scaling", search_scaling),
+        ("streaming_churn", streaming_churn),
     ]
     print("name,value,notes")
     failures = 0

@@ -1,9 +1,12 @@
-"""Ablation: hot-tier search scaling — exact fused top-k scan vs IVF.
+"""Ablation: hot-tier search scaling — exact fused top-k scan vs raw IVF
+vs the LSM-style segmented index (DESIGN.md §2, §7).
 
-Quantifies the DESIGN.md §2 decision to replace HNSW with an MXU scan:
-exact search stays sub-linear-enough at hot-tier sizes (matmul-bound),
-and the IVF route (nprobe partitions) provides the sub-linear path at
-larger corpora with measured recall.
+Quantifies two decisions: (1) replacing HNSW with an MXU scan — exact
+search stays sub-linear-enough at hot-tier sizes (matmul-bound); (2) the
+segmented index as the streaming-scale engine — memtable exact + IVF
+centroid routing over base segments must hold recall@10 >= 0.95 while
+scanning < 30% of the corpus at >= 20k chunks (the acceptance bar for
+the streaming hot tier).
 
   PYTHONPATH=src python -m benchmarks.search_scaling
 """
@@ -12,26 +15,40 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.ivf import IVFIndex
+from repro.core.types import ChunkRecord
+from repro.index.lsm import SegmentedIndex
 from repro.kernels.topk_search.ops import topk_search
 
 from .common import Timer, percentiles
 
 
-def run(sizes=(2_000, 10_000, 50_000), dim: int = 384, k: int = 10,
-        n_queries: int = 20, seed: int = 0) -> list[dict]:
+def make_corpus(n: int, dim: int, n_queries: int, seed: int = 0,
+                n_clusters: int = 64):
+    """Clustered corpus (text embeddings are strongly clustered; uniform
+    random is IVF's degenerate worst case) + near-duplicate queries."""
     rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((n_clusters, dim)).astype(np.float32)
+    assign = rng.integers(0, n_clusters, n)
+    corpus = centers[assign] + \
+        0.3 * rng.standard_normal((n, dim)).astype(np.float32)
+    corpus /= np.linalg.norm(corpus, axis=1, keepdims=True)
+    queries = corpus[rng.choice(n, n_queries)] + \
+        0.05 * rng.standard_normal((n_queries, dim)).astype(np.float32)
+    queries /= np.linalg.norm(queries, axis=1, keepdims=True)
+    return corpus, queries
+
+
+def _records(corpus: np.ndarray) -> list[ChunkRecord]:
+    return [ChunkRecord(chunk_id=f"c{i}", doc_id="bench", position=i,
+                        valid_from=1, text=f"row {i}", embedding=corpus[i])
+            for i in range(corpus.shape[0])]
+
+
+def run(sizes=(2_000, 10_000, 20_000, 50_000), dim: int = 384, k: int = 10,
+        n_queries: int = 20, seed: int = 0) -> list[dict]:
     out = []
     for n in sizes:
-        # clustered corpus (text embeddings are strongly clustered;
-        # uniform random is IVF's degenerate worst case)
-        n_clusters = 64
-        centers = rng.standard_normal((n_clusters, dim)).astype(np.float32)
-        assign = rng.integers(0, n_clusters, n)
-        corpus = centers[assign] + \
-            0.3 * rng.standard_normal((n, dim)).astype(np.float32)
-        corpus /= np.linalg.norm(corpus, axis=1, keepdims=True)
-        queries = corpus[rng.choice(n, n_queries)] + \
-            0.05 * rng.standard_normal((n_queries, dim)).astype(np.float32)
+        corpus, queries = make_corpus(n, dim, n_queries, seed)
         mask = np.ones(n, bool)
 
         # exact fused scan (jit warm-up then measure)
@@ -43,6 +60,7 @@ def run(sizes=(2_000, 10_000, 50_000), dim: int = 384, k: int = 10,
                 np.asarray(s)
             lat.append(t.elapsed * 1e3)
         exact_ms = percentiles(lat)["p50"]
+        exact_idx = np.argsort(-(queries @ corpus.T), axis=1)[:, :k]
 
         # IVF (sqrt(n) centroids, nprobe 8)
         ivf = IVFIndex(n_centroids=int(np.sqrt(n)))
@@ -57,9 +75,31 @@ def run(sizes=(2_000, 10_000, 50_000), dim: int = 384, k: int = 10,
         recall = ivf.recall_at_k(queries, k=k, nprobe=8)
         _, _, stats = ivf.search(queries, k=k, nprobe=8)
 
+        # segmented index: streamed in through the memtable, sealed +
+        # compacted along the way — the serving configuration
+        seg = SegmentedIndex(dim, mem_capacity=4096, nprobe=8,
+                             ivf_min_rows=1024, seed=seed)
+        seg.insert(_records(corpus))
+        seg.search(queries[:1], k=k)          # warm-up
+        lat_seg = []
+        for q in queries:
+            with Timer() as t:
+                seg.search(q[None], k=k)
+            lat_seg.append(t.elapsed * 1e3)
+        seg_ms = percentiles(lat_seg)["p50"]
+        res = seg.search(queries, k=k)
+        hits = sum(len({r.position for r in res[qi]} & set(exact_idx[qi]))
+                   for qi in range(n_queries))
+        seg_stats = seg.stats()
+
         out.append({"n": n, "exact_p50_ms": exact_ms,
                     "ivf_p50_ms": ivf_ms, "ivf_recall": recall,
-                    "ivf_scan_fraction": stats.fraction_scanned})
+                    "ivf_scan_fraction": stats.fraction_scanned,
+                    "seg_p50_ms": seg_ms,
+                    "seg_recall": hits / (n_queries * k),
+                    "seg_scan_fraction": seg_stats["avg_fraction_scanned"],
+                    "seg_segments": seg_stats["segments"],
+                    "seg_write_amp": seg_stats["write_amplification"]})
     return out
 
 
@@ -72,6 +112,16 @@ def main() -> list[tuple]:
                      r["ivf_p50_ms"],
                      f"recall@10={r['ivf_recall']:.2f} "
                      f"scan={100*r['ivf_scan_fraction']:.0f}%"))
+        rows.append((f"search_scaling/n{r['n']}/segmented_p50_ms",
+                     r["seg_p50_ms"],
+                     f"recall@10={r['seg_recall']:.2f} "
+                     f"scan={100*r['seg_scan_fraction']:.0f}% "
+                     f"segments={r['seg_segments']} "
+                     f"wamp={r['seg_write_amp']:.2f}"))
+        rows.append((f"search_scaling/n{r['n']}/segmented_recall_at_10",
+                     r["seg_recall"],
+                     f"target >=0.95 at scan<30% (got "
+                     f"{100*r['seg_scan_fraction']:.0f}%)"))
     return rows
 
 

@@ -1,0 +1,161 @@
+"""Streaming churn: query latency and recall UNDER a sustained update
+stream (DESIGN.md §7.6).
+
+The flat hot tier re-synced its whole device copy on every write; the
+segmented index must instead absorb a continuous insert/overwrite/delete
+stream while queries stay servable — seals and merges happen off the
+query path and never rebuild the full index. This benchmark drives a
+churn workload and measures, interleaved with the writes:
+
+  - query p50/p95 latency over the whole run, and separately for the
+    batches in which a compaction (seal or merge) actually fired — the
+    "no full-index rebuild on the write path" acceptance check;
+  - the worst single write-batch stall (includes compaction work);
+  - final recall@10 vs a brute-force scan over the live ground truth;
+  - write amplification and segment-count evolution.
+
+  PYTHONPATH=src python -m benchmarks.streaming_churn
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import ChunkRecord
+from repro.index.lsm import SegmentedIndex
+
+from .common import Timer, percentiles
+
+
+def _vec(rng, dim):
+    v = rng.standard_normal(dim).astype(np.float32)
+    return v / np.linalg.norm(v)
+
+
+def run(dim: int = 128, n_base: int = 6_000, n_batches: int = 120,
+        batch_size: int = 50, mem_capacity: int = 1024, k: int = 10,
+        seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((32, dim)).astype(np.float32)
+
+    def clustered(n):
+        v = centers[rng.integers(0, 32, n)] + \
+            0.3 * rng.standard_normal((n, dim)).astype(np.float32)
+        return v / np.linalg.norm(v, axis=1, keepdims=True)
+
+    idx = SegmentedIndex(dim, mem_capacity=mem_capacity, nprobe=8,
+                         ivf_min_rows=512, seed=seed)
+    truth: dict[tuple[str, int], np.ndarray] = {}
+
+    def ingest(recs):
+        idx.insert(recs)
+        for r in recs:
+            truth[(r.doc_id, r.position)] = np.asarray(r.embedding)
+
+    base = clustered(n_base)
+    ingest([ChunkRecord(chunk_id=f"b{i}", doc_id="doc", position=i,
+                        valid_from=1, text=f"base {i}", embedding=base[i])
+            for i in range(n_base)])
+
+    next_pos = n_base
+    q_lat, q_lat_compacting, write_stall = [], [], []
+    ticks = 0
+    for b in range(n_batches):
+        seals0 = idx.cstats.seals + idx.cstats.merges
+        recs, dels = [], []
+        fresh = clustered(batch_size)
+        for j in range(batch_size):
+            ticks += 1
+            r = rng.random()
+            if r < 0.5 or not truth:                    # new insert
+                recs.append(ChunkRecord(
+                    chunk_id=f"n{b}-{j}", doc_id="doc", position=next_pos,
+                    valid_from=ticks, text=f"new {b} {j}",
+                    embedding=fresh[j]))
+                next_pos += 1
+            elif r < 0.8:                               # overwrite existing
+                key = ("doc", int(rng.integers(0, next_pos)))
+                if key in truth:
+                    recs.append(ChunkRecord(
+                        chunk_id=f"u{b}-{j}", doc_id="doc",
+                        position=key[1], valid_from=ticks,
+                        text=f"upd {b} {j}", embedding=fresh[j]))
+                else:
+                    recs.append(ChunkRecord(
+                        chunk_id=f"n{b}-{j}", doc_id="doc",
+                        position=next_pos, valid_from=ticks,
+                        text=f"new {b} {j}", embedding=fresh[j]))
+                    next_pos += 1
+            else:                                       # delete
+                key = ("doc", int(rng.integers(0, next_pos)))
+                if key in truth:
+                    dels.append(key)
+        with Timer() as tw:
+            ingest(recs)
+            if dels:
+                idx.delete(dels)
+                for key in dels:
+                    truth.pop(key, None)
+        write_stall.append(tw.elapsed * 1e3)
+        compacted = (idx.cstats.seals + idx.cstats.merges) > seals0
+
+        # queries interleaved with the stream — must stay servable
+        qs = clustered(3)
+        for q in qs:
+            with Timer() as tq:
+                idx.search(q, k=k)
+            q_lat.append(tq.elapsed * 1e3)
+            if compacted:
+                q_lat_compacting.append(tq.elapsed * 1e3)
+
+    # final recall vs brute force over the live ground truth
+    keys = list(truth.keys())
+    mat = np.stack([truth[key] for key in keys])
+    qs = clustered(30)
+    exact = np.argsort(-(qs @ mat.T), axis=1)[:, :k]
+    res = idx.search(qs, k=k)
+    hits = 0
+    for qi in range(len(qs)):
+        want = {keys[j] for j in exact[qi]}
+        hits += len({(r.doc_id, r.position) for r in res[qi]} & want)
+    recall = hits / (len(qs) * k)
+
+    st = idx.stats()
+    return {
+        "query_p50_ms": percentiles(q_lat)["p50"],
+        "query_p95_ms": percentiles(q_lat)["p95"],
+        "query_p95_during_compaction_ms":
+            percentiles(q_lat_compacting)["p95"] if q_lat_compacting
+            else 0.0,
+        "n_compacting_batches": len(q_lat_compacting) // 3,
+        "max_write_stall_ms": max(write_stall),
+        "recall_at_10": recall,
+        "live_rows": len(idx),
+        "segments": st["segments"],
+        "write_amplification": st["write_amplification"],
+        "tombstones_purged": st["tombstones_purged"],
+        "avg_fraction_scanned": st["avg_fraction_scanned"],
+    }
+
+
+def main() -> list[tuple]:
+    r = run()
+    note = (f"segments={r['segments']} rows={r['live_rows']} "
+            f"wamp={r['write_amplification']:.2f}")
+    return [
+        ("streaming_churn/query_p50_ms", r["query_p50_ms"], note),
+        ("streaming_churn/query_p95_ms", r["query_p95_ms"], ""),
+        ("streaming_churn/query_p95_during_compaction_ms",
+         r["query_p95_during_compaction_ms"],
+         f"{r['n_compacting_batches']} compacting batches"),
+        ("streaming_churn/max_write_stall_ms", r["max_write_stall_ms"],
+         "worst batch incl. seal+merge (no full rebuild)"),
+        ("streaming_churn/recall_at_10", r["recall_at_10"],
+         f"scan={100*r['avg_fraction_scanned']:.0f}%"),
+        ("streaming_churn/write_amplification", r["write_amplification"],
+         f"tombstones_purged={r['tombstones_purged']}"),
+    ]
+
+
+if __name__ == "__main__":
+    for name, val, note in main():
+        print(f"{name},{val:.3f},{note}")

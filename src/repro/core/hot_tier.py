@@ -1,19 +1,25 @@
 """Hot tier: latency-optimized vector index over ACTIVE chunks only
 (paper §III-C1).
 
-TPU-native adaptation (DESIGN.md §2): the paper uses Milvus+HNSW; graph ANN
-is pointer-chasing and hostile to the MXU, so the hot tier here is a
-device-resident slot array scored by a blocked matmul + fused streaming
-top-k (kernels/topk_search) — exact search, O(n·d) FLOPs on the MXU, and
-exactly shardable across a mesh (every device scores its slots; global
-top-k is a tiny k-candidate merge). An IVF route (core/ivf.py) provides the
-sub-linear path at larger scale.
+TPU-native adaptation (DESIGN.md §2, §7): the paper uses Milvus+HNSW;
+graph ANN is pointer-chasing and hostile to the MXU, so the hot tier is
+backed by the LSM-style segmented index (repro.index.SegmentedIndex): a
+small mutable memtable absorbs streaming writes and is exact-scanned by
+the fused top-k kernel (kernels/topk_search); immutable IVF-partitioned
+base segments serve the bulk of the corpus sub-linearly (centroid
+routing, nprobe partitions — dense MXU matmuls, no pointer chasing); a
+deterministic size-tiered compactor seals/merges segments off the query
+path. Per-query results are combined by a k-candidate top-k merge — the
+same merge a shard_map fan-out feeds (every device scores its segments;
+the global merge is tiny).
 
-Write semantics match the paper: new chunk => insert; modified => delete
-old slot + insert new; deleted => remove. Only chunks with
+Write semantics match the paper: new chunk => insert; modified => old row
+tombstoned + new row inserted; deleted => tombstone. Only chunks with
 valid_to = OPEN live here; history belongs to the cold tier. The hot tier
-is therefore a *cache* of the cold tier's current snapshot and can be
-deterministically rebuilt from it (fault tolerance).
+persists its segment set via an atomic manifest, but remains a *cache* of
+the cold tier's current snapshot: recovery reconciles every segment row
+against the cold snapshot and re-inserts only the delta (fault
+tolerance — see ``LiveVectorLake.recover``).
 """
 from __future__ import annotations
 
@@ -21,137 +27,71 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from .types import ChunkRecord, SearchResult, VALID_TO_OPEN
-
-_NEG_INF = np.float32(-np.inf)
+from ..index.lsm import SegmentedIndex
+from .types import ChunkRecord, SearchResult
 
 
 class HotTier:
-    def __init__(self, dim: int, capacity: int = 4096):
+    def __init__(self, dim: int, capacity: int = 4096,
+                 root: Optional[str] = None, wal=None, nprobe: int = 8,
+                 ivf_min_rows: int = 1024):
         self.dim = dim
-        self.capacity = capacity
-        self._emb = np.zeros((capacity, dim), np.float32)
-        self._active = np.zeros(capacity, bool)
-        self._valid_from = np.zeros(capacity, np.int64)
-        self._chunk_ids: list[Optional[str]] = [None] * capacity
-        self._doc_ids: list[Optional[str]] = [None] * capacity
-        self._positions = np.zeros(capacity, np.int64)
-        self._texts: list[str] = [""] * capacity
-        self._free: list[int] = list(range(capacity - 1, -1, -1))
-        self._by_key: dict[tuple[str, int], int] = {}
-        self._device_emb = None      # lazily-synced jax copy for kernel search
-        self._dirty = True
+        self._mem_capacity = capacity
+        self.index = SegmentedIndex(dim, mem_capacity=capacity, root=root,
+                                    wal=wal, nprobe=nprobe,
+                                    ivf_min_rows=ivf_min_rows)
 
     # ------------------------------------------------------------------
     def __len__(self) -> int:
-        return len(self._by_key)
+        return len(self.index)
 
-    def _grow(self) -> None:
-        new_cap = self.capacity * 2
-        emb = np.zeros((new_cap, self.dim), np.float32)
-        emb[: self.capacity] = self._emb
-        self._emb = emb
-        for arr_name in ("_active",):
-            a = np.zeros(new_cap, bool)
-            a[: self.capacity] = getattr(self, arr_name)
-            setattr(self, arr_name, a)
-        for arr_name in ("_valid_from", "_positions"):
-            a = np.zeros(new_cap, np.int64)
-            a[: self.capacity] = getattr(self, arr_name)
-            setattr(self, arr_name, a)
-        self._chunk_ids.extend([None] * self.capacity)
-        self._doc_ids.extend([None] * self.capacity)
-        self._texts.extend([""] * self.capacity)
-        self._free.extend(range(new_cap - 1, self.capacity - 1, -1))
-        self.capacity = new_cap
-        self._dirty = True
+    @property
+    def capacity(self) -> int:
+        """Total addressable slots (memtable capacity + sealed rows) —
+        grows as segments are sealed, never shrinks below the memtable."""
+        return self.index.capacity
+
+    @property
+    def _by_key(self) -> dict:
+        """Key -> location map (memtable slot int | (seg_id, row))."""
+        return self.index._by_key
+
+    @property
+    def _emb(self) -> np.ndarray:
+        """Memtable slot array (memtable-resident keys only)."""
+        return self.index.mem._emb
 
     # -- writes ----------------------------------------------------------
     def insert(self, records: Sequence[ChunkRecord]) -> None:
-        for r in records:
-            key = (r.doc_id, r.position)
-            if key in self._by_key:          # modified: delete old, insert new
-                self._release(self._by_key.pop(key))
-            if not self._free:
-                self._grow()
-            slot = self._free.pop()
-            self._emb[slot] = np.asarray(r.embedding, np.float32)
-            self._active[slot] = True
-            self._valid_from[slot] = r.valid_from
-            self._chunk_ids[slot] = r.chunk_id
-            self._doc_ids[slot] = r.doc_id
-            self._positions[slot] = r.position
-            self._texts[slot] = r.text
-            self._by_key[key] = slot
-        self._dirty = True
+        self.index.insert(records)
 
     def delete(self, keys: Sequence[tuple[str, int]]) -> int:
-        n = 0
-        for key in keys:
-            slot = self._by_key.pop(key, None)
-            if slot is not None:
-                self._release(slot)
-                n += 1
-        if n:
-            self._dirty = True
-        return n
-
-    def _release(self, slot: int) -> None:
-        self._active[slot] = False
-        self._emb[slot] = 0.0
-        self._chunk_ids[slot] = None
-        self._doc_ids[slot] = None
-        self._texts[slot] = ""
-        self._free.append(slot)
+        return self.index.delete(keys)
 
     def clear(self) -> None:
-        self.__init__(self.dim, self.capacity)
+        """Explicit reset of the engine state (NOT ``__init__`` re-entry,
+        so the segmented index and its on-disk manifest are reset through
+        their own code path and nothing is silently dropped)."""
+        self.index.reset(drop_disk=True)
 
     # -- reads ------------------------------------------------------------
-    def _device_view(self):
-        """Masked device copy: inactive slots carry -inf-producing zeros via
-        the mask argument of the search kernel."""
-        import jax.numpy as jnp
-        if self._dirty or self._device_emb is None:
-            self._device_emb = jnp.asarray(self._emb)
-            self._device_mask = jnp.asarray(self._active)
-            self._dirty = False
-        return self._device_emb, self._device_mask
+    def search(self, queries: np.ndarray, k: int = 5
+               ) -> list[list[SearchResult]]:
+        """Top-k cosine search over active chunks (queries and corpus are
+        expected L2-normalized => dot == cosine). Exact over the memtable,
+        nprobe-routed over base segments, merged."""
+        return self.index.search(queries, k=k)
 
-    def search(self, queries: np.ndarray, k: int = 5) -> list[list[SearchResult]]:
-        """Exact top-k cosine search over active slots (queries and corpus
-        are expected L2-normalized => dot == cosine)."""
-        from ..kernels.topk_search.ops import topk_search
-
-        q = np.atleast_2d(np.asarray(queries, np.float32))
-        if len(self._by_key) == 0:
-            return [[] for _ in range(q.shape[0])]
-        emb, mask = self._device_view()
-        k_eff = min(k, self.capacity)
-        scores, idx = topk_search(q, emb, mask, k_eff)
-        scores, idx = np.asarray(scores), np.asarray(idx)
-        out: list[list[SearchResult]] = []
-        for qi in range(q.shape[0]):
-            row = []
-            for j in range(k_eff):
-                s, slot = float(scores[qi, j]), int(idx[qi, j])
-                if not np.isfinite(s) or not self._active[slot]:
-                    continue
-                row.append(SearchResult(
-                    chunk_id=self._chunk_ids[slot] or "",
-                    doc_id=self._doc_ids[slot] or "",
-                    position=int(self._positions[slot]),
-                    score=s, text=self._texts[slot],
-                    valid_from=int(self._valid_from[slot]),
-                    valid_to=VALID_TO_OPEN, tier="hot"))
-            out.append(row[:k])
-        return out
+    # -- recovery ----------------------------------------------------------
+    def rebuild(self, records: Sequence[ChunkRecord]) -> dict:
+        """Restore from the persisted segment set, reconciled against the
+        authoritative cold-tier records; inserts only the delta."""
+        return self.index.rebuild(records)
 
     # -- introspection ------------------------------------------------------
     def active_embeddings(self) -> np.ndarray:
-        sel = np.nonzero(self._active)[0]
-        return self._emb[sel]
+        return self.index.active_embeddings()
 
     def stats(self) -> dict:
-        return {"active": len(self._by_key), "capacity": self.capacity,
-                "bytes": int(self._emb.nbytes)}
+        return {"active": len(self.index), "capacity": self.capacity,
+                "bytes": self.index.nbytes(), "index": self.index.stats()}

@@ -51,12 +51,30 @@ class IVFIndex:
         assign = np.argmax(v @ centroids.T, axis=1)
         self.centroids = centroids
         self._vectors = v
+        self._assign = assign
         self._lists = [np.nonzero(assign == j)[0] for j in range(c)]
 
+    def restore(self, centroids: np.ndarray, vectors: np.ndarray,
+                assign: np.ndarray) -> None:
+        """Rebuild from persisted state (centroids + per-row partition
+        assignment) without re-running k-means — segments are immutable,
+        so their partitioning is serialized once at seal time."""
+        self.centroids = np.asarray(centroids, np.float32)
+        self._vectors = np.asarray(vectors, np.float32)
+        self._assign = np.asarray(assign, np.int64)
+        c = self.centroids.shape[0]
+        self._lists = [np.nonzero(self._assign == j)[0] for j in range(c)]
+
     # -- search -----------------------------------------------------------
-    def search(self, queries: np.ndarray, k: int = 5, nprobe: int = 8
+    def search(self, queries: np.ndarray, k: int = 5, nprobe: int = 8,
+               mask: np.ndarray | None = None
                ) -> tuple[np.ndarray, np.ndarray, IVFStats]:
-        """Returns (scores (Q, k), row ids (Q, k), stats)."""
+        """Returns (scores (Q, k), row ids (Q, k), stats).
+
+        ``mask`` (N,) bool, optional: rows with mask=False (tombstoned
+        slots in a sealed segment) are skipped before scoring, so they can
+        never rank — the segmented index's deletion-vector path.
+        """
         assert self.centroids is not None, "build() first"
         q = np.atleast_2d(np.asarray(queries, np.float32))
         nprobe = min(nprobe, len(self._lists))
@@ -68,6 +86,8 @@ class IVFIndex:
         for qi in range(q.shape[0]):
             rows = np.concatenate([self._lists[j] for j in probe[qi]]) \
                 if nprobe else np.empty(0, np.int64)
+            if mask is not None and len(rows):
+                rows = rows[mask[rows]]
             if len(rows) == 0:
                 continue
             scanned += len(rows)

@@ -53,11 +53,13 @@ class LiveVectorLake:
         self.embedder = CachingEmbedder(inner)
         self.hash_store = HashStore(os.path.join(root, "hash_store.json"))
         self.cold = ColdTier(os.path.join(root, "cold"), dim)
-        self.hot = HotTier(dim, capacity=hot_capacity)
-        self.temporal = TemporalEngine(self.cold,
-                                       device_resident=device_resident_history)
         from .wal import WriteAheadLog
         self.wal = WriteAheadLog(os.path.join(root, "wal.jsonl"))
+        self.hot = HotTier(dim, capacity=hot_capacity,
+                           root=os.path.join(root, "hot_index"),
+                           wal=self.wal)
+        self.temporal = TemporalEngine(self.cold,
+                                       device_resident=device_resident_history)
         self._last_ts = 0
         if self.cold.latest_version() > 0:
             self.recover()
@@ -170,12 +172,13 @@ class LiveVectorLake:
     # fault tolerance
     # ------------------------------------------------------------------
     def recover(self) -> dict:
-        """Full restart path: reconcile the WAL, rebuild the hot tier and
-        hash store from the cold tier (source of truth), warm the
-        embedding cache."""
+        """Full restart path: reconcile the WAL, restore the hot tier's
+        segmented index from its manifest (reconciled row-by-row against
+        the cold tier — the source of truth — so only the delta since the
+        last seal is re-inserted, not one monolithic insert), rebuild the
+        hash store, warm the embedding cache."""
         report = self.reconcile()
         snap = self.cold.snapshot()
-        self.hot.clear()
         by_doc: dict[str, list[tuple[int, str]]] = {}
         records = []
         for i in range(len(snap)):
@@ -187,7 +190,7 @@ class LiveVectorLake:
                 embedding=snap.embeddings[i]))
             by_doc.setdefault(snap.doc_ids[i], []).append(
                 (int(snap.position[i]), snap.chunk_ids[i]))
-        self.hot.insert(records)
+        hot_report = self.hot.rebuild(records)
         for doc_id, pairs in by_doc.items():
             pairs.sort()
             self.hash_store.put(doc_id, [h for _, h in pairs],
@@ -198,6 +201,8 @@ class LiveVectorLake:
                             int(full.valid_from.max()) if len(full) else 0)
         self.temporal.invalidate()
         report["hot_rebuilt"] = len(records)
+        report["hot_restored_from_segments"] = hot_report["restored"]
+        report["hot_delta_inserted"] = hot_report["inserted"]
         return report
 
     def reconcile(self, policy: str = "roll_forward") -> dict:
@@ -209,8 +214,16 @@ class LiveVectorLake:
         compensate:  flag the cold version uncommitted and abort — the
         paper's 'On Milvus failure, flag Delta record uncommitted'.
         """
-        actions = {"rolled_forward": 0, "compensated": 0, "aborted": 0}
+        actions = {"rolled_forward": 0, "compensated": 0, "aborted": 0,
+                   "hot_compact_closed": 0}
         for txn, state, payload in self.wal.pending():
+            if payload.get("kind") == "hot_compact":
+                # seal/merge of the segmented index: the manifest rename is
+                # its own commit point and orphan segment files are swept
+                # on load, so an in-flight txn needs no compensation.
+                self.wal.mark(txn, "ABORT")
+                actions["hot_compact_closed"] += 1
+                continue
             v = payload.get("cold_version")
             cold_landed = v is not None and os.path.exists(
                 self.cold._log_path(v))

@@ -1,0 +1,375 @@
+"""SegmentedIndex: LSM-style orchestration of memtable + base segments
+(DESIGN.md §7).
+
+Write path: inserts land in the memtable (O(1)); when it fills, it is
+SEALED into an immutable IVF-partitioned segment and the deterministic
+size-tiered compactor merges segments / purges tombstones. The write
+path never rebuilds the whole index — queries stay servable during
+compaction because the old segment set remains live until one atomic
+manifest publish swaps in the merged result.
+
+Read path: the query runs exactly over the memtable (fused top-k kernel)
+and sub-linearly over each segment (centroid routing, nprobe partitions);
+per-segment top-k candidate lists are merged by one k-candidate top-k
+merge. The same merge serves a future shard_map fan-out: a shard is just
+another candidate source (DESIGN.md §7.5).
+
+Consistency: ``_by_key`` maps every live (doc_id, position) to exactly
+one location — a memtable slot (int) or a (seg_id, row) pair. Inserting
+over a key that lives in a segment tombstones the old row; the merge
+drops any candidate whose location is no longer the key's authority, so
+a query can never return two versions of one logical slot.
+
+Durability: segment files + atomic manifest under ``root`` (optional);
+seal/merge transactions are bracketed in the store's WAL. ``rebuild()``
+restores the segment set from the manifest and reconciles every row
+against the cold tier's authoritative snapshot, so only the delta since
+the last seal is re-inserted — not one monolithic insert.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from ..core.types import ChunkRecord, SearchResult, VALID_TO_OPEN
+from .compaction import CompactionStats, SizeTieredCompactor
+from .manifest import Manifest
+from .memtable import Memtable
+from .segment import Segment
+
+
+class CompactionInterrupted(RuntimeError):
+    """Raised by the fault-injection hook to simulate a crash mid-seal or
+    mid-compaction (tests only)."""
+
+
+class SegmentedIndex:
+    def __init__(self, dim: int, mem_capacity: int = 4096,
+                 root: Optional[str] = None, wal=None, nprobe: int = 8,
+                 ivf_min_rows: int = 1024, fanout: int = 4, seed: int = 0):
+        self.dim = dim
+        self.root = root
+        self.wal = wal
+        self.nprobe = nprobe
+        self.ivf_min_rows = ivf_min_rows
+        self.seed = seed
+        self.mem = Memtable(dim, mem_capacity)
+        self.segments: dict[str, Segment] = {}     # insertion == seal order
+        self.compactor = SizeTieredCompactor(fanout=fanout)
+        self.cstats = CompactionStats()
+        self.manifest = Manifest(root) if root else None
+        # key -> memtable slot (int) | (seg_id, row)
+        self._by_key: dict[tuple[str, int], object] = {}
+        self._seg_meta: dict[str, tuple[str, str]] = {}  # id -> (file, sha)
+        self._seq = 0
+        self._scan_scanned = 0
+        self._scan_denom = 0
+        self.fail_at: Optional[str] = None     # e.g. "seal:before_manifest"
+
+    # ------------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._by_key)
+
+    @property
+    def capacity(self) -> int:
+        """Total row slots: memtable capacity + sealed segment rows."""
+        return self.mem.capacity + sum(len(s) for s in self.segments.values())
+
+    def nbytes(self) -> int:
+        return self.mem.nbytes() + sum(int(s.emb.nbytes)
+                                       for s in self.segments.values())
+
+    # ------------------------------------------------------------------
+    # writes
+    # ------------------------------------------------------------------
+    def insert(self, records: Sequence[ChunkRecord]) -> None:
+        for r in records:
+            key = (r.doc_id, r.position)
+            loc = self._by_key.get(key)
+            if isinstance(loc, int):               # live in memtable: in-place
+                self.mem.overwrite(loc, r)
+            else:
+                if loc is not None:                # live in a segment: shadow
+                    seg_id, row = loc
+                    self.segments[seg_id].kill(row)
+                if self.mem.full:
+                    self.seal()
+                self._by_key[key] = self.mem.put(r)
+            self.cstats.rows_ingested += 1
+        self.maybe_compact()
+
+    def delete(self, keys: Sequence[tuple[str, int]]) -> int:
+        n = 0
+        for key in keys:
+            loc = self._by_key.pop(key, None)
+            if loc is None:
+                continue
+            if isinstance(loc, int):
+                self.mem.remove(loc)
+            else:
+                seg_id, row = loc
+                self.segments[seg_id].kill(row)
+            n += 1
+        if n:
+            self.maybe_compact()     # delete-heavy streams purge too
+        return n
+
+    # ------------------------------------------------------------------
+    # seal + compaction
+    # ------------------------------------------------------------------
+    def _next_id(self) -> str:
+        self._seq += 1
+        return f"{self._seq:08d}"
+
+    def seal(self) -> Optional[Segment]:
+        """Freeze the memtable into a new base segment (IVF-partitioned at
+        or above ivf_min_rows), publish it, and reset the memtable."""
+        if len(self.mem) == 0:
+            return None
+        cols = self.mem.extract()
+        seg = Segment(self._next_id(), cols["emb"], cols["valid_from"],
+                      cols["positions"], cols["chunk_ids"], cols["doc_ids"],
+                      cols["texts"], ivf_min_rows=self.ivf_min_rows,
+                      seed=self.seed)
+        self._commit_segments("seal", add=[seg], remove=[])
+        self.segments[seg.seg_id] = seg
+        for row, key in enumerate(cols["keys"]):
+            self._by_key[key] = (seg.seg_id, row)
+        self.mem.reset()
+        self.cstats.rows_written += len(seg)
+        self.cstats.seals += 1
+        return seg
+
+    def maybe_compact(self) -> int:
+        """Run the deterministic compactor to a fixed point; returns the
+        number of merges performed."""
+        n = 0
+        while True:
+            victims = self.compactor.pick(list(self.segments.values()))
+            if not victims:
+                return n
+            self._merge(victims)
+            n += 1
+
+    def _merge(self, victims: list[Segment]) -> None:
+        keep = [(v, np.nonzero(v.alive)[0]) for v in victims]
+        purged = sum(len(v) - len(rows) for v, rows in keep)
+        total = sum(len(rows) for _, rows in keep)
+        if total == 0:
+            merged: Optional[Segment] = None
+        else:
+            merged = Segment(
+                self._next_id(),
+                np.concatenate([v.emb[rows] for v, rows in keep]),
+                np.concatenate([v.valid_from[rows] for v, rows in keep]),
+                np.concatenate([v.positions[rows] for v, rows in keep]),
+                [v.chunk_ids[i] for v, rows in keep for i in rows],
+                [v.doc_ids[i] for v, rows in keep for i in rows],
+                [v.texts[i] for v, rows in keep for i in rows],
+                ivf_min_rows=self.ivf_min_rows, seed=self.seed)
+        self._commit_segments("merge", add=[merged] if merged else [],
+                              remove=victims)
+        for v in victims:
+            del self.segments[v.seg_id]
+            self._seg_meta.pop(v.seg_id, None)
+        if merged is not None:
+            self.segments[merged.seg_id] = merged
+            for row in range(len(merged)):
+                self._by_key[merged.key(row)] = (merged.seg_id, row)
+            self.cstats.rows_written += len(merged)
+        self.cstats.merges += 1
+        self.cstats.tombstones_purged += purged
+
+    def _commit_segments(self, op: str, add: list[Segment],
+                         remove: list[Segment]) -> None:
+        """Durable transition of the live-segment set: write new files,
+        atomically publish the manifest, then retire old files. Bracketed
+        in the WAL; the manifest rename is the commit point, so a crash in
+        any window leaves only orphan files (cleaned on next load)."""
+        if self.manifest is None:
+            return
+        txn = None
+        if self.wal is not None:
+            txn = self.wal.begin("hot_compact", {
+                "kind": "hot_compact", "op": op,
+                "add": [s.filename() for s in add],
+                "remove": [s.filename() for s in remove]})
+        for seg in add:
+            self._seg_meta[seg.seg_id] = seg.save(self.root)
+        self._fault(f"{op}:before_manifest")
+        removed = {s.seg_id for s in remove}
+        # add-segments are not yet registered in self.segments
+        live = [s for s in self.segments.values()
+                if s.seg_id not in removed] + add
+        entries = [{"name": self._seg_meta[s.seg_id][0],
+                    "checksum": self._seg_meta[s.seg_id][1],
+                    "rows": len(s)} for s in live]
+        self.manifest.commit(entries, seq=self._seq)
+        self._fault(f"{op}:after_manifest")
+        self.manifest.cleanup_orphans({e["name"] for e in entries})
+        if txn is not None:
+            self.wal.mark(txn, "COMMIT")
+
+    def _fault(self, point: str) -> None:
+        if self.fail_at == point:
+            self.fail_at = None
+            raise CompactionInterrupted(f"injected crash at {point}")
+
+    # ------------------------------------------------------------------
+    # reads
+    # ------------------------------------------------------------------
+    def search(self, queries: np.ndarray, k: int = 5
+               ) -> list[list[SearchResult]]:
+        q = np.atleast_2d(np.asarray(queries, np.float32))
+        nq = q.shape[0]
+        if not self._by_key:
+            return [[] for _ in range(nq)]
+        # gather k candidates per source: memtable (exact) + each segment
+        # (nprobe-routed); same merge a shard_map fan-out would feed.
+        cands: list[list[tuple[float, Optional[Segment], int]]] = \
+            [[] for _ in range(nq)]
+        scanned = 0
+        if len(self.mem):
+            s, idx = self.mem.search(q, k)
+            scanned += len(self.mem)
+            for qi in range(nq):
+                for j in range(s.shape[1]):
+                    if np.isfinite(s[qi, j]):
+                        cands[qi].append((float(s[qi, j]), None,
+                                          int(idx[qi, j])))
+        for seg in self.segments.values():
+            if seg.n_alive == 0:
+                continue
+            s, rows, seg_scanned = seg.search(q, k, nprobe=self.nprobe)
+            scanned += seg_scanned
+            for qi in range(nq):
+                for j in range(s.shape[1]):
+                    sc, r = float(s[qi, j]), int(rows[qi, j])
+                    if np.isfinite(sc) and r >= 0:
+                        cands[qi].append((sc, seg, r))
+        self._scan_scanned += scanned * nq
+        self._scan_denom += max(len(self._by_key), 1) * nq
+        return [self._merge_topk(cands[qi], k) for qi in range(nq)]
+
+    def _merge_topk(self, cands: list[tuple[float, Optional[Segment], int]],
+                    k: int) -> list[SearchResult]:
+        """k-candidate top-k merge with authority check: a candidate only
+        survives if ``_by_key`` still points at its location (drops rows
+        shadowed by a newer insert racing the same batch)."""
+        out: list[SearchResult] = []
+        seen: set[tuple[str, int]] = set()
+        for score, seg, row in sorted(cands, key=lambda t: -t[0]):
+            if len(out) == k:
+                break
+            if seg is None:
+                mem = self.mem
+                doc = mem._doc_ids[row]
+                if doc is None:
+                    continue
+                key = (doc, int(mem._positions[row]))
+                if self._by_key.get(key) != row or key in seen:
+                    continue
+                seen.add(key)
+                out.append(SearchResult(
+                    chunk_id=mem._chunk_ids[row] or "", doc_id=doc,
+                    position=key[1], score=score, text=mem._texts[row],
+                    valid_from=int(mem._valid_from[row]),
+                    valid_to=VALID_TO_OPEN, tier="hot"))
+            else:
+                key = seg.key(row)
+                if self._by_key.get(key) != (seg.seg_id, row) or key in seen:
+                    continue
+                seen.add(key)
+                out.append(SearchResult(
+                    chunk_id=seg.chunk_ids[row], doc_id=key[0],
+                    position=key[1], score=score, text=seg.texts[row],
+                    valid_from=int(seg.valid_from[row]),
+                    valid_to=VALID_TO_OPEN, tier="hot"))
+        return out
+
+    def active_embeddings(self) -> np.ndarray:
+        parts = [self.mem._emb[self.mem._active]]
+        parts += [s.emb[s.alive] for s in self.segments.values()]
+        return np.concatenate(parts) if parts else np.zeros((0, self.dim))
+
+    # ------------------------------------------------------------------
+    # recovery + reset
+    # ------------------------------------------------------------------
+    def rebuild(self, records: Sequence[ChunkRecord]) -> dict:
+        """Crash-safe restore: load the manifest's segment set, reconcile
+        every row against the cold tier's authoritative active records
+        (``records``), and insert only the uncovered delta into the
+        memtable. Any integrity failure falls back to a full re-insert —
+        the cold tier is always the source of truth."""
+        self.reset(drop_disk=False)
+        auth = {(r.doc_id, r.position): r for r in records}
+        claimed: dict[tuple[str, int], tuple[str, int]] = {}
+        loaded: list[Segment] = []
+        if self.manifest is not None:
+            m = self.manifest.load()
+            if m is not None:
+                self._seq = max(self._seq, int(m.get("seq", 0)))
+                try:
+                    for ent in m["segments"]:
+                        seg = Segment.load(
+                            self.root, ent["name"], ent.get("checksum"),
+                            ivf_min_rows=self.ivf_min_rows, seed=self.seed)
+                        self._seg_meta[seg.seg_id] = (ent["name"],
+                                                      ent["checksum"])
+                        loaded.append(seg)
+                except (IOError, OSError, KeyError, ValueError):
+                    loaded = []          # corrupt set: full rebuild
+                    self._seg_meta.clear()
+                self.manifest.cleanup_orphans({e.get("name")
+                                               for e in m["segments"]})
+        # newest segment wins a key; a row survives only if the cold tier
+        # agrees this exact chunk version is the currently active one
+        for seg in reversed(loaded):
+            alive = np.zeros(len(seg), bool)
+            for row in range(len(seg)):
+                key = seg.key(row)
+                r = auth.get(key)
+                if (r is not None and key not in claimed
+                        and r.chunk_id == seg.chunk_ids[row]):
+                    alive[row] = True
+                    claimed[key] = (seg.seg_id, row)
+            seg.alive = alive
+        for seg in loaded:
+            if seg.n_alive > 0:
+                self.segments[seg.seg_id] = seg
+            else:
+                self._seg_meta.pop(seg.seg_id, None)
+        self._by_key.update(claimed)
+        delta = [r for key, r in auth.items() if key not in claimed]
+        self.insert(delta)
+        return {"restored": len(claimed), "inserted": len(delta)}
+
+    def reset(self, drop_disk: bool = True) -> None:
+        self.mem.reset()
+        self.segments.clear()
+        self._by_key.clear()
+        self._seg_meta.clear()
+        self._scan_scanned = self._scan_denom = 0
+        self.cstats = CompactionStats()
+        if drop_disk and self.manifest is not None:
+            self.manifest.commit([], seq=self._seq)
+            self.manifest.cleanup_orphans(set())
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        seg_rows = sum(len(s) for s in self.segments.values())
+        seg_alive = sum(s.n_alive for s in self.segments.values())
+        return {
+            "memtable": len(self.mem),
+            "mem_capacity": self.mem.capacity,
+            "segments": len(self.segments),
+            "segment_rows": seg_rows,
+            "tombstones": seg_rows - seg_alive,
+            "partitioned_segments": sum(1 for s in self.segments.values()
+                                        if s.ivf is not None),
+            "nprobe": self.nprobe,
+            "avg_fraction_scanned": (self._scan_scanned
+                                     / max(self._scan_denom, 1)),
+            **self.cstats.as_dict(),
+        }

@@ -1,0 +1,108 @@
+"""Mutable write buffer of the segmented index (DESIGN.md §7.1).
+
+The memtable is the only mutable structure on the write path: streaming
+inserts/overwrites/deletes land here in O(1) slot operations, and reads
+run the exact fused top-k kernel over the slot array (the same
+kernels/topk_search path the flat hot tier used). When full it is sealed
+into an immutable base segment by the compactor — the memtable itself
+never grows, so the exact-scan cost on the query path stays bounded by
+``capacity`` regardless of corpus size.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from ..core.types import ChunkRecord
+
+
+class Memtable:
+    def __init__(self, dim: int, capacity: int = 4096):
+        self.dim = dim
+        self.capacity = capacity
+        self._emb = np.zeros((capacity, dim), np.float32)
+        self._active = np.zeros(capacity, bool)
+        self._valid_from = np.zeros(capacity, np.int64)
+        self._positions = np.zeros(capacity, np.int64)
+        self._chunk_ids: list[Optional[str]] = [None] * capacity
+        self._doc_ids: list[Optional[str]] = [None] * capacity
+        self._texts: list[str] = [""] * capacity
+        self._free: list[int] = list(range(capacity - 1, -1, -1))
+
+    def __len__(self) -> int:
+        return self.capacity - len(self._free)
+
+    @property
+    def full(self) -> bool:
+        return not self._free
+
+    # -- writes ----------------------------------------------------------
+    def put(self, r: ChunkRecord) -> int:
+        """Claim a free slot for a new row. Caller seals before putting
+        into a full memtable."""
+        assert self._free, "memtable full — seal first"
+        slot = self._free.pop()
+        self._write(slot, r)
+        return slot
+
+    def overwrite(self, slot: int, r: ChunkRecord) -> None:
+        """In-place update of a live slot (same (doc, position) key)."""
+        assert self._active[slot], slot
+        self._write(slot, r)
+
+    def _write(self, slot: int, r: ChunkRecord) -> None:
+        self._emb[slot] = np.asarray(r.embedding, np.float32)
+        self._active[slot] = True
+        self._valid_from[slot] = r.valid_from
+        self._positions[slot] = r.position
+        self._chunk_ids[slot] = r.chunk_id
+        self._doc_ids[slot] = r.doc_id
+        self._texts[slot] = r.text
+
+    def remove(self, slot: int) -> None:
+        self._active[slot] = False
+        self._emb[slot] = 0.0
+        self._chunk_ids[slot] = None
+        self._doc_ids[slot] = None
+        self._texts[slot] = ""
+        self._free.append(slot)
+
+    def reset(self) -> None:
+        self._emb[:] = 0.0
+        self._active[:] = False
+        self._valid_from[:] = 0
+        self._positions[:] = 0
+        self._chunk_ids = [None] * self.capacity
+        self._doc_ids = [None] * self.capacity
+        self._texts = [""] * self.capacity
+        self._free = list(range(self.capacity - 1, -1, -1))
+
+    # -- reads ------------------------------------------------------------
+    def search(self, queries: np.ndarray, k: int) -> tuple[np.ndarray,
+                                                           np.ndarray]:
+        """Exact masked top-k over the slot array. Returns
+        (scores (Q, k), slots (Q, k)); inactive slots score -inf."""
+        from ..kernels.topk_search.ops import topk_search
+        q = np.atleast_2d(np.asarray(queries, np.float32))
+        k_eff = min(k, self.capacity)
+        scores, idx = topk_search(q, self._emb, self._active, k_eff)
+        return np.asarray(scores), np.asarray(idx)
+
+    def extract(self) -> dict:
+        """Columnar copy of the live rows (seal input), in slot order, plus
+        their (doc_id, position) keys."""
+        sel = np.nonzero(self._active)[0]
+        return {
+            "emb": self._emb[sel].copy(),
+            "valid_from": self._valid_from[sel].copy(),
+            "positions": self._positions[sel].copy(),
+            "chunk_ids": [self._chunk_ids[i] or "" for i in sel],
+            "doc_ids": [self._doc_ids[i] or "" for i in sel],
+            "texts": [self._texts[i] for i in sel],
+            "keys": [(self._doc_ids[i] or "", int(self._positions[i]))
+                     for i in sel],
+        }
+
+    def nbytes(self) -> int:
+        return int(self._emb.nbytes)

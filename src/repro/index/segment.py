@@ -1,0 +1,140 @@
+"""Immutable base segments of the segmented index (DESIGN.md §7.2).
+
+A segment is sealed from the memtable (or produced by a merge) and its
+row data never changes afterwards; the only mutable state is the ``alive``
+deletion vector (a bool mask) that tombstones rows superseded or deleted
+after sealing — the classic LSM/Lance compromise that keeps deletes O(1)
+without rewriting the segment. Tombstoned rows are physically purged at
+the next compaction.
+
+Segments at or above ``ivf_min_rows`` are IVF-partitioned at seal time
+(core/ivf.py): a query scores the centroids (tiny matmul) and exact-scans
+only the ``nprobe`` nearest partitions — the sub-linear path. Small
+segments fall back to the exact fused top-k kernel; both paths honor the
+deletion vector before anything can rank.
+
+On-disk format: one compressed .npz per segment (numeric columns +
+unicode string columns, no pickle), content-addressed by SHA-256 in the
+manifest for integrity verification on load.
+"""
+from __future__ import annotations
+
+import io
+import os
+
+import numpy as np
+
+from ..core.hashing import blob_checksum
+from ..core.ivf import IVFIndex
+
+
+class Segment:
+    def __init__(self, seg_id: str, emb: np.ndarray, valid_from: np.ndarray,
+                 positions: np.ndarray, chunk_ids: list[str],
+                 doc_ids: list[str], texts: list[str],
+                 alive: np.ndarray | None = None,
+                 ivf_min_rows: int = 1024, seed: int = 0,
+                 ivf_state: tuple[np.ndarray, np.ndarray] | None = None):
+        self.seg_id = seg_id
+        self.emb = np.asarray(emb, np.float32)
+        self.valid_from = np.asarray(valid_from, np.int64)
+        self.positions = np.asarray(positions, np.int64)
+        self.chunk_ids = list(chunk_ids)
+        self.doc_ids = list(doc_ids)
+        self.texts = list(texts)
+        n = self.emb.shape[0]
+        self.alive = (np.ones(n, bool) if alive is None
+                      else np.asarray(alive, bool).copy())
+        self.ivf_min_rows = ivf_min_rows
+        self.ivf: IVFIndex | None = None
+        if n >= ivf_min_rows:
+            if ivf_state is not None and len(ivf_state[1]) == n:
+                # persisted partitioning: no k-means re-run on load
+                centroids, assign = ivf_state
+                self.ivf = IVFIndex(n_centroids=centroids.shape[0],
+                                    seed=seed)
+                self.ivf.restore(centroids, self.emb, assign)
+            else:
+                self.ivf = IVFIndex(n_centroids=max(8, int(np.sqrt(n))),
+                                    seed=seed)
+                self.ivf.build(self.emb)
+
+    # ------------------------------------------------------------------
+    def __len__(self) -> int:
+        return self.emb.shape[0]
+
+    @property
+    def n_alive(self) -> int:
+        return int(self.alive.sum())
+
+    def key(self, row: int) -> tuple[str, int]:
+        return (self.doc_ids[row], int(self.positions[row]))
+
+    def kill(self, row: int) -> None:
+        """Tombstone one row (delete or shadow-by-newer-insert)."""
+        self.alive[row] = False
+
+    # -- search -----------------------------------------------------------
+    def search(self, queries: np.ndarray, k: int, nprobe: int = 8
+               ) -> tuple[np.ndarray, np.ndarray, int]:
+        """Top-k over alive rows. Returns (scores (Q, k), rows (Q, k),
+        avg rows scanned per query). IVF routing when partitioned, exact
+        scan otherwise; either way tombstoned rows are masked before
+        ranking."""
+        q = np.atleast_2d(np.asarray(queries, np.float32))
+        k_eff = min(k, len(self))
+        if self.ivf is not None:
+            s, i, stats = self.ivf.search(q, k=k_eff, nprobe=nprobe,
+                                          mask=self.alive)
+            return s, i, int(round(stats.fraction_scanned * len(self)))
+        from ..kernels.topk_search.ops import topk_search
+        s, i = topk_search(q, self.emb, self.alive, k_eff)
+        return np.asarray(s), np.asarray(i), self.n_alive
+
+    # -- persistence -------------------------------------------------------
+    def filename(self) -> str:
+        return f"seg-{self.seg_id}.npz"
+
+    def to_bytes(self) -> bytes:
+        cols = dict(
+            emb=self.emb, valid_from=self.valid_from,
+            positions=self.positions, alive=self.alive,
+            chunk_ids=np.asarray(self.chunk_ids, dtype=np.str_),
+            doc_ids=np.asarray(self.doc_ids, dtype=np.str_),
+            texts=np.asarray(self.texts, dtype=np.str_))
+        if self.ivf is not None:               # partitioning is immutable:
+            cols["ivf_centroids"] = self.ivf.centroids   # serialize once,
+            cols["ivf_assign"] = self.ivf._assign        # never re-k-means
+        buf = io.BytesIO()
+        np.savez_compressed(buf, **cols)
+        return buf.getvalue()
+
+    def save(self, root: str) -> tuple[str, str]:
+        """Write (fsync'd) to ``root``; returns (filename, checksum). The
+        segment file lands BEFORE the manifest references it, mirroring
+        the cold tier's segment-then-log ordering."""
+        data = self.to_bytes()
+        path = os.path.join(root, self.filename())
+        with open(path, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        return self.filename(), blob_checksum(data)
+
+    @classmethod
+    def load(cls, root: str, filename: str, checksum: str | None = None,
+             ivf_min_rows: int = 1024, seed: int = 0) -> "Segment":
+        with open(os.path.join(root, filename), "rb") as f:
+            data = f.read()
+        if checksum is not None and blob_checksum(data) != checksum:
+            raise IOError(f"segment checksum mismatch: {filename}")
+        z = np.load(io.BytesIO(data))
+        seg_id = filename[len("seg-"):-len(".npz")]
+        ivf_state = ((z["ivf_centroids"], z["ivf_assign"])
+                     if "ivf_centroids" in z.files else None)
+        return cls(seg_id, z["emb"], z["valid_from"], z["positions"],
+                   [str(x) for x in z["chunk_ids"]],
+                   [str(x) for x in z["doc_ids"]],
+                   [str(x) for x in z["texts"]],
+                   alive=z["alive"], ivf_min_rows=ivf_min_rows, seed=seed,
+                   ivf_state=ivf_state)

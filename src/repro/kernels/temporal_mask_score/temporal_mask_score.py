@@ -46,12 +46,15 @@ def _kernel(q_ref, c_ref, vf_hi_ref, vf_lo_ref, vt_hi_ref, vt_lo_ref,
     idx_base = (j * bn).astype(jnp.int32)
     cols = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
 
+    # unit dslice on the block axis (not a bare int): integer indexers are
+    # rejected by the interpret-mode store discharge rule
     def body(t, s):
         best = jnp.max(s, axis=1)
         arg = jnp.argmax(s, axis=1).astype(jnp.int32)
-        pl.store(out_s_ref, (0, slice(None), pl.dslice(t, 1)), best[:, None])
-        pl.store(out_i_ref, (0, slice(None), pl.dslice(t, 1)),
-                 (arg + idx_base)[:, None])
+        pl.store(out_s_ref, (pl.dslice(0, 1), slice(None), pl.dslice(t, 1)),
+                 best[None, :, None])
+        pl.store(out_i_ref, (pl.dslice(0, 1), slice(None), pl.dslice(t, 1)),
+                 (arg + idx_base)[None, :, None])
         return jnp.where(cols == arg[:, None], -jnp.inf, s)
 
     jax.lax.fori_loop(0, k, body, scores)

@@ -36,13 +36,16 @@ def _kernel(q_ref, c_ref, mask_ref, out_s_ref, out_i_ref, *, k: int, bn: int):
     cols = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
 
     # streaming top-k: k max/argmax passes (VPU reductions), rolled into a
-    # fori_loop so the lowered graph stays O(1) in k
+    # fori_loop so the lowered graph stays O(1) in k. The leading block axis
+    # is indexed with a unit dslice, not a bare int: integer indexers are
+    # rejected by the interpret-mode store discharge rule.
     def body(t, s):
         best = jnp.max(s, axis=1)
         arg = jnp.argmax(s, axis=1).astype(jnp.int32)
-        pl.store(out_s_ref, (0, slice(None), pl.dslice(t, 1)), best[:, None])
-        pl.store(out_i_ref, (0, slice(None), pl.dslice(t, 1)),
-                 (arg + idx_base)[:, None])
+        pl.store(out_s_ref, (pl.dslice(0, 1), slice(None), pl.dslice(t, 1)),
+                 best[None, :, None])
+        pl.store(out_i_ref, (pl.dslice(0, 1), slice(None), pl.dslice(t, 1)),
+                 (arg + idx_base)[None, :, None])
         return jnp.where(cols == arg[:, None], -jnp.inf, s)
 
     jax.lax.fori_loop(0, k, body, scores)

@@ -1,5 +1,13 @@
-"""Property-based tests (hypothesis) on the system's invariants."""
+"""Property-based tests (hypothesis) on the system's invariants.
+
+``hypothesis`` is an OPTIONAL dev dependency (requirements-dev.txt):
+this module skips cleanly when it is absent so ``pytest -x`` never dies
+at collection on a minimal environment.
+"""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cdc import detect_changes, positional_diff
