@@ -1,0 +1,200 @@
+"""Query throughput: the batched read path vs the sequential
+single-query loop (DESIGN.md §8).
+
+Two levels, both with a byte-identical-results check (a query must score
+the same alone or inside a batch — the engine's parity guarantee):
+
+  - engine: ``SegmentedIndex.search`` over the streamed serving
+    configuration (memtable + sealed IVF segments) at 20k/50k chunks,
+    QPS vs batch size. This is the acceptance curve: batched QPS at
+    batch 32 must be >= 5x the sequential loop at 20k chunks.
+  - store: end-to-end ``LiveVectorLake.query_batch`` (embed + intent
+    classification + routing) against a CDC-ingested corpus, including
+    a point-in-time batch that exercises the temporal snapshot cache.
+
+Outputs the usual ``name,value,notes`` CSV rows; ``--json PATH`` writes
+the full result record for the BENCH trajectory; ``--smoke`` shrinks
+sizes for CI.
+
+  PYTHONPATH=src python -m benchmarks.query_throughput [--smoke] [--json out.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core.types import ChunkRecord
+from repro.index.lsm import SegmentedIndex
+
+from .common import Timer
+from .search_scaling import make_corpus, _records
+
+BATCH_SIZES = (1, 2, 4, 8, 16, 32, 64)
+
+
+def _qps(fn, n_queries: int, repeats: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        with Timer() as t:
+            fn()
+        best = min(best, t.elapsed)
+    return n_queries / max(best, 1e-9)
+
+
+def _results_equal(a, b) -> bool:
+    """Byte-identical: every SearchResult field, score compared bitwise."""
+    if len(a) != len(b):
+        return False
+    for ra, rb in zip(a, b):
+        if len(ra) != len(rb):
+            return False
+        for x, y in zip(ra, rb):
+            if ((x.chunk_id, x.doc_id, x.position, x.text, x.valid_from,
+                 x.valid_to, x.version, x.tier)
+                    != (y.chunk_id, y.doc_id, y.position, y.text,
+                        y.valid_from, y.valid_to, y.version, y.tier)):
+                return False
+            if np.float32(x.score).tobytes() != np.float32(y.score).tobytes():
+                return False
+    return True
+
+
+def run_engine(sizes=(20_000, 50_000), dim: int = 384, k: int = 10,
+               n_queries: int = 64, seed: int = 0) -> list[dict]:
+    out = []
+    for n in sizes:
+        corpus, queries = make_corpus(n, dim, n_queries, seed)
+        idx = SegmentedIndex(dim, mem_capacity=4096, nprobe=8,
+                             ivf_min_rows=1024, seed=seed)
+        idx.insert(_records(corpus))
+        idx.search(queries[:2], k=k)                     # jit warm-up
+        idx.search(queries[:1], k=k)
+
+        seq_results = [idx.search(queries[i], k=k)[0]
+                       for i in range(n_queries)]
+        seq_qps = _qps(lambda: [idx.search(queries[i], k=k)
+                                for i in range(n_queries)], n_queries)
+        rec = {"n": n, "k": k, "n_queries": n_queries,
+               "sequential_qps": seq_qps, "batched": {}}
+        for bs in BATCH_SIZES:
+            def run_batched(bs=bs):
+                res = []
+                for s in range(0, n_queries, bs):
+                    res.extend(idx.search(queries[s:s + bs], k=k))
+                return res
+            batched_results = run_batched()
+            rec["batched"][bs] = {
+                "qps": _qps(run_batched, n_queries),
+                "identical": _results_equal(batched_results, seq_results),
+            }
+        b32 = rec["batched"].get(32) or rec["batched"][max(rec["batched"])]
+        rec["speedup_at_32"] = b32["qps"] / seq_qps
+        rec["identical_at_32"] = b32["identical"]
+        out.append(rec)
+    return out
+
+
+def run_store(n_docs: int = 80, n_queries: int = 48, dim: int = 384,
+              seed: int = 0) -> dict:
+    """End-to-end QPS through the LiveVectorLake facade (embedding +
+    intent grouping + tier routing), plus the temporal snapshot-cache
+    effect on repeated point-in-time batches."""
+    import tempfile
+
+    from repro.core.store import LiveVectorLake
+    from repro.data.corpus import generate_corpus
+
+    rng = np.random.default_rng(seed)
+    corpus = generate_corpus(n_docs=n_docs, n_versions=2, seed=seed)
+    with tempfile.TemporaryDirectory() as root:
+        store = LiveVectorLake(root, dim=dim)
+        for v, ts in enumerate(corpus.timestamps):
+            for d in corpus.doc_ids():
+                store.ingest(d, corpus.versions[v][d], ts=ts)
+        words = [w for d in corpus.doc_ids()
+                 for w in corpus.versions[-1][d].split()[:40]]
+        queries = [" ".join(rng.choice(words, 5)) for _ in range(n_queries)]
+        store.query_batch(queries[:2], k=5)              # warm-up
+        store.query(queries[0], k=5)
+
+        seq = [store.query(t, k=5) for t in queries]
+        seq_qps = _qps(lambda: [store.query(t, k=5) for t in queries],
+                       n_queries)
+        batch = store.query_batch(queries, k=5)
+        batch_qps = _qps(lambda: store.query_batch(queries, k=5), n_queries)
+
+        # repeated point-in-time batch: snapshot resolve is memoized
+        ts_mid = (corpus.timestamps[0] + corpus.timestamps[1]) // 2
+        store.query_batch(queries[:8], k=5, at=ts_mid)   # cold resolve
+        h0, m0 = store.temporal.snap_hits, store.temporal.snap_misses
+        with Timer() as t:
+            store.query_batch(queries[:8], k=5, at=ts_mid)
+        return {
+            "n_chunks": store.stats()["hot"]["active"],
+            "sequential_qps": seq_qps, "batched_qps": batch_qps,
+            "speedup": batch_qps / seq_qps,
+            "identical": _results_equal(batch, seq),
+            "temporal_cached_batch_ms": t.elapsed * 1e3,
+            "snap_cache_hits_delta": store.temporal.snap_hits - h0,
+            "snap_cache_misses_delta": store.temporal.snap_misses - m0,
+        }
+
+
+def run(smoke: bool = False) -> dict:
+    if smoke:
+        engine = run_engine(sizes=(2_000,), n_queries=16)
+        store = run_store(n_docs=10, n_queries=8)
+    else:
+        engine = run_engine()
+        store = run_store()
+    return {"engine": engine, "store": store,
+            "batch_sizes": list(BATCH_SIZES), "smoke": smoke,
+            "timestamp": time.time()}
+
+
+def rows_from(result: dict) -> list[tuple]:
+    rows = []
+    for rec in result["engine"]:
+        n = rec["n"]
+        rows.append((f"query_throughput/n{n}/sequential_qps",
+                     rec["sequential_qps"], "single-query loop"))
+        for bs, b in rec["batched"].items():
+            rows.append((f"query_throughput/n{n}/batched_qps/b{bs}",
+                         b["qps"],
+                         f"identical={'yes' if b['identical'] else 'NO'}"))
+        rows.append((f"query_throughput/n{n}/speedup_at_32",
+                     rec["speedup_at_32"],
+                     f"target >=5x; identical="
+                     f"{'yes' if rec['identical_at_32'] else 'NO'}"))
+    s = result["store"]
+    rows.append(("query_throughput/store/sequential_qps",
+                 s["sequential_qps"], f"{s['n_chunks']} chunks end-to-end"))
+    rows.append(("query_throughput/store/batched_qps", s["batched_qps"],
+                 f"speedup={s['speedup']:.2f}x identical="
+                 f"{'yes' if s['identical'] else 'NO'}"))
+    rows.append(("query_throughput/store/temporal_cached_batch_ms",
+                 s["temporal_cached_batch_ms"],
+                 f"snapshot cache hits +{s['snap_cache_hits_delta']}"))
+    return rows
+
+
+def main() -> list[tuple]:
+    return rows_from(run())
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI")
+    ap.add_argument("--json", type=str, default=None,
+                    help="write the full result record to PATH")
+    args = ap.parse_args()
+    result = run(smoke=args.smoke)
+    for name, val, note in rows_from(result):
+        print(f"{name},{val:.3f},{note}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=1)

@@ -18,9 +18,9 @@ import time
 
 
 def main() -> None:
-    from . import (change_detection, query_latency, search_scaling,
-                   storage_efficiency, streaming_churn, temporal_accuracy,
-                   update_performance)
+    from . import (change_detection, query_latency, query_throughput,
+                   search_scaling, storage_efficiency, streaming_churn,
+                   temporal_accuracy, update_performance)
     suites = [
         ("update_performance", update_performance),
         ("query_latency", query_latency),
@@ -29,6 +29,7 @@ def main() -> None:
         ("temporal_accuracy", temporal_accuracy),
         ("search_scaling", search_scaling),
         ("streaming_churn", streaming_churn),
+        ("query_throughput", query_throughput),
     ]
     print("name,value,notes")
     failures = 0

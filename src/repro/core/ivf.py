@@ -14,6 +14,8 @@ import dataclasses
 
 import numpy as np
 
+from .types import pad_queries
+
 
 @dataclasses.dataclass
 class IVFStats:
@@ -31,6 +33,7 @@ class IVFIndex:
         self.centroids: np.ndarray | None = None     # (C, d)
         self._lists: list[np.ndarray] = []           # row ids per centroid
         self._vectors: np.ndarray | None = None
+        self._members: np.ndarray | None = None      # (C, Lmax), -1-padded
 
     # -- build ----------------------------------------------------------
     def build(self, vectors: np.ndarray) -> None:
@@ -53,6 +56,7 @@ class IVFIndex:
         self._vectors = v
         self._assign = assign
         self._lists = [np.nonzero(assign == j)[0] for j in range(c)]
+        self._members = None
 
     def restore(self, centroids: np.ndarray, vectors: np.ndarray,
                 assign: np.ndarray) -> None:
@@ -64,39 +68,63 @@ class IVFIndex:
         self._assign = np.asarray(assign, np.int64)
         c = self.centroids.shape[0]
         self._lists = [np.nonzero(self._assign == j)[0] for j in range(c)]
+        self._members = None
+
+    def _member_table(self) -> np.ndarray:
+        """Partition member lists as one -1-padded (C, Lmax) array, so a
+        batch's candidate rows come from one fancy-index instead of a
+        per-query list concatenation."""
+        if self._members is None:
+            lmax = max((len(l) for l in self._lists), default=0)
+            m = np.full((len(self._lists), max(lmax, 1)), -1, np.int64)
+            for j, l in enumerate(self._lists):
+                m[j, :len(l)] = l
+            self._members = m
+        return self._members
 
     # -- search -----------------------------------------------------------
     def search(self, queries: np.ndarray, k: int = 5, nprobe: int = 8,
                mask: np.ndarray | None = None
                ) -> tuple[np.ndarray, np.ndarray, IVFStats]:
-        """Returns (scores (Q, k), row ids (Q, k), stats).
+        """Batched search. Returns (scores (Q, k), row ids (Q, k), stats).
+
+        Centroid routing for the whole batch is ONE matmul + one top-k;
+        candidate rows for the whole batch come from one fancy-index of
+        the padded member table. Per-candidate scoring stays a per-query
+        matvec over that query's own candidate rows — the matvec shape
+        depends only on the query's probe set, never on the batch size,
+        so a query's scores are bit-identical whether it runs alone or
+        inside a batch (the engine's batch==sequential guarantee).
 
         ``mask`` (N,) bool, optional: rows with mask=False (tombstoned
         slots in a sealed segment) are skipped before scoring, so they can
         never rank — the segmented index's deletion-vector path.
         """
         assert self.centroids is not None, "build() first"
-        q = np.atleast_2d(np.asarray(queries, np.float32))
+        qp, nq = pad_queries(queries)
+        q = qp[:nq]
         nprobe = min(nprobe, len(self._lists))
-        c_scores = q @ self.centroids.T                   # (Q, C)
-        probe = np.argsort(-c_scores, axis=1)[:, :nprobe]
-        out_s = np.full((q.shape[0], k), -np.inf, np.float32)
-        out_i = np.full((q.shape[0], k), -1, np.int64)
-        scanned = 0
-        for qi in range(q.shape[0]):
-            rows = np.concatenate([self._lists[j] for j in probe[qi]]) \
-                if nprobe else np.empty(0, np.int64)
-            if mask is not None and len(rows):
-                rows = rows[mask[rows]]
+        c_scores = qp @ self.centroids.T                  # (Q, C): routing
+        probe = np.argsort(-c_scores[:nq], axis=1,
+                           kind="stable")[:, :nprobe]
+        members = self._member_table()
+        cand = members[probe].reshape(nq, -1)             # (Q, nprobe*Lmax)
+        keep = cand >= 0
+        if mask is not None:
+            keep &= mask[np.clip(cand, 0, None)]
+        out_s = np.full((nq, k), -np.inf, np.float32)
+        out_i = np.full((nq, k), -1, np.int64)
+        scanned = int(np.count_nonzero(keep))
+        for qi in range(nq):
+            rows = cand[qi][keep[qi]]
             if len(rows) == 0:
                 continue
-            scanned += len(rows)
             scores = self._vectors[rows] @ q[qi]
-            top = np.argsort(-scores)[:k]
+            top = np.argsort(-scores, kind="stable")[:k]
             out_s[qi, : len(top)] = scores[top]
             out_i[qi, : len(top)] = rows[top]
         stats = IVFStats(len(self._lists), len(self._vectors),
-                         scanned / max(q.shape[0] * len(self._vectors), 1))
+                         scanned / max(nq * len(self._vectors), 1))
         return out_s, out_i, stats
 
     def recall_at_k(self, queries: np.ndarray, k: int = 10,

@@ -153,20 +153,77 @@ class LiveVectorLake:
         return ts
 
     # ------------------------------------------------------------------
-    # queries (paper §III-D)
+    # queries (paper §III-D; batched engine DESIGN.md §8)
     # ------------------------------------------------------------------
     def query(self, text: str, k: int = 5, at: Optional[int] = None,
               window: Optional[tuple[int, int]] = None) -> list[SearchResult]:
-        intent = classify_query(text, at=at, window=window)
-        q_vec = self.embedder.embed([text])[0]
-        if intent.mode == CURRENT:
-            return self.hot.search(q_vec, k=k)[0]
-        if intent.mode == HISTORICAL:
-            results = self.temporal.query_at(q_vec, intent.at, k=k)
-            self.temporal.assert_no_leakage(results, intent.at)
-            return results
-        assert intent.mode == COMPARATIVE
-        return self.temporal.query_window(q_vec, *intent.window, k=k)
+        return self.query_batch([text], k=k, at=at, window=window)[0]
+
+    def query_batch(self, texts: Sequence[str], k: int = 5,
+                    at: Optional[int] = None,
+                    window: Optional[tuple[int, int]] = None
+                    ) -> list[list[SearchResult]]:
+        """Batched retrieval: embed ALL queries in one embedder call,
+        group them by temporal intent ((mode, at, window) — explicit
+        arguments or expressions parsed from each text), and execute each
+        group as ONE batched pass over its tier. Results come back in
+        input order and are bit-identical to ``[query(t) for t in
+        texts]`` — the engine guarantees a query scores the same alone or
+        inside a batch."""
+        if not texts:
+            return []
+        intents = [classify_query(t, at=at, window=window) for t in texts]
+        vecs = self.embedder.embed(list(texts))
+        groups: dict[tuple, list[int]] = {}
+        for i, it in enumerate(intents):
+            groups.setdefault((it.mode, it.at, it.window), []).append(i)
+        out: list[Optional[list[SearchResult]]] = [None] * len(texts)
+        for (mode, g_at, g_window), idxs in groups.items():
+            q = vecs[idxs]
+            if mode == CURRENT:
+                res = self.hot.search(q, k=k)
+            elif mode == HISTORICAL:
+                res = self.temporal.query_at_batch(q, g_at, k=k)
+                for r in res:
+                    self.temporal.assert_no_leakage(r, g_at)
+            else:
+                assert mode == COMPARATIVE
+                res = self.temporal.query_window_batch(q, *g_window, k=k)
+            for j, i in enumerate(idxs):
+                out[i] = res[j]
+        return out
+
+    def query_batcher(self, k: int = 5, max_batch: int = 32,
+                      max_wait_s: float = 0.0) -> "Batcher":
+        """A serving-layer batcher (serve/batcher.py) over this store:
+        concurrent queries queue and coalesce into batched
+        ``query_batch`` passes. Payloads are query strings or
+        ``(text, at, window)`` tuples; requests are bucketed by temporal
+        intent so one dispatched batch maps to ONE engine group — all
+        concurrent CURRENT queries land in a single hot-tier batch."""
+        from ..serve.batcher import Batcher
+
+        def norm(payload) -> tuple[str, Optional[int], Optional[tuple]]:
+            if isinstance(payload, str):
+                return payload, None, None
+            text, p_at, p_window = payload
+            return text, p_at, p_window
+
+        def bucket(payload):
+            # the resolved intent IS the bucket key (frozen dataclass):
+            # one dispatched batch == exactly one engine group, whether
+            # the intent came from explicit args or the query text.
+            text, p_at, p_window = norm(payload)
+            return classify_query(text, at=p_at, window=p_window)
+
+        def run(payloads: list) -> list:
+            texts = [norm(p)[0] for p in payloads]
+            it = bucket(payloads[0])   # whole batch shares this intent
+            return self.query_batch(texts, k=k, at=it.at,
+                                    window=it.window)
+
+        return Batcher(run_batch=run, max_batch=max_batch,
+                       max_wait_s=max_wait_s, bucket_fn=bucket)
 
     # ------------------------------------------------------------------
     # fault tolerance

@@ -24,7 +24,7 @@ from typing import Optional
 import numpy as np
 
 from .cold_tier import ColdSnapshot, ColdTier
-from .types import SearchResult, VALID_TO_OPEN
+from .types import SearchResult, VALID_TO_OPEN, pad_queries
 
 CURRENT = "current"
 HISTORICAL = "historical"
@@ -82,19 +82,33 @@ def _snapshot_results(snap: ColdSnapshot, scores: np.ndarray,
 
 class TemporalEngine:
     """Cold-path execution: snapshot load -> (validity-fused) scoring ->
-    top-k. ``device_resident=True`` keeps the FULL history on device and
-    relies on the fused kernel mask only (the beyond-paper fast path: no
-    per-query snapshot materialization)."""
+    top-k, batched over a (Q, d) query block. ``device_resident=True``
+    keeps the FULL history on device and relies on the fused kernel mask
+    only (the beyond-paper fast path: no per-query snapshot
+    materialization).
+
+    Point-in-time snapshots are memoized keyed by (latest cold version,
+    target instant): the cold tier is append-only, so a (version, ts)
+    snapshot is immutable and repeated point-in-time queries stop
+    re-folding the JSON log. ``invalidate()`` (called by the store on
+    every commit) drops the cache; the version key alone already makes a
+    stale hit impossible."""
+
+    SNAP_CACHE_MAX = 32
 
     def __init__(self, cold: ColdTier, device_resident: bool = False):
         self.cold = cold
         self.device_resident = device_resident
         self._resident: Optional[ColdSnapshot] = None
         self._resident_version = -1
+        self._snap_cache: dict[tuple, ColdSnapshot] = {}
+        self.snap_hits = 0
+        self.snap_misses = 0
 
     def invalidate(self) -> None:
         self._resident = None
         self._resident_version = -1
+        self._snap_cache.clear()
 
     def _full_history(self) -> ColdSnapshot:
         v = self.cold.latest_version()
@@ -103,37 +117,69 @@ class TemporalEngine:
             self._resident_version = v
         return self._resident
 
-    def query_at(self, q_vec: np.ndarray, ts: int, k: int = 5) -> list[SearchResult]:
+    def _snapshot_at(self, ts: int, include_closed: bool = False
+                     ) -> ColdSnapshot:
+        """Memoized ``ColdTier.snapshot``; FIFO-bounded."""
+        key = (self.cold.latest_version(), ts, include_closed)
+        snap = self._snap_cache.get(key)
+        if snap is None:
+            self.snap_misses += 1
+            snap = self.cold.snapshot(as_of_ts=ts,
+                                      include_closed=include_closed)
+            while len(self._snap_cache) >= self.SNAP_CACHE_MAX:
+                self._snap_cache.pop(next(iter(self._snap_cache)))
+            self._snap_cache[key] = snap
+        else:
+            self.snap_hits += 1
+        return snap
+
+    def query_at(self, q_vec: np.ndarray, ts: int, k: int = 5
+                 ) -> list[SearchResult]:
+        return self.query_at_batch(
+            np.asarray(q_vec, np.float32).reshape(1, -1), ts, k=k)[0]
+
+    def query_at_batch(self, queries: np.ndarray, ts: int, k: int = 5
+                       ) -> list[list[SearchResult]]:
+        """Point-in-time retrieval for a whole (Q, d) query block: one
+        snapshot resolve, one fused validity-masked score+top-k kernel
+        dispatch for all queries."""
         from ..kernels.temporal_mask_score.ops import temporal_topk
 
+        qp, nq = pad_queries(queries)
         if self.device_resident:
             snap = self._full_history()
         else:
-            snap = self.cold.snapshot(as_of_ts=ts)   # paper-faithful path
+            snap = self._snapshot_at(ts)             # paper-faithful path
         if len(snap) == 0:
-            return []
-        scores, idx = temporal_topk(
-            np.asarray(q_vec, np.float32).reshape(1, -1),
-            snap.embeddings, snap.valid_from, snap.valid_to, ts,
-            min(k, len(snap)))
-        return _snapshot_results(snap, np.asarray(scores)[0],
-                                 np.asarray(idx)[0], k)
+            return [[] for _ in range(nq)]
+        scores, idx = temporal_topk(qp, snap.embeddings, snap.valid_from,
+                                    snap.valid_to, ts, min(k, len(snap)))
+        scores, idx = np.asarray(scores), np.asarray(idx)
+        return [_snapshot_results(snap, scores[qi], idx[qi], k)
+                for qi in range(nq)]
 
     def query_window(self, q_vec: np.ndarray, t0: int, t1: int,
                      k: int = 5) -> list[SearchResult]:
+        return self.query_window_batch(
+            np.asarray(q_vec, np.float32).reshape(1, -1), t0, t1, k=k)[0]
+
+    def query_window_batch(self, queries: np.ndarray, t0: int, t1: int,
+                           k: int = 5) -> list[list[SearchResult]]:
         """Records valid at ANY instant of [t0, t1): interval overlap
-        (valid_from < t1) and (valid_to > t0)."""
-        snap = self.cold.snapshot(as_of_ts=t1, include_closed=True)
+        (valid_from < t1) and (valid_to > t0). One snapshot resolve and
+        one scoring matmul for the whole query block."""
+        qp, nq = pad_queries(queries)
+        snap = self._snapshot_at(t1, include_closed=True)
         if len(snap) == 0:
-            return []
+            return [[] for _ in range(nq)]
         overlap = (snap.valid_from < t1) & (snap.valid_to > t0)
         if not overlap.any():
-            return []
-        q = np.asarray(q_vec, np.float32).reshape(-1)
-        scores = snap.embeddings @ q
-        scores = np.where(overlap, scores, -np.inf)
-        idx = np.argsort(-scores)[:k]
-        return _snapshot_results(snap, scores[idx], idx, k)
+            return [[] for _ in range(nq)]
+        scores = (snap.embeddings @ qp.T).T[:nq]     # (Q, N)
+        scores = np.where(overlap[None, :], scores, -np.inf)
+        idx = np.argsort(-scores, axis=1, kind="stable")[:, :k]
+        return [_snapshot_results(snap, scores[qi, idx[qi]], idx[qi], k)
+                for qi in range(nq)]
 
     def assert_no_leakage(self, results: list[SearchResult], ts: int) -> None:
         """Invariant check used by tests/benchmarks: every returned chunk's

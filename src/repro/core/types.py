@@ -21,6 +21,21 @@ STATUS_SUPERSEDED = "superseded"
 STATUS_DELETED = "deleted"
 
 
+def pad_queries(queries: np.ndarray) -> tuple[np.ndarray, int]:
+    """(Q, d) float32 query block padded to >= 2 rows, plus the real Q.
+
+    Single-row products take a different (bit-inequivalent) BLAS/kernel
+    path than multi-row ones; the batched engine guarantees a query
+    scores identically alone or inside any batch, so every scoring path
+    pads Q=1 to 2 (zero row) and slices the result back to Q rows."""
+    q = np.atleast_2d(np.asarray(queries, np.float32))
+    nq = q.shape[0]
+    if nq >= 2:
+        return q, nq
+    return np.concatenate(
+        [q, np.zeros((2 - nq, q.shape[1]), np.float32)]), nq
+
+
 @dataclasses.dataclass(frozen=True)
 class Chunk:
     """A semantic chunk produced by the chunker (paper §III-A1).

@@ -8,11 +8,14 @@ path never rebuilds the whole index — queries stay servable during
 compaction because the old segment set remains live until one atomic
 manifest publish swaps in the merged result.
 
-Read path: the query runs exactly over the memtable (fused top-k kernel)
-and sub-linearly over each segment (centroid routing, nprobe partitions);
-per-segment top-k candidate lists are merged by one k-candidate top-k
-merge. The same merge serves a future shard_map fan-out: a shard is just
-another candidate source (DESIGN.md §7.5).
+Read path (batched, array-native — DESIGN.md §8): a (Q, d) query block
+runs exactly over the memtable PLUS every small segment in one fused
+top-k kernel dispatch, and sub-linearly over each IVF segment (batched
+centroid routing, nprobe partitions); per-source (Q, k) score/row blocks
+are mapped to global row ids and merged by one stable top-k over the
+concatenated (Q, n_sources*k) candidate matrix. The same merge serves a
+future shard_map fan-out: a shard is just another candidate source
+(DESIGN.md §7.5).
 
 Consistency: ``_by_key`` maps every live (doc_id, position) to exactly
 one location — a memtable slot (int) or a (seg_id, row) pair. Inserting
@@ -28,11 +31,13 @@ the last seal is re-inserted — not one monolithic insert.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional, Sequence
 
 import numpy as np
 
-from ..core.types import ChunkRecord, SearchResult, VALID_TO_OPEN
+from ..core.types import (ChunkRecord, SearchResult, VALID_TO_OPEN,
+                          pad_queries)
 from .compaction import CompactionStats, SizeTieredCompactor
 from .manifest import Manifest
 from .memtable import Memtable
@@ -42,6 +47,60 @@ from .segment import Segment
 class CompactionInterrupted(RuntimeError):
     """Raised by the fault-injection hook to simulate a crash mid-seal or
     mid-compaction (tests only)."""
+
+
+def merge_topk_candidates(scores: np.ndarray, gids: np.ndarray,
+                          authority: np.ndarray, k: int
+                          ) -> tuple[np.ndarray, np.ndarray]:
+    """Array-native top-k merge over the concatenated per-source candidate
+    matrix (DESIGN.md §8).
+
+    ``scores``/``gids``: (Q, W) blocks from every source side by side
+    (W = sum of per-source k). ``authority`` is the concatenated
+    per-source authority row-array over the global row-id space: bit g is
+    set iff the index's ``_by_key`` maps row g's key to exactly row g —
+    so the per-candidate dict lookup of the old tuple-sort merge becomes
+    ONE vectorized gather. Returns (top_s, top_g), both (Q, k); losers
+    and empty slots are (-inf, -1).
+
+    Ordering matches the old stable tuple sort exactly: descending score,
+    ties broken by candidate column (i.e. source order, then the
+    source's own rank order).
+    """
+    valid = np.isfinite(scores) & (gids >= 0)
+    valid &= authority[np.clip(gids, 0, None)]
+    s = np.where(valid, scores, -np.inf).astype(np.float32)
+    order = np.argsort(-s, axis=1, kind="stable")[:, :k]
+    top_s = np.take_along_axis(s, order, axis=1)
+    top_g = np.where(np.isfinite(top_s),
+                     np.take_along_axis(np.asarray(gids), order, axis=1), -1)
+    if top_s.shape[1] < k:                       # fewer candidates than k
+        pad = k - top_s.shape[1]
+        top_s = np.pad(top_s, ((0, 0), (0, pad)),
+                       constant_values=-np.inf)
+        top_g = np.pad(top_g, ((0, 0), (0, pad)), constant_values=-1)
+    return top_s, top_g
+
+
+@dataclasses.dataclass
+class _Catalog:
+    """Immutable-until-structural-change view of the source set.
+
+    Global row-id space: memtable slots occupy [0, mem_capacity); each
+    segment (in seal order) occupies [start, start + len). ``fused_emb``
+    concatenates the memtable slot array with every small (non-IVF)
+    segment so they are scanned by ONE fused top-k dispatch instead of a
+    dispatch per source; ``fused_gids`` maps fused-local rows back to
+    global ids. When small segments exist the fused block is a copy, so
+    memtable writes are mirrored into it (``mirrored``)."""
+
+    segs: list                    # all segments, seal order
+    seg_starts: np.ndarray        # (n_segs,) global row-id base per segment
+    ivf: list                     # [(segment, base)] for IVF-partitioned
+    small: list                   # [(segment, base)] for exact-scan
+    fused_emb: np.ndarray         # (mem_capacity + small rows, d)
+    fused_gids: np.ndarray        # fused-local row -> global row id
+    mirrored: bool
 
 
 class SegmentedIndex:
@@ -62,6 +121,7 @@ class SegmentedIndex:
         # key -> memtable slot (int) | (seg_id, row)
         self._by_key: dict[tuple[str, int], object] = {}
         self._seg_meta: dict[str, tuple[str, str]] = {}  # id -> (file, sha)
+        self._cat: Optional[_Catalog] = None   # read-path source catalog
         self._seq = 0
         self._scan_scanned = 0
         self._scan_denom = 0
@@ -89,15 +149,24 @@ class SegmentedIndex:
             loc = self._by_key.get(key)
             if isinstance(loc, int):               # live in memtable: in-place
                 self.mem.overwrite(loc, r)
+                self._mirror(loc)
             else:
                 if loc is not None:                # live in a segment: shadow
                     seg_id, row = loc
                     self.segments[seg_id].kill(row)
                 if self.mem.full:
                     self.seal()
-                self._by_key[key] = self.mem.put(r)
+                slot = self.mem.put(r)
+                self._by_key[key] = slot
+                self._mirror(slot)
             self.cstats.rows_ingested += 1
         self.maybe_compact()
+
+    def _mirror(self, slot: int) -> None:
+        """Keep the fused scan block's memtable rows in sync: the block is
+        a copy when small segments are fused behind the memtable."""
+        if self._cat is not None and self._cat.mirrored:
+            self._cat.fused_emb[slot] = self.mem._emb[slot]
 
     def delete(self, keys: Sequence[tuple[str, int]]) -> int:
         n = 0
@@ -134,6 +203,7 @@ class SegmentedIndex:
                       seed=self.seed)
         self._commit_segments("seal", add=[seg], remove=[])
         self.segments[seg.seg_id] = seg
+        self._cat = None
         for row, key in enumerate(cols["keys"]):
             self._by_key[key] = (seg.seg_id, row)
         self.mem.reset()
@@ -170,6 +240,7 @@ class SegmentedIndex:
                 ivf_min_rows=self.ivf_min_rows, seed=self.seed)
         self._commit_segments("merge", add=[merged] if merged else [],
                               remove=victims)
+        self._cat = None
         for v in victims:
             del self.segments[v.seg_id]
             self._seg_meta.pop(v.seg_id, None)
@@ -217,75 +288,146 @@ class SegmentedIndex:
             raise CompactionInterrupted(f"injected crash at {point}")
 
     # ------------------------------------------------------------------
-    # reads
+    # reads (batched, array-native — DESIGN.md §8)
     # ------------------------------------------------------------------
+    def _catalog(self) -> _Catalog:
+        """Build (lazily, cached until the segment set changes) the global
+        row-id layout and the fused small-source scan block."""
+        if self._cat is None:
+            segs = list(self.segments.values())
+            cap = self.mem.capacity
+            seg_starts = np.empty(len(segs), np.int64)
+            small, ivf = [], []
+            base = cap
+            for i, s in enumerate(segs):
+                seg_starts[i] = base
+                (ivf if s.ivf is not None else small).append((s, base))
+                base += len(s)
+            parts_e = [self.mem._emb] + [s.emb for s, _ in small]
+            parts_g = [np.arange(cap, dtype=np.int64)] + \
+                [b + np.arange(len(s), dtype=np.int64) for s, b in small]
+            mirrored = bool(small)
+            self._cat = _Catalog(
+                segs=segs, seg_starts=seg_starts, ivf=ivf, small=small,
+                fused_emb=(np.concatenate(parts_e) if mirrored
+                           else self.mem._emb),
+                fused_gids=(np.concatenate(parts_g) if mirrored
+                            else parts_g[0]),
+                mirrored=mirrored)
+        return self._cat
+
+    def _authority_rows(self, cat: _Catalog) -> np.ndarray:
+        """The per-source authority row-arrays, concatenated over the
+        global row-id space. The memtable's ``_active`` mask and each
+        segment's ``alive`` deletion vector ARE these arrays: every
+        write-path mutation keeps them in lockstep with ``_by_key``
+        (insert over a live key kills the shadowed row, delete pops the
+        key and frees/kills its row, rebuild claims each key exactly
+        once), so bit g is set iff ``_by_key`` maps row g's key to row g.
+        The merge then replaces the old per-candidate dict lookup with
+        one boolean gather."""
+        parts = [self.mem._active] + [s.alive for s in cat.segs]
+        return np.concatenate(parts) if cat.segs else self.mem._active
+
+    def validate_authority(self) -> bool:
+        """Invariant check (tests): the vectorized authority arrays agree
+        with ``_by_key`` exactly."""
+        cat = self._catalog()
+        auth = self._authority_rows(cat)
+        expect = np.zeros_like(auth)
+        for key, loc in self._by_key.items():
+            if isinstance(loc, int):
+                expect[loc] = True
+            else:
+                seg_ids = [s.seg_id for s in cat.segs]
+                i = seg_ids.index(loc[0])
+                expect[cat.seg_starts[i] + loc[1]] = True
+        return bool(np.array_equal(auth, expect))
+
     def search(self, queries: np.ndarray, k: int = 5
                ) -> list[list[SearchResult]]:
+        """Batched top-k: ONE fused kernel dispatch over the memtable plus
+        every small segment, one batched nprobe-routed pass per IVF
+        segment, then one array-native merge over the concatenated
+        (Q, n_sources*k) candidate matrix. A query's results are
+        bit-identical whether it runs alone or inside a batch."""
         q = np.atleast_2d(np.asarray(queries, np.float32))
         nq = q.shape[0]
         if not self._by_key:
             return [[] for _ in range(nq)]
-        # gather k candidates per source: memtable (exact) + each segment
-        # (nprobe-routed); same merge a shard_map fan-out would feed.
-        cands: list[list[tuple[float, Optional[Segment], int]]] = \
-            [[] for _ in range(nq)]
+        cat = self._catalog()
+        auth = self._authority_rows(cat)
+        blocks_s: list[np.ndarray] = []
+        blocks_g: list[np.ndarray] = []
         scanned = 0
-        if len(self.mem):
-            s, idx = self.mem.search(q, k)
-            scanned += len(self.mem)
-            for qi in range(nq):
-                for j in range(s.shape[1]):
-                    if np.isfinite(s[qi, j]):
-                        cands[qi].append((float(s[qi, j]), None,
-                                          int(idx[qi, j])))
-        for seg in self.segments.values():
+        # fused block: memtable + small segments, one kernel dispatch;
+        # its alive mask is the authority array gathered by fused row.
+        fmask = auth[cat.fused_gids]
+        if fmask.any():
+            from ..kernels.topk_search.ops import topk_search
+            qp, _ = pad_queries(q)
+            s, idx = topk_search(qp, cat.fused_emb, fmask,
+                                 min(k, cat.fused_emb.shape[0]))
+            s = np.asarray(s)[:nq]
+            idx = np.asarray(idx)[:nq]
+            g = np.where(np.isfinite(s),
+                         cat.fused_gids[np.clip(idx, 0, None)], -1)
+            blocks_s.append(s.astype(np.float32))
+            blocks_g.append(g)
+            scanned += int(fmask.sum())
+        # IVF segments: batched centroid routing + per-query member scan.
+        for seg, sbase in cat.ivf:
             if seg.n_alive == 0:
                 continue
             s, rows, seg_scanned = seg.search(q, k, nprobe=self.nprobe)
+            s = np.asarray(s, np.float32)
+            rows = np.asarray(rows)
+            g = np.where(rows >= 0, sbase + np.clip(rows, 0, None), -1)
+            blocks_s.append(s)
+            blocks_g.append(g)
             scanned += seg_scanned
-            for qi in range(nq):
-                for j in range(s.shape[1]):
-                    sc, r = float(s[qi, j]), int(rows[qi, j])
-                    if np.isfinite(sc) and r >= 0:
-                        cands[qi].append((sc, seg, r))
         self._scan_scanned += scanned * nq
         self._scan_denom += max(len(self._by_key), 1) * nq
-        return [self._merge_topk(cands[qi], k) for qi in range(nq)]
+        if not blocks_s:
+            return [[] for _ in range(nq)]
+        top_s, top_g = merge_topk_candidates(
+            np.concatenate(blocks_s, axis=1),
+            np.concatenate(blocks_g, axis=1), auth, k)
+        return self._build_results(top_s, top_g, cat)
 
-    def _merge_topk(self, cands: list[tuple[float, Optional[Segment], int]],
-                    k: int) -> list[SearchResult]:
-        """k-candidate top-k merge with authority check: a candidate only
-        survives if ``_by_key`` still points at its location (drops rows
-        shadowed by a newer insert racing the same batch)."""
-        out: list[SearchResult] = []
-        seen: set[tuple[str, int]] = set()
-        for score, seg, row in sorted(cands, key=lambda t: -t[0]):
-            if len(out) == k:
-                break
-            if seg is None:
-                mem = self.mem
-                doc = mem._doc_ids[row]
-                if doc is None:
+    def _build_results(self, top_s: np.ndarray, top_g: np.ndarray,
+                       cat: _Catalog) -> list[list[SearchResult]]:
+        """Materialize SearchResults for the Q*k winners only."""
+        cap = self.mem.capacity
+        seg_idx = (np.searchsorted(cat.seg_starts, top_g, side="right") - 1
+                   if cat.segs else np.zeros_like(top_g))
+        out: list[list[SearchResult]] = []
+        for qi in range(top_s.shape[0]):
+            res: list[SearchResult] = []
+            for j in range(top_s.shape[1]):
+                g = int(top_g[qi, j])
+                if g < 0:
                     continue
-                key = (doc, int(mem._positions[row]))
-                if self._by_key.get(key) != row or key in seen:
-                    continue
-                seen.add(key)
-                out.append(SearchResult(
-                    chunk_id=mem._chunk_ids[row] or "", doc_id=doc,
-                    position=key[1], score=score, text=mem._texts[row],
-                    valid_from=int(mem._valid_from[row]),
-                    valid_to=VALID_TO_OPEN, tier="hot"))
-            else:
-                key = seg.key(row)
-                if self._by_key.get(key) != (seg.seg_id, row) or key in seen:
-                    continue
-                seen.add(key)
-                out.append(SearchResult(
-                    chunk_id=seg.chunk_ids[row], doc_id=key[0],
-                    position=key[1], score=score, text=seg.texts[row],
-                    valid_from=int(seg.valid_from[row]),
-                    valid_to=VALID_TO_OPEN, tier="hot"))
+                score = float(top_s[qi, j])
+                if g < cap:
+                    mem, row = self.mem, g
+                    res.append(SearchResult(
+                        chunk_id=mem._chunk_ids[row] or "",
+                        doc_id=mem._doc_ids[row] or "",
+                        position=int(mem._positions[row]), score=score,
+                        text=mem._texts[row],
+                        valid_from=int(mem._valid_from[row]),
+                        valid_to=VALID_TO_OPEN, tier="hot"))
+                else:
+                    seg = cat.segs[int(seg_idx[qi, j])]
+                    row = g - int(cat.seg_starts[int(seg_idx[qi, j])])
+                    res.append(SearchResult(
+                        chunk_id=seg.chunk_ids[row], doc_id=seg.doc_ids[row],
+                        position=int(seg.positions[row]), score=score,
+                        text=seg.texts[row],
+                        valid_from=int(seg.valid_from[row]),
+                        valid_to=VALID_TO_OPEN, tier="hot"))
+            out.append(res)
         return out
 
     def active_embeddings(self) -> np.ndarray:
@@ -350,6 +492,7 @@ class SegmentedIndex:
         self.segments.clear()
         self._by_key.clear()
         self._seg_meta.clear()
+        self._cat = None
         self._scan_scanned = self._scan_denom = 0
         self.cstats = CompactionStats()
         if drop_disk and self.manifest is not None:

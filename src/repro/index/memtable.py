@@ -79,16 +79,8 @@ class Memtable:
         self._free = list(range(self.capacity - 1, -1, -1))
 
     # -- reads ------------------------------------------------------------
-    def search(self, queries: np.ndarray, k: int) -> tuple[np.ndarray,
-                                                           np.ndarray]:
-        """Exact masked top-k over the slot array. Returns
-        (scores (Q, k), slots (Q, k)); inactive slots score -inf."""
-        from ..kernels.topk_search.ops import topk_search
-        q = np.atleast_2d(np.asarray(queries, np.float32))
-        k_eff = min(k, self.capacity)
-        scores, idx = topk_search(q, self._emb, self._active, k_eff)
-        return np.asarray(scores), np.asarray(idx)
-
+    # (Queries never hit the memtable directly: SegmentedIndex.search
+    # scans the slot array through its fused small-source block.)
     def extract(self) -> dict:
         """Columnar copy of the live rows (seal input), in slot order, plus
         their (doc_id, position) keys."""

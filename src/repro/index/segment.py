@@ -82,14 +82,17 @@ class Segment:
         scan otherwise; either way tombstoned rows are masked before
         ranking."""
         q = np.atleast_2d(np.asarray(queries, np.float32))
+        nq = q.shape[0]
         k_eff = min(k, len(self))
         if self.ivf is not None:
             s, i, stats = self.ivf.search(q, k=k_eff, nprobe=nprobe,
                                           mask=self.alive)
             return s, i, int(round(stats.fraction_scanned * len(self)))
+        from ..core.types import pad_queries
         from ..kernels.topk_search.ops import topk_search
-        s, i = topk_search(q, self.emb, self.alive, k_eff)
-        return np.asarray(s), np.asarray(i), self.n_alive
+        qp, _ = pad_queries(q)
+        s, i = topk_search(qp, self.emb, self.alive, k_eff)
+        return np.asarray(s)[:nq], np.asarray(i)[:nq], self.n_alive
 
     # -- persistence -------------------------------------------------------
     def filename(self) -> str:

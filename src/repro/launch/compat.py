@@ -1,0 +1,81 @@
+"""jax version-compat shims.
+
+The repo targets the newer jax spelling ``jax.make_mesh(shape, names,
+axis_types=(jax.sharding.AxisType.Auto, ...))``, but the pinned jax
+(0.4.37) predates both the public ``AxisType`` enum and the
+``axis_types`` kwarg. This module provides version-independent
+equivalents:
+
+  - ``AxisType``: the public enum on new jax, the internal
+    ``jax._src.mesh.AxisTypes`` on 0.4.x, a local stand-in otherwise.
+    (Auto is the default mesh behavior everywhere, so on old jax the
+    value is only ever carried, never acted on.)
+  - ``make_mesh(shape, names, axis_types=..., devices=...)``: forwards
+    ``axis_types`` only when the installed jax accepts it.
+  - ``shard_map``: ``jax.shard_map`` on new jax, the
+    ``jax.experimental`` spelling (with ``check_vma`` -> ``check_rep``
+    translation) on 0.4.x.
+  - ``install()``: opt-in — patches the newer spellings onto the
+    installed jax so EXTERNAL code written against the new API runs
+    unmodified. The repo itself imports this module's symbols directly
+    and never mutates jax as an import side effect.
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+
+_ORIG_MAKE_MESH = jax.make_mesh
+_HAS_AXIS_TYPES_KWARG = ("axis_types"
+                         in inspect.signature(_ORIG_MAKE_MESH).parameters)
+
+try:
+    AxisType = jax.sharding.AxisType                 # jax >= 0.6
+except AttributeError:
+    try:
+        from jax._src.mesh import AxisTypes as AxisType  # 0.4.x internal
+    except ImportError:                                   # pragma: no cover
+        class AxisType(enum.Enum):
+            Auto = enum.auto()
+            Explicit = enum.auto()
+            Manual = enum.auto()
+
+try:
+    shard_map = jax.shard_map                        # jax >= 0.6
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map_04x
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True,
+                  **kwargs):
+        """0.4.x spelling; ``check_vma`` was named ``check_rep`` there."""
+        return _shard_map_04x(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma,
+                              **kwargs)
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` that tolerates ``axis_types`` on every jax.
+
+    When ``axis_types`` is omitted, Auto is implied — that is also the
+    default on jax versions that do support the kwarg, so behavior is
+    identical across versions.
+    """
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if axis_types is not None and _HAS_AXIS_TYPES_KWARG:
+        kwargs["axis_types"] = axis_types
+    return _ORIG_MAKE_MESH(axis_shapes, axis_names, **kwargs)
+
+
+def install() -> None:
+    """Make the newer-jax spellings importable on the pinned jax:
+    ``jax.sharding.AxisType`` and ``jax.make_mesh(axis_types=...)``."""
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = AxisType
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = shard_map
+    if not _HAS_AXIS_TYPES_KWARG:
+        jax.make_mesh = make_mesh

@@ -19,7 +19,7 @@ from typing import Any, Callable, Optional
 class Request:
     req_id: int
     payload: Any
-    bucket: int = 0
+    bucket: Any = 0            # any equality-comparable bucket key
     enqueued_at: float = 0.0
     result: Any = None
     done: bool = False
@@ -29,7 +29,7 @@ class Request:
 class Batcher:
     def __init__(self, run_batch: Callable[[list[Any]], list[Any]],
                  max_batch: int = 8, max_wait_s: float = 0.0,
-                 bucket_fn: Optional[Callable[[Any], int]] = None,
+                 bucket_fn: Optional[Callable[[Any], Any]] = None,
                  hedge_factor: float = 3.0):
         self.run_batch = run_batch
         self.max_batch = max_batch

@@ -12,7 +12,7 @@ prefill/decode functions, different config + mesh).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +21,7 @@ import numpy as np
 from ..core.store import LiveVectorLake
 from ..data.tokenizer import HashTokenizer
 from ..models import transformer as tfm
+from .batcher import Batcher
 
 
 @dataclasses.dataclass
@@ -35,13 +36,19 @@ class GenerationResult:
 
 class RAGEngine:
     def __init__(self, store: LiveVectorLake, cfg: tfm.TransformerConfig,
-                 params=None, seed: int = 0, max_prompt: int = 256):
+                 params=None, seed: int = 0, max_prompt: int = 256,
+                 retrieval_batch: int = 32, retrieval_k: int = 3):
         self.store = store
         self.cfg = cfg
         self.params = params if params is not None else tfm.init_params(
             jax.random.PRNGKey(seed), cfg)
         self.tokenizer = HashTokenizer(cfg.vocab)
         self.max_prompt = max_prompt
+        # serving-layer coalescing: concurrent retrieval requests queue
+        # here and execute as batched hot-tier / snapshot passes.
+        self.retrieval_k = retrieval_k
+        self.retrieval_batcher: Batcher = store.query_batcher(
+            k=retrieval_k, max_batch=retrieval_batch)
         self._prefill = jax.jit(
             lambda p, t: tfm.prefill(p, t, cfg,
                                      cache_size=max_prompt + 64))
@@ -57,8 +64,32 @@ class RAGEngine:
                max_new_tokens: int = 16) -> GenerationResult:
         # 1. temporal-aware retrieval (hot tier or cold snapshot)
         results = self.store.query(query, k=k, at=at)
+        # 2. grounded generation
+        return self._generate(query, at, results, max_new_tokens)
+
+    def answer_batch(self, queries: Sequence[str], k: Optional[int] = None,
+                     at: Optional[int] = None, max_new_tokens: int = 16
+                     ) -> list[GenerationResult]:
+        """Batched serving path: retrieval for ALL queries coalesces
+        through the request batcher into batched store passes (concurrent
+        CURRENT queries become one hot-tier batch); generation then runs
+        per query. Retrieved contexts are bit-identical to per-query
+        ``answer`` calls."""
+        k = self.retrieval_k if k is None else k
+        if k == self.retrieval_k:
+            reqs = [self.retrieval_batcher.submit((q, at, None))
+                    for q in queries]
+            self.retrieval_batcher.drain()
+            retrieved = [r.result for r in reqs]
+        else:                       # non-default k: direct batched pass
+            retrieved = self.store.query_batch(list(queries), k=k, at=at)
+        return [self._generate(q, at, res, max_new_tokens)
+                for q, res in zip(queries, retrieved)]
+
+    def _generate(self, query: str, at: Optional[int], results,
+                  max_new_tokens: int) -> GenerationResult:
+        """Prefill the grounded prompt, decode greedily."""
         prompt = self.build_prompt(query, results)
-        # 2. grounded generation: prefill the prompt, decode greedily
         tokens = self.tokenizer.encode(prompt, max_len=self.max_prompt)
         toks = jnp.asarray(tokens)[None, :]
         logits, cache, cache_len = self._prefill(self.params, toks)

@@ -145,3 +145,58 @@ class TestValiditySemantics:
                 assert valid[i]
             if ts == vt[i]:
                 assert not valid[i]
+
+
+class TestVectorizedMergeProperties:
+    """The batched engine's array-native top-k merge (DESIGN.md §8) must
+    agree exactly with the old per-candidate tuple-sort merge, including
+    on exact score ties, -inf sentinels, and non-authoritative rows."""
+
+    @staticmethod
+    def _merge_ref(scores, gids, authority, k):
+        """Old merge: stable sort by -score (Python ``sorted`` keeps
+        candidate order on ties), skip dead/non-authoritative, take k."""
+        out = []
+        for qi in range(scores.shape[0]):
+            picked = []
+            for s, g in sorted(((float(scores[qi, j]), int(gids[qi, j]))
+                                for j in range(scores.shape[1])),
+                               key=lambda t: -t[0]):
+                if len(picked) == k:
+                    break
+                if g < 0 or not np.isfinite(s) or not authority[g]:
+                    continue
+                picked.append((np.float32(s), g))
+            out.append(picked)
+        return out
+
+    @given(st.data())
+    @settings(max_examples=150, deadline=None)
+    def test_merge_matches_tuple_sort(self, data):
+        from repro.index.lsm import merge_topk_candidates
+        nq = data.draw(st.integers(1, 5))
+        w = data.draw(st.integers(1, 32))
+        n_rows = data.draw(st.integers(1, 48))
+        k = data.draw(st.integers(1, 10))
+        # quantized scores: exact ties are the interesting regime
+        scores = np.array(data.draw(st.lists(
+            st.lists(st.sampled_from([-1.5, -1.0, 0.0, 0.5, 1.0,
+                                      float("-inf")]),
+                     min_size=w, max_size=w),
+            min_size=nq, max_size=nq)), np.float32)
+        gids = np.array(data.draw(st.lists(
+            st.lists(st.integers(-1, n_rows - 1), min_size=w, max_size=w),
+            min_size=nq, max_size=nq)), np.int64)
+        authority = np.array(data.draw(st.lists(st.booleans(),
+                                                min_size=n_rows,
+                                                max_size=n_rows)), bool)
+        top_s, top_g = merge_topk_candidates(scores, gids, authority, k)
+        assert top_s.shape == (nq, k) and top_g.shape == (nq, k)
+        ref = self._merge_ref(scores, gids, authority, k)
+        for qi in range(nq):
+            got = [(top_s[qi, j], int(top_g[qi, j]))
+                   for j in range(k) if top_g[qi, j] >= 0]
+            assert got == ref[qi]
+            # padding after the last winner is all (-inf, -1)
+            tail = top_g[qi, len(got):]
+            assert (tail == -1).all()
