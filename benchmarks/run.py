@@ -20,13 +20,14 @@ import time
 def main() -> None:
     from . import (change_detection, query_latency, query_throughput,
                    search_scaling, storage_efficiency, streaming_churn,
-                   temporal_accuracy, update_performance)
+                   temporal_accuracy, temporal_scaling, update_performance)
     suites = [
         ("update_performance", update_performance),
         ("query_latency", query_latency),
         ("change_detection", change_detection),
         ("storage_efficiency", storage_efficiency),
         ("temporal_accuracy", temporal_accuracy),
+        ("temporal_scaling", temporal_scaling),
         ("search_scaling", search_scaling),
         ("streaming_churn", streaming_churn),
         ("query_throughput", query_throughput),

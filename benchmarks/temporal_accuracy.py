@@ -19,10 +19,14 @@ def run(n_docs: int = 60, n_versions: int = 5, seed: int = 0,
     rng = np.random.default_rng(seed)
     with tempfile.TemporaryDirectory() as root:
         store = LiveVectorLake(root, dim=384)
+        ingest_ts: dict[tuple[str, int], int] = {}
         for v in range(n_versions):
             for d in corpus.doc_ids():
-                store.ingest(d, corpus.versions[v][d],
-                             ts=corpus.timestamps[v])
+                s = store.ingest(d, corpus.versions[v][d],
+                                 ts=corpus.timestamps[v])
+                # the store bumps same-ts ingests monotonically; the
+                # ACTUAL commit instant is the half-open boundary
+                ingest_ts[(d, v)] = s.ts
 
         # facts that actually change value at some version
         changing = [f for f in corpus.facts
@@ -45,6 +49,24 @@ def run(n_docs: int = 60, n_versions: int = 5, seed: int = 0,
             if hit is not None and f"equals {expected} units" in hit.text:
                 n_correct += 1
 
+        # BOUNDARY instants: query at ts exactly equal to a version commit
+        # timestamp. Half-open semantics: the new record (valid_from ==
+        # ts) IS valid, the superseded one (valid_to == ts) is NOT — the
+        # worst case for any off-by-one in the validity comparison.
+        n_bnd = n_bnd_ok = n_bnd_leak = 0
+        for fact in changing[:n_queries // 2]:
+            v = int(rng.integers(1, n_versions))
+            ts = ingest_ts[(fact.doc_id, v)]      # exact commit instant
+            expected = fact.value_at_version(v)
+            results = store.query(fact.name, k=3, at=ts)
+            n_bnd += 1
+            for r in results:
+                if not (r.valid_from <= ts < r.valid_to):
+                    n_bnd_leak += 1
+            hit = next((r for r in results if fact.name in r.text), None)
+            if hit is not None and f"equals {expected} units" in hit.text:
+                n_bnd_ok += 1
+
         # ALSO current-query sanity: latest value is served from hot tier
         n_cur_ok = 0
         for fact in changing[:10]:
@@ -56,6 +78,8 @@ def run(n_docs: int = 60, n_versions: int = 5, seed: int = 0,
 
     return {"n_queries": n_total, "accuracy": n_correct / max(n_total, 1),
             "leakage_rate": n_leak / max(n_total, 1),
+            "boundary_accuracy": n_bnd_ok / max(n_bnd, 1),
+            "boundary_leakage_rate": n_bnd_leak / max(n_bnd, 1),
             "current_accuracy": n_cur_ok / 10}
 
 
@@ -65,6 +89,10 @@ def main() -> list[tuple]:
         ("temporal/n_queries", r["n_queries"], "paper: 20"),
         ("temporal/accuracy", r["accuracy"], "paper: 1.0"),
         ("temporal/leakage_rate", r["leakage_rate"], "paper: 0.0"),
+        ("temporal/boundary_accuracy", r["boundary_accuracy"],
+         "ts == commit instant (half-open boundary)"),
+        ("temporal/boundary_leakage_rate", r["boundary_leakage_rate"],
+         "must be 0.0"),
         ("temporal/current_accuracy", r["current_accuracy"],
          "latest value served from hot tier"),
     ]

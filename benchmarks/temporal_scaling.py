@@ -1,0 +1,222 @@
+"""Temporal-query cost vs history length (DESIGN.md §9 acceptance).
+
+The paper's sub-2s temporal-query claim (§III-C2, §IV) only holds if
+point-in-time reconstruction cost is BOUNDED as history grows. This
+benchmark sweeps the number of ingested versions and measures, at the
+OLDEST version's instant (worst case for any delta scheme):
+
+  - fused:        the default engine path — resident full-history arrays
+                  + the fused validity-masked top-k kernel (no fold at
+                  query time at all),
+  - ckpt_fold:    checkpoint-seeded log fold (nearest checkpoint <= ts,
+                  delta commits only) + NumPy oracle scoring,
+  - scratch_fold: the from-scratch O(total history) log fold + NumPy
+                  oracle scoring — the pre-checkpoint baseline.
+
+Equivalence gate: at EVERY measured point the fused path must return
+record-for-record the same (chunk_id, score) lists as the from-scratch
+NumPy oracle — ``identical=yes`` in the CSV, ``identical`` in the JSON.
+
+Acceptance (ISSUE 3): at >= 20 versions the accelerated paths must be
+>= 5x faster than the from-scratch fold, with the gate passing.
+
+  PYTHONPATH=src python -m benchmarks.temporal_scaling [--smoke] [--json out.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.store import LiveVectorLake
+from repro.data.corpus import generate_corpus
+from repro.kernels.temporal_mask_score.ref import temporal_topk_ref
+
+from .common import Timer
+
+
+def _median_ms(fn, repeats: int = 5) -> float:
+    xs = []
+    for _ in range(repeats):
+        with Timer() as t:
+            fn()
+        xs.append(t.elapsed * 1e3)
+    return float(np.median(xs))
+
+
+def _oracle_results(snap, qvecs, ts, k):
+    """From-scratch NumPy oracle: fold-materialized snapshot + pure
+    reference scoring. Returns [(chunk_id, score), ...] per query."""
+    if len(snap) == 0:
+        return [[] for _ in range(qvecs.shape[0])]
+    scores, idx = temporal_topk_ref(qvecs, snap.embeddings,
+                                    snap.valid_from, snap.valid_to,
+                                    ts, min(k, len(snap)))
+    out = []
+    for qi in range(qvecs.shape[0]):
+        row = []
+        for j in range(idx.shape[1]):
+            if np.isfinite(scores[qi, j]):
+                row.append((snap.chunk_ids[int(idx[qi, j])],
+                            float(scores[qi, j])))
+        out.append(row)
+    return out
+
+
+def _equivalent(fused_pairs, oracle_pairs, valid_ids,
+                tol: float = 1e-5) -> bool:
+    """Record-for-record equivalence gate. The fused kernel scores the
+    FULL resident history while the oracle scores the filtered snapshot
+    subset — BLAS gives ULP-level differences between the two matmul
+    shapes, so exact-score ties at the k boundary may legitimately
+    reorder. A rank matches iff the chunk ids are equal OR the scores are
+    within tolerance (a tie flip); every fused pick must additionally be
+    a member of the oracle's VALID set (no leakage can hide in a tie).
+    """
+    if len(fused_pairs) != len(oracle_pairs):
+        return False
+    for frow, orow in zip(fused_pairs, oracle_pairs):
+        if len(frow) != len(orow):
+            return False
+        for (fid, fs), (oid, os_) in zip(frow, orow):
+            if fid not in valid_ids:
+                return False                  # leakage: invalid chunk
+            if abs(fs - os_) > tol * max(1.0, abs(os_)):
+                return False                  # materially different score
+    return True
+
+
+def run_point(n_versions: int, n_docs: int, n_queries: int, dim: int,
+              k: int, checkpoint_interval: int, seed: int,
+              compact: bool) -> dict:
+    corpus = generate_corpus(n_docs=n_docs, n_versions=n_versions, seed=seed)
+    rng = np.random.default_rng(seed)
+    with tempfile.TemporaryDirectory() as root:
+        store = LiveVectorLake(
+            root, dim=dim, cold_checkpoint_interval=checkpoint_interval)
+        for v in range(n_versions):
+            for d in corpus.doc_ids():
+                store.ingest(d, corpus.versions[v][d],
+                             ts=corpus.timestamps[v])
+        if compact:
+            store.compact_cold()
+        # the OLDEST version's instant: the worst case for a delta fold
+        ts = int((corpus.timestamps[0] + corpus.timestamps[1]) // 2) \
+            if n_versions > 1 else int(corpus.timestamps[0]) + 1
+        facts = list(corpus.facts)
+        queries = [f"{rng.choice(facts).name} units recorded"
+                   for _ in range(n_queries)]
+        qvecs = np.asarray(store.embedder.embed(queries), np.float32)
+
+        eng = store.temporal
+        eng.query_at_batch(qvecs, ts, k=k)            # warm (seed resident)
+        fused_ms = _median_ms(lambda: eng.query_at_batch(qvecs, ts, k=k))
+
+        cold = store.cold
+        ckpt_ms = _median_ms(
+            lambda: _oracle_results(cold.snapshot(as_of_ts=ts), qvecs, ts, k))
+        scratch_ms = _median_ms(
+            lambda: _oracle_results(
+                cold.snapshot(as_of_ts=ts, from_scratch=True),
+                qvecs, ts, k), repeats=3)
+
+        fused = eng.query_at_batch(qvecs, ts, k=k)
+        fused_pairs = [[(r.chunk_id, r.score) for r in row] for row in fused]
+        scratch_snap = cold.snapshot(as_of_ts=ts, from_scratch=True)
+        oracle_pairs = _oracle_results(scratch_snap, qvecs, ts, k)
+        identical = _equivalent(fused_pairs, oracle_pairs,
+                                set(scratch_snap.chunk_ids))
+        for row in fused:
+            eng.assert_no_leakage(row, ts)
+
+        st = cold.stats()
+        return {
+            "n_versions": n_versions, "n_docs": n_docs,
+            "total_records": st["total_records"],
+            "checkpoints": st["checkpoints"], "archives": st["archives"],
+            "fused_ms": fused_ms, "ckpt_fold_ms": ckpt_ms,
+            "scratch_fold_ms": scratch_ms,
+            "fused_speedup": scratch_ms / max(fused_ms, 1e-9),
+            "ckpt_speedup": scratch_ms / max(ckpt_ms, 1e-9),
+            "identical": identical,
+        }
+
+
+def run(smoke: bool = False, checkpoint_interval: int = 8,
+        seed: int = 0) -> dict:
+    if smoke:
+        version_counts, n_docs, n_queries, dim = (4, 20), 8, 4, 64
+    else:
+        version_counts, n_docs, n_queries, dim = (4, 8, 16, 24), 20, 8, 384
+    points, points_nockpt = [], []
+    for nv in version_counts:
+        points.append(run_point(nv, n_docs, n_queries, dim, k=5,
+                                checkpoint_interval=checkpoint_interval,
+                                seed=seed, compact=True))
+        # checkpoint OFF: quantifies what the checkpoint overlay buys the
+        # fold path (the fused path is fold-free either way after warm-up)
+        points_nockpt.append(run_point(nv, n_docs, n_queries, dim, k=5,
+                                       checkpoint_interval=0, seed=seed,
+                                       compact=False))
+    biggest = points[-1]
+    return {
+        "points": points, "points_no_checkpoint": points_nockpt,
+        "checkpoint_interval": checkpoint_interval, "smoke": smoke,
+        "gate": {
+            "identical_everywhere": all(p["identical"] for p in points
+                                        + points_nockpt),
+            "versions_at_gate": biggest["n_versions"],
+            "fused_speedup_at_gate": biggest["fused_speedup"],
+            "ckpt_speedup_at_gate": biggest["ckpt_speedup"],
+            "pass": (biggest["n_versions"] >= 20
+                     and biggest["fused_speedup"] >= 5.0
+                     and all(p["identical"] for p in points)),
+        },
+        "timestamp": time.time(),
+    }
+
+
+def rows_from(result: dict) -> list[tuple]:
+    rows = []
+    for tag, pts in (("", result["points"]),
+                     ("no_ckpt/", result["points_no_checkpoint"])):
+        for p in pts:
+            nv = p["n_versions"]
+            ident = "yes" if p["identical"] else "NO"
+            rows.append((f"temporal_scaling/{tag}v{nv}/fused_ms",
+                         p["fused_ms"], f"identical={ident}"))
+            rows.append((f"temporal_scaling/{tag}v{nv}/ckpt_fold_ms",
+                         p["ckpt_fold_ms"],
+                         f"ckpts={p['checkpoints']} arcs={p['archives']}"))
+            rows.append((f"temporal_scaling/{tag}v{nv}/scratch_fold_ms",
+                         p["scratch_fold_ms"],
+                         f"{p['total_records']} records"))
+            rows.append((f"temporal_scaling/{tag}v{nv}/fused_speedup",
+                         p["fused_speedup"], "target >=5x at >=20 versions"))
+    g = result["gate"]
+    rows.append(("temporal_scaling/gate_pass", float(g["pass"]),
+                 f"fused {g['fused_speedup_at_gate']:.1f}x at "
+                 f"{g['versions_at_gate']} versions, identical="
+                 f"{'yes' if g['identical_everywhere'] else 'NO'}"))
+    return rows
+
+
+def main() -> list[tuple]:
+    return rows_from(run())
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small sizes for CI")
+    ap.add_argument("--json", type=str, default=None,
+                    help="write the full result record to PATH")
+    args = ap.parse_args()
+    result = run(smoke=args.smoke)
+    for name, val, note in rows_from(result):
+        print(f"{name},{val:.3f},{note}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=1)

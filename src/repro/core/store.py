@@ -43,7 +43,16 @@ class FaultInjected(RuntimeError):
 class LiveVectorLake:
     def __init__(self, root: str, embedder: Optional[Embedder] = None,
                  dim: int = 384, hot_capacity: int = 4096,
-                 device_resident_history: bool = False):
+                 device_resident_history: bool = True,
+                 cold_checkpoint_interval: int = 8,
+                 temporal_fused: Optional[bool] = None):
+        """``temporal_fused`` selects the cold read path: True (default)
+        routes temporal queries through the fused validity-masked kernel
+        over the engine's resident full-history arrays; False uses the
+        paper-faithful per-snapshot NumPy fold (the reference oracle).
+        ``device_resident_history`` is the legacy alias for the same
+        switch. ``cold_checkpoint_interval``: persist a cold-tier
+        checkpoint every N commits (0 disables)."""
         self.root = root
         os.makedirs(root, exist_ok=True)
         inner = embedder or HashProjectionEmbedder(dim=dim)
@@ -52,14 +61,16 @@ class LiveVectorLake:
         self.dim = dim
         self.embedder = CachingEmbedder(inner)
         self.hash_store = HashStore(os.path.join(root, "hash_store.json"))
-        self.cold = ColdTier(os.path.join(root, "cold"), dim)
+        self.cold = ColdTier(os.path.join(root, "cold"), dim,
+                             checkpoint_interval=cold_checkpoint_interval)
         from .wal import WriteAheadLog
         self.wal = WriteAheadLog(os.path.join(root, "wal.jsonl"))
         self.hot = HotTier(dim, capacity=hot_capacity,
                            root=os.path.join(root, "hot_index"),
                            wal=self.wal)
-        self.temporal = TemporalEngine(self.cold,
-                                       device_resident=device_resident_history)
+        fused = device_resident_history if temporal_fused is None \
+            else temporal_fused
+        self.temporal = TemporalEngine(self.cold, fused=fused)
         self._last_ts = 0
         if self.cold.latest_version() > 0:
             self.recover()
@@ -122,7 +133,10 @@ class LiveVectorLake:
 
         self.hash_store.put(doc_id, [c.chunk_id for c in chunks], doc_version)
         self.wal.mark(txn, "COMMIT")
-        self.temporal.invalidate()
+        # incremental: the engine's resident history is APPENDED to from
+        # this commit's in-memory delta, never rebuilt (no segment re-read)
+        self.temporal.on_commit(version=version, records=records,
+                                closures=closures)
 
         return CDCSummary(
             doc_id=doc_id, version=doc_version, ts=ts,
@@ -290,6 +304,11 @@ class LiveVectorLake:
             elif policy == "compensate":
                 self.cold.mark_committed(v, committed=False)
                 self.wal.mark(txn, "ABORT")
+                # the rolled-back entry may already be folded into the
+                # temporal engine's resident history (it was committed
+                # until now): force a full re-seed so the fused path can
+                # never serve compensated rows
+                self.temporal.invalidate()
                 actions["compensated"] += 1
             else:
                 # roll forward from the durable cold state
@@ -299,6 +318,12 @@ class LiveVectorLake:
                 self.wal.mark(txn, "COMMIT")
                 actions["rolled_forward"] += 1
         return actions
+
+    def compact_cold(self, min_run: int = 2) -> dict:
+        """Cold-tier maintenance: rewrite fully-closed commit runs into
+        sorted zone-mapped archives (DESIGN.md §9). Read-only overlays —
+        no visible state changes, so the temporal engine stays valid."""
+        return self.cold.compact(min_run=min_run)
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:

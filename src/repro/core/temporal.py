@@ -13,6 +13,20 @@ similarity ranking. Two enforcement layers:
      interval test *inside* the fused score+top-k, so even a device-
      resident full-history corpus can never rank an invalid chunk
      (invalid rows are -inf BEFORE selection).
+
+Execution paths (DESIGN.md §9):
+  - FUSED (default): the engine keeps a RESIDENT full-history array pair
+    (embeddings + validity intervals) that is appended to incrementally
+    on every commit — never rebuilt — and routes both point-in-time and
+    window queries through the fused validity-masked top-k kernel with
+    the interval test evaluated per query INSIDE the kernel. No per-
+    timestamp materialized snapshot copy ever exists, so temporal query
+    cost does not scale with history length.
+  - ORACLE (``fused=False``): the paper-faithful path — materialize a
+    point-in-time snapshot via the (checkpoint-accelerated) log fold,
+    then score with the pure-NumPy reference kernel. Retained as the
+    reference the equivalence gates and the property suite compare the
+    fused path against.
 """
 from __future__ import annotations
 
@@ -65,6 +79,124 @@ def classify_query(text: str = "", at: Optional[int] = None,
     return TemporalIntent(CURRENT)
 
 
+class ResidentHistory:
+    """The engine's resident full-history columns: embeddings + validity
+    intervals (+ result metadata), grown geometrically and APPENDED to on
+    every commit instead of rebuilt. ``valid_to`` is mutated in place when
+    a later commit closes a row — the arrays always equal the cold tier's
+    full-history fold, record for record (the incremental-fold invariant,
+    DESIGN.md §9; the property suite checks it)."""
+
+    def __init__(self, dim: int):
+        self.dim = dim
+        self.n = 0
+        cap = 1024
+        self.emb = np.zeros((cap, dim), np.float32)
+        self.vf = np.zeros(cap, np.int64)
+        self.vt = np.zeros(cap, np.int64)
+        self.ver = np.zeros(cap, np.int32)
+        self.pos = np.zeros(cap, np.int64)
+        self.chunk_ids: list[str] = []
+        self.doc_ids: list[str] = []
+        self.texts: list[str] = []
+        self.open_idx: dict[tuple[str, int], int] = {}
+        self.applied_version = 0
+
+    def _reserve(self, m: int) -> None:
+        need = self.n + m
+        cap = self.emb.shape[0]
+        if need <= cap:
+            return
+        while cap < need:
+            cap *= 2
+        for name in ("emb", "vf", "vt", "ver", "pos"):
+            old = getattr(self, name)
+            shape = (cap,) + old.shape[1:]
+            new = np.zeros(shape, old.dtype)
+            new[:self.n] = old[:self.n]
+            setattr(self, name, new)
+
+    def seed(self, snap: ColdSnapshot, applied_version: int) -> None:
+        """Initialize from a full-history (include_closed) snapshot."""
+        m = len(snap)
+        self._reserve(m)
+        self.emb[:m] = snap.embeddings
+        self.vf[:m] = snap.valid_from
+        self.vt[:m] = snap.valid_to
+        self.ver[:m] = snap.version
+        self.pos[:m] = snap.position
+        self.chunk_ids = list(snap.chunk_ids)
+        self.doc_ids = list(snap.doc_ids)
+        self.texts = list(snap.texts)
+        self.n = m
+        self.open_idx = {}
+        for i in range(m):                    # last-wins = fold semantics
+            if self.vt[i] == VALID_TO_OPEN:
+                self.open_idx[(self.doc_ids[i], int(self.pos[i]))] = i
+        self.applied_version = applied_version
+
+    def apply_records(self, records, closures, version: int) -> int:
+        """Fold one commit's IN-MEMORY delta (the exact records/closures
+        ``ColdTier.commit`` just serialized) — the write-hot path never
+        re-reads the segment it wrote milliseconds earlier. Semantics
+        are identical to ``apply_entry`` on the durable log entry."""
+        for c in closures:
+            row = self.open_idx.pop((c["doc_id"], int(c["position"])), None)
+            if row is not None:
+                self.vt[row] = int(c["closed_at"])
+        m = len(records)
+        if m == 0:
+            return 0
+        self._reserve(m)
+        for i, r in enumerate(records):
+            j = self.n + i
+            self.emb[j] = np.asarray(r.embedding, np.float32)
+            self.vf[j] = r.valid_from
+            self.vt[j] = r.valid_to
+            self.ver[j] = version
+            self.pos[j] = r.position
+            self.chunk_ids.append(r.chunk_id)
+            self.doc_ids.append(r.doc_id)
+            self.texts.append(r.text)
+            if r.valid_to == VALID_TO_OPEN:
+                self.open_idx[(r.doc_id, int(r.position))] = j
+        self.n += m
+        return m
+
+    def apply_entry(self, cold: ColdTier, entry: dict) -> int:
+        """Fold one committed log entry into the resident columns:
+        closures mutate valid_to in place, appended records extend the
+        arrays. Returns the number of rows appended."""
+        for c in entry["closures"]:
+            row = self.open_idx.pop((c["doc_id"], int(c["position"])), None)
+            if row is not None:
+                self.vt[row] = int(c["closed_at"])
+        if not entry["segment"]:
+            return 0
+        seg = cold.load_segment(entry["segment"], entry.get("checksum"))
+        m = len(seg["position"])
+        self._reserve(m)
+        s = slice(self.n, self.n + m)
+        self.emb[s] = seg["embeddings"]
+        self.vf[s] = seg["valid_from"]
+        self.vt[s] = seg["valid_to"]
+        self.ver[s] = seg["version"]
+        self.pos[s] = seg["position"]
+        doc_ids = seg["doc_ids"].tolist()
+        self.chunk_ids.extend(seg["chunk_ids"].tolist())
+        self.doc_ids.extend(doc_ids)
+        self.texts.extend(seg["texts"].tolist())
+        for i in range(m):
+            if self.vt[self.n + i] == VALID_TO_OPEN:
+                self.open_idx[(doc_ids[i], int(seg["position"][i]))] = \
+                    self.n + i
+        self.n += m
+        return m
+
+    def views(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        return self.emb[:self.n], self.vf[:self.n], self.vt[:self.n]
+
+
 def _snapshot_results(snap: ColdSnapshot, scores: np.ndarray,
                       idx: np.ndarray, k: int) -> list[SearchResult]:
     out = []
@@ -81,45 +213,81 @@ def _snapshot_results(snap: ColdSnapshot, scores: np.ndarray,
 
 
 class TemporalEngine:
-    """Cold-path execution: snapshot load -> (validity-fused) scoring ->
-    top-k, batched over a (Q, d) query block. ``device_resident=True``
-    keeps the FULL history on device and relies on the fused kernel mask
-    only (the beyond-paper fast path: no per-query snapshot
-    materialization).
+    """Cold-path execution, batched over a (Q, d) query block.
 
-    Point-in-time snapshots are memoized keyed by (latest cold version,
-    target instant): the cold tier is append-only, so a (version, ts)
-    snapshot is immutable and repeated point-in-time queries stop
-    re-folding the JSON log. ``invalidate()`` (called by the store on
-    every commit) drops the cache; the version key alone already makes a
-    stale hit impossible."""
+    FUSED default: one fused validity-masked score+top-k kernel dispatch
+    over the resident full-history arrays per query block — the validity
+    interval test runs per query INSIDE the kernel, so no point-in-time
+    copy is ever materialized and latency is independent of how many
+    versions of history exist.
+
+    ORACLE (``fused=False``): snapshot load (checkpoint-seeded log fold,
+    memoized by (latest cold version, ts)) -> pure-NumPy reference
+    scoring. This is the paper-faithful path and the reference the fused
+    path is gated against."""
 
     SNAP_CACHE_MAX = 32
 
-    def __init__(self, cold: ColdTier, device_resident: bool = False):
+    def __init__(self, cold: ColdTier, fused: bool = True):
         self.cold = cold
-        self.device_resident = device_resident
-        self._resident: Optional[ColdSnapshot] = None
-        self._resident_version = -1
+        self.fused = fused
+        self._resident: Optional[ResidentHistory] = None
         self._snap_cache: dict[tuple, ColdSnapshot] = {}
         self.snap_hits = 0
         self.snap_misses = 0
+        self.resident_builds = 0
+        self.resident_appended_rows = 0
+        self.fused_dispatches = 0
 
     def invalidate(self) -> None:
+        """Full reset (store recovery / external log mutation): the next
+        query re-seeds the resident columns from the checkpointed fold."""
         self._resident = None
-        self._resident_version = -1
         self._snap_cache.clear()
 
-    def _full_history(self) -> ColdSnapshot:
-        v = self.cold.latest_version()
-        if self._resident is None or self._resident_version != v:
-            self._resident = self.cold.snapshot(include_closed=True)
-            self._resident_version = v
+    def on_commit(self, version: Optional[int] = None,
+                  records=None, closures=None) -> None:
+        """Called by the store after every cold-tier commit: advance the
+        resident columns by the delta only — O(new rows), not
+        O(history). When the committer passes its in-memory
+        (version, records, closures) and the resident is exactly one
+        version behind, they are applied directly — no segment re-read;
+        otherwise fall back to replaying the durable log entries."""
+        self._snap_cache.clear()
+        res = self._resident
+        if res is None:
+            return                            # lazily seeded on first query
+        if (version is not None and records is not None
+                and res.applied_version == version - 1):
+            self.resident_appended_rows += res.apply_records(
+                records, closures or [], version)
+            res.applied_version = version
+            return
+        self._advance(res)
+
+    def _advance(self, res: ResidentHistory) -> None:
+        latest = self.cold.latest_version()
+        if res.applied_version >= latest:
+            return
+        for e in self.cold.read_entries(res.applied_version + 1, latest):
+            self.resident_appended_rows += res.apply_entry(self.cold, e)
+        res.applied_version = latest
+
+    def _resident_history(self) -> ResidentHistory:
+        if self._resident is None:
+            res = ResidentHistory(self.cold.dim)
+            res.seed(self.cold.snapshot(include_closed=True),
+                     self.cold.latest_version())
+            self._resident = res
+            self.resident_builds += 1
+        else:
+            self._advance(self._resident)     # safety: never serve stale
         return self._resident
 
-    def _snapshot_at(self, ts: int, include_closed: bool = False
+    def _snapshot_at(self, ts: Optional[int], include_closed: bool = False
                      ) -> ColdSnapshot:
-        """Memoized ``ColdTier.snapshot``; FIFO-bounded."""
+        """Memoized ``ColdTier.snapshot``; FIFO-bounded. The cold tier is
+        append-only, so a (latest version, ts) snapshot is immutable."""
         key = (self.cold.latest_version(), ts, include_closed)
         snap = self._snap_cache.get(key)
         if snap is None:
@@ -133,6 +301,9 @@ class TemporalEngine:
             self.snap_hits += 1
         return snap
 
+    # ------------------------------------------------------------------
+    # point-in-time
+    # ------------------------------------------------------------------
     def query_at(self, q_vec: np.ndarray, ts: int, k: int = 5
                  ) -> list[SearchResult]:
         return self.query_at_batch(
@@ -140,24 +311,45 @@ class TemporalEngine:
 
     def query_at_batch(self, queries: np.ndarray, ts: int, k: int = 5
                        ) -> list[list[SearchResult]]:
-        """Point-in-time retrieval for a whole (Q, d) query block: one
-        snapshot resolve, one fused validity-masked score+top-k kernel
-        dispatch for all queries."""
+        """Point-in-time retrieval for a whole (Q, d) query block: ONE
+        fused validity-masked score+top-k dispatch over the resident
+        full-history arrays (no per-ts materialized copy)."""
+        if not self.fused:
+            return self._oracle_at_batch(queries, ts, k=k)
+        from ..kernels.temporal_mask_score.ops import temporal_window_topk
+
+        qp, nq = pad_queries(queries)
+        res = self._resident_history()
+        if res.n == 0:
+            return [[] for _ in range(nq)]
+        emb, vf, vt = res.views()
+        bounds = np.full(qp.shape[0], int(ts), np.int64)
+        scores, idx = temporal_window_topk(qp, emb, vf, vt, bounds,
+                                           bounds + 1, min(k, res.n))
+        self.fused_dispatches += 1
+        scores, idx = np.asarray(scores), np.asarray(idx)
+        return [self._resident_results(res, scores[qi], idx[qi], k)
+                for qi in range(nq)]
+
+    def _oracle_at_batch(self, queries: np.ndarray, ts: int, k: int = 5
+                         ) -> list[list[SearchResult]]:
+        """Paper-faithful reference: materialize the snapshot at ts via
+        the log fold, score with the pure-NumPy oracle kernel."""
         from ..kernels.temporal_mask_score.ops import temporal_topk
 
         qp, nq = pad_queries(queries)
-        if self.device_resident:
-            snap = self._full_history()
-        else:
-            snap = self._snapshot_at(ts)             # paper-faithful path
+        snap = self._snapshot_at(ts)
         if len(snap) == 0:
             return [[] for _ in range(nq)]
         scores, idx = temporal_topk(qp, snap.embeddings, snap.valid_from,
-                                    snap.valid_to, ts, min(k, len(snap)))
-        scores, idx = np.asarray(scores), np.asarray(idx)
+                                    snap.valid_to, ts, min(k, len(snap)),
+                                    mode="ref")
         return [_snapshot_results(snap, scores[qi], idx[qi], k)
                 for qi in range(nq)]
 
+    # ------------------------------------------------------------------
+    # windows
+    # ------------------------------------------------------------------
     def query_window(self, q_vec: np.ndarray, t0: int, t1: int,
                      k: int = 5) -> list[SearchResult]:
         return self.query_window_batch(
@@ -166,10 +358,31 @@ class TemporalEngine:
     def query_window_batch(self, queries: np.ndarray, t0: int, t1: int,
                            k: int = 5) -> list[list[SearchResult]]:
         """Records valid at ANY instant of [t0, t1): interval overlap
-        (valid_from < t1) and (valid_to > t0). One snapshot resolve and
-        one scoring matmul for the whole query block."""
+        (valid_from < t1) and (valid_to > t0), fused into the same kernel
+        as the point path (a point query is the window [ts, ts+1))."""
+        if not self.fused:
+            return self._oracle_window_batch(queries, t0, t1, k=k)
+        from ..kernels.temporal_mask_score.ops import temporal_window_topk
+
         qp, nq = pad_queries(queries)
-        snap = self._snapshot_at(t1, include_closed=True)
+        res = self._resident_history()
+        if res.n == 0:
+            return [[] for _ in range(nq)]
+        emb, vf, vt = res.views()
+        t0s = np.full(qp.shape[0], int(t0), np.int64)
+        t1s = np.full(qp.shape[0], int(t1), np.int64)
+        scores, idx = temporal_window_topk(qp, emb, vf, vt, t0s, t1s,
+                                           min(k, res.n))
+        self.fused_dispatches += 1
+        scores, idx = np.asarray(scores), np.asarray(idx)
+        return [self._resident_results(res, scores[qi], idx[qi], k)
+                for qi in range(nq)]
+
+    def _oracle_window_batch(self, queries: np.ndarray, t0: int, t1: int,
+                             k: int = 5) -> list[list[SearchResult]]:
+        """NumPy reference over the materialized full-history fold."""
+        qp, nq = pad_queries(queries)
+        snap = self._full_history_snapshot()
         if len(snap) == 0:
             return [[] for _ in range(nq)]
         overlap = (snap.valid_from < t1) & (snap.valid_to > t0)
@@ -181,6 +394,25 @@ class TemporalEngine:
         return [_snapshot_results(snap, scores[qi, idx[qi]], idx[qi], k)
                 for qi in range(nq)]
 
+    def _full_history_snapshot(self) -> ColdSnapshot:
+        # ts=None folds everything: the same memo serves both shapes
+        return self._snapshot_at(None, include_closed=True)
+
+    def _resident_results(self, res: ResidentHistory, scores: np.ndarray,
+                          idx: np.ndarray, k: int) -> list[SearchResult]:
+        out = []
+        for j in range(min(k, idx.shape[0])):
+            i, s = int(idx[j]), float(scores[j])
+            if not np.isfinite(s):
+                continue
+            out.append(SearchResult(
+                chunk_id=res.chunk_ids[i], doc_id=res.doc_ids[i],
+                position=int(res.pos[i]), score=s, text=res.texts[i],
+                valid_from=int(res.vf[i]), valid_to=int(res.vt[i]),
+                version=int(res.ver[i]), tier="cold"))
+        return out
+
+    # ------------------------------------------------------------------
     def assert_no_leakage(self, results: list[SearchResult], ts: int) -> None:
         """Invariant check used by tests/benchmarks: every returned chunk's
         validity interval must cover the query instant."""
@@ -189,3 +421,14 @@ class TemporalEngine:
                 raise AssertionError(
                     f"temporal leakage: chunk {r.chunk_id[:12]} valid "
                     f"[{r.valid_from}, {r.valid_to}) queried at {ts}")
+
+    def assert_no_window_leakage(self, results: list[SearchResult],
+                                 t0: int, t1: int) -> None:
+        """Window variant: every returned chunk's validity interval must
+        OVERLAP [t0, t1)."""
+        for r in results:
+            if not (r.valid_from < t1 and t0 < r.valid_to):
+                raise AssertionError(
+                    f"temporal window leakage: chunk {r.chunk_id[:12]} "
+                    f"valid [{r.valid_from}, {r.valid_to}) queried for "
+                    f"[{t0}, {t1})")

@@ -1,1 +1,1 @@
-from .ops import temporal_topk  # noqa: F401
+from .ops import temporal_topk, temporal_window_topk  # noqa: F401

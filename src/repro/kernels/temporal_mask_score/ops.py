@@ -1,4 +1,11 @@
-"""jit'd wrapper for the temporal validity-masked top-k kernel."""
+"""jit'd wrappers for the temporal validity-masked top-k kernel.
+
+``temporal_window_topk`` is the general fused primitive: one dispatch
+scores a (Q, d) query block against a device-resident full-history corpus
+with a PER-QUERY validity window — no per-timestamp materialized snapshot
+copy ever exists. ``temporal_topk`` (point-in-time, one shared ts) is the
+degenerate window [ts, ts+1).
+"""
 from __future__ import annotations
 
 import functools
@@ -7,21 +14,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..common import kernel_mode, le_i64, lt_i64, pad_to, split_i64
-from .ref import temporal_topk_ref
+from ..common import kernel_mode, lt_i64, pad_to, split_i64
+from .ref import temporal_window_topk_ref
 from .temporal_mask_score import temporal_block_candidates
 
 
 @functools.partial(jax.jit, static_argnames=("k", "bn", "mode"))
-def _temporal_topk_jit(q, corpus, vf_hi, vf_lo, vt_hi, vt_lo, ts_pair,
+def _temporal_topk_jit(q, corpus, vf_hi, vf_lo, vt_hi, vt_lo,
+                       t0_hi, t0_lo, t1_hi, t1_lo,
                        k: int, bn: int, mode: str):
     if mode == "ref_jnp":
         # jnp variant of the oracle (used on-device; exact via split i64)
-        ts_hi, ts_lo = ts_pair[0], ts_pair[1].astype(jnp.uint32)
-        valid = le_i64(vf_hi, vf_lo.astype(jnp.uint32), ts_hi, ts_lo) & \
-            lt_i64(ts_hi, ts_lo, vt_hi, vt_lo.astype(jnp.uint32))
+        valid = lt_i64(vf_hi[None, :], vf_lo.astype(jnp.uint32)[None, :],
+                       t1_hi[:, None], t1_lo.astype(jnp.uint32)[:, None]) & \
+            lt_i64(t0_hi[:, None], t0_lo.astype(jnp.uint32)[:, None],
+                   vt_hi[None, :], vt_lo.astype(jnp.uint32)[None, :])
         scores = jnp.dot(q, corpus.T)
-        scores = jnp.where(valid[None, :], scores, -jnp.inf)
+        scores = jnp.where(valid, scores, -jnp.inf)
         top_s, top_i = jax.lax.top_k(scores, k)
         return top_s, top_i.astype(jnp.int32)
     corpus_p, _ = pad_to(corpus, 0, bn)
@@ -30,7 +39,8 @@ def _temporal_topk_jit(q, corpus, vf_hi, vf_lo, vt_hi, vt_lo, ts_pair,
     vf_hi_p, vf_lo_p = pad(vf_hi, np.int32(0x7FFFFFFF)), pad(vf_lo, -1)
     vt_hi_p, vt_lo_p = pad(vt_hi, 0), pad(vt_lo, 0)
     s_blk, i_blk = temporal_block_candidates(
-        q, corpus_p, vf_hi_p, vf_lo_p, vt_hi_p, vt_lo_p, ts_pair, k, bn=bn,
+        q, corpus_p, vf_hi_p, vf_lo_p, vt_hi_p, vt_lo_p,
+        t0_hi, t0_lo, t1_hi, t1_lo, k, bn=bn,
         interpret=(mode == "interpret"))
     nb = s_blk.shape[0]
     s_all = jnp.transpose(s_blk, (1, 0, 2)).reshape(q.shape[0], nb * k)
@@ -40,27 +50,53 @@ def _temporal_topk_jit(q, corpus, vf_hi, vf_lo, vt_hi, vt_lo, ts_pair,
     return top_s, top_i
 
 
-def temporal_topk(q, corpus, valid_from, valid_to, ts: int, k: int,
-                  bn: int = 512, mode: str | None = None):
-    """Temporal query scoring: filter-before-rank fused top-k.
+def _split_dev(x_i64: np.ndarray):
+    """Host int64 -> (hi int32, lo int32-carrier) device arrays."""
+    hi, lo = split_i64(x_i64)
+    return jnp.asarray(hi), jnp.asarray(lo.view(np.int32))
 
-    q: (Q, D); corpus: (N, D); valid_from/valid_to: (N,) int64 host arrays;
-    ts: int64 scalar. Returns (scores (Q, k), idx (Q, k)).
+
+def temporal_window_topk(q, corpus, valid_from, valid_to, t0s, t1s, k: int,
+                         bn: int = 512, mode: str | None = None):
+    """Fused window-overlap scoring: filter-before-rank top-k with a
+    per-query validity window.
+
+    q: (Q, D); corpus: (N, D); valid_from/valid_to: (N,) int64 host
+    arrays; t0s/t1s: (Q,) int64 window bounds (point query i == window
+    [ts_i, ts_i + 1)). Returns (scores (Q, k), idx (Q, k)); rows with no
+    overlapping candidate come back -inf.
     """
     mode = kernel_mode(mode)
     q = np.atleast_2d(np.asarray(q, np.float32))
+    t0s = np.broadcast_to(np.asarray(t0s, np.int64), (q.shape[0],))
+    t1s = np.broadcast_to(np.asarray(t1s, np.int64), (q.shape[0],))
     k = int(min(k, corpus.shape[0]))
+    if corpus.shape[0] == 0 or k == 0:
+        # empty history: nothing can ever be valid, regardless of window
+        return (np.zeros((q.shape[0], 0), np.float32),
+                np.zeros((q.shape[0], 0), np.int32))
     if mode == "ref":
-        return temporal_topk_ref(q, corpus, valid_from, valid_to, ts, k)
-    vf_hi, vf_lo = split_i64(valid_from)
-    vt_hi, vt_lo = split_i64(valid_to)
-    ts_hi, ts_lo = split_i64(np.array([ts]))
-    # int32 carrier for the (hi, lo) pair (uint32 bits preserved)
-    ts_pair = jnp.array([int(ts_hi[0]), int(np.int32(ts_lo.view(np.int32)[0]))],
-                        jnp.int32)
+        return temporal_window_topk_ref(q, corpus, valid_from, valid_to,
+                                        t0s, t1s, k)
+    vf_hi, vf_lo = _split_dev(valid_from)
+    vt_hi, vt_lo = _split_dev(valid_to)
+    t0_hi, t0_lo = _split_dev(t0s)
+    t1_hi, t1_lo = _split_dev(t1s)
     bn = int(min(bn, max(128, corpus.shape[0])))
     return _temporal_topk_jit(
         jnp.asarray(q), jnp.asarray(corpus, jnp.float32),
-        jnp.asarray(vf_hi), jnp.asarray(vf_lo.view(np.int32)),
-        jnp.asarray(vt_hi), jnp.asarray(vt_lo.view(np.int32)),
-        ts_pair, k, bn, mode)
+        vf_hi, vf_lo, vt_hi, vt_lo, t0_hi, t0_lo, t1_hi, t1_lo,
+        k, bn, mode)
+
+
+def temporal_topk(q, corpus, valid_from, valid_to, ts: int, k: int,
+                  bn: int = 512, mode: str | None = None):
+    """Point-in-time temporal scoring (shared ts for the whole block):
+    the degenerate window [ts, ts+1) — with integer-microsecond stamps
+    the overlap test is exactly valid_from <= ts < valid_to.
+    """
+    q = np.atleast_2d(np.asarray(q, np.float32))
+    ts = int(ts)
+    bounds = np.full(q.shape[0], ts, np.int64)
+    return temporal_window_topk(q, corpus, valid_from, valid_to,
+                                bounds, bounds + 1, k, bn=bn, mode=mode)

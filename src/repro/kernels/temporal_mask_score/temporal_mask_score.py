@@ -2,19 +2,26 @@
 temporal query path; paper §III-D3 enforced AT KERNEL LEVEL).
 
 Identical streaming structure to kernels/topk_search, but the active mask
-is replaced by the temporal validity interval test
+is replaced by the temporal validity OVERLAP test against a PER-QUERY
+half-open window [t0_q, t1_q):
 
-    valid_from <= ts < valid_to
+    valid_from < t1_q  AND  t0_q < valid_to
 
 evaluated INSIDE the kernel, before any score can enter the top-k
 selection — an invalid (future/superseded/deleted) chunk is -inf before
 ranking, so temporal leakage is impossible by construction even when the
-full version history is device-resident.
+full version history is device-resident. A point-in-time query at ts is
+the window [ts, ts+1) — with integer-microsecond timestamps the overlap
+test degenerates to exactly valid_from <= ts < valid_to.
+
+Per-query bounds mean one dispatch serves a whole batch of queries with
+DIFFERENT target instants/windows over one resident full-history corpus:
+the mask is (Q, bn), not (bn,).
 
 Timestamps are int64 on the host; TPUs are 32-bit machines, so validity
-columns arrive as split (hi: int32, lo: uint32) pairs and the interval
-test is a lexicographic compare — exact at microsecond resolution (see
-kernels/common.split_i64).
+columns and window bounds arrive as split (hi: int32, lo: uint32) pairs
+and the interval test is a lexicographic compare — exact at microsecond
+resolution (see kernels/common.split_i64).
 """
 from __future__ import annotations
 
@@ -24,24 +31,28 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ..common import le_i64, lt_i64
+from ..common import lt_i64
 
 
 def _kernel(q_ref, c_ref, vf_hi_ref, vf_lo_ref, vt_hi_ref, vt_lo_ref,
-            ts_ref, out_s_ref, out_i_ref, *, k: int, bn: int):
+            t0_hi_ref, t0_lo_ref, t1_hi_ref, t1_lo_ref,
+            out_s_ref, out_i_ref, *, k: int, bn: int):
     j = pl.program_id(0)
     scores = jax.lax.dot_general(
         q_ref[...], c_ref[...], (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)              # (Q, bn)
 
-    ts_hi, ts_lo = ts_ref[0], ts_ref[1]                  # split int64 scalar
-    ts_lo = ts_lo.astype(jnp.uint32)
     vf_hi, vf_lo = vf_hi_ref[...], vf_lo_ref[...].astype(jnp.uint32)
     vt_hi, vt_lo = vt_hi_ref[...], vt_lo_ref[...].astype(jnp.uint32)
-    # THE temporal-leakage guard: valid_from <= ts < valid_to, pre-ranking
-    valid = le_i64(vf_hi, vf_lo, ts_hi, ts_lo) & lt_i64(ts_hi, ts_lo,
-                                                        vt_hi, vt_lo)
-    scores = jnp.where(valid[None, :], scores, -jnp.inf)
+    t0_hi, t0_lo = t0_hi_ref[...], t0_lo_ref[...].astype(jnp.uint32)
+    t1_hi, t1_lo = t1_hi_ref[...], t1_lo_ref[...].astype(jnp.uint32)
+    # THE temporal-leakage guard: window overlap, pre-ranking, per query.
+    # (vf[None, :] vs t1[:, None]) broadcasts to the full (Q, bn) mask.
+    valid = lt_i64(vf_hi[None, :], vf_lo[None, :],
+                   t1_hi[:, None], t1_lo[:, None]) & \
+        lt_i64(t0_hi[:, None], t0_lo[:, None],
+               vt_hi[None, :], vt_lo[None, :])
+    scores = jnp.where(valid, scores, -jnp.inf)
 
     idx_base = (j * bn).astype(jnp.int32)
     cols = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
@@ -60,13 +71,19 @@ def _kernel(q_ref, c_ref, vf_hi_ref, vf_lo_ref, vt_hi_ref, vt_lo_ref,
     jax.lax.fori_loop(0, k, body, scores)
 
 
-def temporal_block_candidates(q, corpus, vf_hi, vf_lo, vt_hi, vt_lo, ts_pair,
+def temporal_block_candidates(q, corpus, vf_hi, vf_lo, vt_hi, vt_lo,
+                              t0_hi, t0_lo, t1_hi, t1_lo,
                               k: int, bn: int = 512, interpret: bool = False):
+    """Per-block streaming candidates. q: (Q, d); corpus: (N, d) with
+    N % bn == 0; vf/vt pairs: (N,); t0/t1 pairs: (Q,) per-query window
+    bounds. Returns ((N//bn, Q, k) scores, (N//bn, Q, k) global indices).
+    """
     n, d = corpus.shape
     nq = q.shape[0]
     assert n % bn == 0
     kern = functools.partial(_kernel, k=k, bn=bn)
     blk1 = lambda j: (j,)
+    qrow = lambda j: (0,)
     return pl.pallas_call(
         kern,
         grid=(n // bn,),
@@ -75,7 +92,8 @@ def temporal_block_candidates(q, corpus, vf_hi, vf_lo, vt_hi, vt_lo, ts_pair,
             pl.BlockSpec((bn, d), lambda j: (j, 0)),
             pl.BlockSpec((bn,), blk1), pl.BlockSpec((bn,), blk1),
             pl.BlockSpec((bn,), blk1), pl.BlockSpec((bn,), blk1),
-            pl.BlockSpec((2,), lambda j: (0,)),          # ts (hi, lo)
+            pl.BlockSpec((nq,), qrow), pl.BlockSpec((nq,), qrow),
+            pl.BlockSpec((nq,), qrow), pl.BlockSpec((nq,), qrow),
         ],
         out_specs=[
             pl.BlockSpec((1, nq, k), lambda j: (j, 0, 0)),
@@ -86,4 +104,4 @@ def temporal_block_candidates(q, corpus, vf_hi, vf_lo, vt_hi, vt_lo, ts_pair,
             jax.ShapeDtypeStruct((n // bn, nq, k), jnp.int32),
         ],
         interpret=interpret,
-    )(q, corpus, vf_hi, vf_lo, vt_hi, vt_lo, ts_pair)
+    )(q, corpus, vf_hi, vf_lo, vt_hi, vt_lo, t0_hi, t0_lo, t1_hi, t1_lo)

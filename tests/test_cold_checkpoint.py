@@ -1,0 +1,261 @@
+"""Cold-tier checkpoint / zone-map / archive tests (DESIGN.md §9).
+
+The invariant under test everywhere: a snapshot served through the
+overlays (checkpoint seed + archive pruning) is record-for-record
+identical — same rows, same order, same valid_to — to the from-scratch
+O(total history) log fold, at every instant and version, in both
+include_closed modes."""
+import os
+
+import numpy as np
+
+from repro.core.cold_tier import ColdTier
+from repro.core.types import ChunkRecord, VALID_TO_OPEN
+
+
+def _rec(doc, pos, text, ts, dim=8):
+    rng = np.random.default_rng(abs(hash((doc, pos, text))) % 2**31)
+    e = rng.standard_normal(dim).astype(np.float32)
+    e /= np.linalg.norm(e)
+    return ChunkRecord(chunk_id=f"h-{doc}-{pos}-{ts}", doc_id=doc,
+                       position=pos, valid_from=ts, text=text, embedding=e)
+
+
+def _assert_snap_identical(a, b, tag=""):
+    assert a.chunk_ids == b.chunk_ids, tag
+    np.testing.assert_array_equal(a.valid_from, b.valid_from, err_msg=tag)
+    np.testing.assert_array_equal(a.valid_to, b.valid_to, err_msg=tag)
+    np.testing.assert_array_equal(a.embeddings, b.embeddings, err_msg=tag)
+    np.testing.assert_array_equal(a.version, b.version, err_msg=tag)
+    np.testing.assert_array_equal(a.position, b.position, err_msg=tag)
+    assert a.doc_ids == b.doc_ids and a.texts == b.texts, tag
+    assert a.as_of == b.as_of, tag
+
+
+def _build(ct, n_versions=12, n_docs=3, t0=1000, dt=100):
+    """n_versions supersede cycles over n_docs docs, one commit each."""
+    ts = t0
+    for v in range(n_versions):
+        doc = f"d{v % n_docs}"
+        closures = []
+        if v >= n_docs:
+            closures = [{"doc_id": doc, "position": 0, "closed_at": ts,
+                         "status": "superseded"}]
+        ct.commit([_rec(doc, 0, f"text v{v}", ts)], closures, ts)
+        ts += dt
+    return ts
+
+
+class TestCheckpoints:
+    def test_written_at_interval(self, tmp_path):
+        ct = ColdTier(str(tmp_path), dim=8, checkpoint_interval=4)
+        _build(ct, n_versions=10)
+        assert [m["version"] for m in ct.checkpoints()] == [4, 8]
+
+    def test_snapshot_equals_scratch_fold_on_grid(self, tmp_path):
+        ct = ColdTier(str(tmp_path), dim=8, checkpoint_interval=3)
+        end = _build(ct, n_versions=14)
+        for ts in range(950, end + 50, 37):
+            for inc in (False, True):
+                _assert_snap_identical(
+                    ct.snapshot(as_of_ts=ts, include_closed=inc),
+                    ct.snapshot(as_of_ts=ts, include_closed=inc,
+                                from_scratch=True),
+                    f"ts={ts} inc={inc}")
+
+    def test_version_targeted_snapshot_equals_scratch(self, tmp_path):
+        ct = ColdTier(str(tmp_path), dim=8, checkpoint_interval=4)
+        _build(ct, n_versions=11)
+        for v in range(1, 12):
+            _assert_snap_identical(
+                ct.snapshot(version=v, include_closed=True),
+                ct.snapshot(version=v, include_closed=True,
+                            from_scratch=True), f"v={v}")
+
+    def test_delta_fold_loads_only_delta_segments(self, tmp_path):
+        ct = ColdTier(str(tmp_path), dim=8, checkpoint_interval=8)
+        end = _build(ct, n_versions=17)     # checkpoints at 8, 16
+        ct.io_counters["segment_loads"] = 0
+        ct.io_counters["checkpoint_loads"] = 0
+        ct.snapshot(as_of_ts=end)
+        # seeded from ckpt@16: only the v17 segment is re-read
+        assert ct.io_counters["segment_loads"] == 1
+        assert ct.io_counters["checkpoint_loads"] == 1
+
+    def test_corrupt_checkpoint_falls_back_to_fold(self, tmp_path):
+        ct = ColdTier(str(tmp_path), dim=8, checkpoint_interval=4)
+        end = _build(ct, n_versions=8)
+        npz = os.path.join(str(tmp_path), "_ckpt", "ckpt-00000008.npz")
+        with open(npz, "r+b") as f:
+            f.seek(-1, 2)
+            last = f.read(1)
+            f.seek(-1, 2)
+            f.write(bytes([last[0] ^ 0xFF]))
+        _assert_snap_identical(ct.snapshot(as_of_ts=end),
+                               ct.snapshot(as_of_ts=end, from_scratch=True))
+
+    def test_mark_committed_invalidates_checkpoints(self, tmp_path):
+        ct = ColdTier(str(tmp_path), dim=8, checkpoint_interval=2)
+        _build(ct, n_versions=6)
+        assert len(ct.checkpoints()) == 3
+        ct.mark_committed(3, committed=False)
+        # every checkpoint that baked version >= 3 is gone
+        assert [m["version"] for m in ct.checkpoints()] == [2]
+        _assert_snap_identical(ct.snapshot(include_closed=True),
+                               ct.snapshot(include_closed=True,
+                                           from_scratch=True))
+        ct.mark_committed(3, committed=True)
+        _assert_snap_identical(ct.snapshot(include_closed=True),
+                               ct.snapshot(include_closed=True,
+                                           from_scratch=True))
+
+    def test_orphan_checkpoint_swept_on_init(self, tmp_path):
+        ct = ColdTier(str(tmp_path), dim=8, checkpoint_interval=4)
+        _build(ct, n_versions=4)
+        npz, meta = os.path.join(str(tmp_path), "_ckpt", "ckpt-00000004.npz"), \
+            os.path.join(str(tmp_path), "_ckpt", "ckpt-00000004.json")
+        os.unlink(meta)                      # simulate crash before meta
+        ct2 = ColdTier(str(tmp_path), dim=8)
+        assert not os.path.exists(npz)       # orphan swept
+        assert ct2.checkpoints() == []
+
+
+class TestArchives:
+    def test_compact_archives_fully_closed_runs(self, tmp_path):
+        ct = ColdTier(str(tmp_path), dim=8, checkpoint_interval=0)
+        end = _build(ct, n_versions=12, n_docs=2)
+        r = ct.compact()
+        assert r["archived_runs"] >= 1 and r["archived_rows"] > 0
+        # still-open rows (last version per doc) are never archived
+        arcs = ct.archives()
+        assert all(a["vt_max"] != VALID_TO_OPEN for a in arcs)
+        for ts in range(950, end + 50, 23):
+            for inc in (False, True):
+                _assert_snap_identical(
+                    ct.snapshot(as_of_ts=ts, include_closed=inc),
+                    ct.snapshot(as_of_ts=ts, include_closed=inc,
+                                from_scratch=True), f"ts={ts} inc={inc}")
+
+    def test_zone_prune_skips_dead_archives(self, tmp_path):
+        ct = ColdTier(str(tmp_path), dim=8, checkpoint_interval=0)
+        end = _build(ct, n_versions=12, n_docs=2)
+        ct.compact()
+        a = ct.archives()[0]
+        ct.io_counters["archive_loads"] = 0
+        ct.io_counters["archives_pruned"] = 0
+        # far past every closure in the archive: zone map proves no row
+        # can be valid, so the .npz is never opened
+        snap = ct.snapshot(as_of_ts=end + 10**6)
+        assert ct.io_counters["archives_pruned"] == 1
+        assert ct.io_counters["archive_loads"] == 0
+        assert all(vt == VALID_TO_OPEN for vt in snap.valid_to)
+
+    def test_time_travel_inside_archived_run(self, tmp_path):
+        """Snapshot at a version INSIDE an archived run falls back to the
+        retained per-commit segments."""
+        ct = ColdTier(str(tmp_path), dim=8, checkpoint_interval=0)
+        _build(ct, n_versions=10, n_docs=2)
+        ct.compact()
+        lo, hi = ct.archives()[0]["lo"], ct.archives()[0]["hi"]
+        v_mid = (lo + hi) // 2
+        _assert_snap_identical(
+            ct.snapshot(version=v_mid, include_closed=True),
+            ct.snapshot(version=v_mid, include_closed=True,
+                        from_scratch=True))
+
+    def test_archive_does_not_leak_future_closures(self, tmp_path):
+        """A fold cut BEFORE a run row's closing entry must see the row
+        open (valid_to == OPEN), even when the archive baked the final
+        closure."""
+        ct = ColdTier(str(tmp_path), dim=8, checkpoint_interval=0)
+        end = _build(ct, n_versions=10, n_docs=2)
+        ct.compact()
+        a = ct.archives()[0]
+        # pick an instant before the archive's last closure lands
+        ts = a["vt_max"] - 1
+        s_overlay = ct.snapshot(as_of_ts=ts, include_closed=True)
+        s_scratch = ct.snapshot(as_of_ts=ts, include_closed=True,
+                                from_scratch=True)
+        _assert_snap_identical(s_overlay, s_scratch)
+        assert VALID_TO_OPEN in s_scratch.valid_to.tolist()
+
+    def test_mark_committed_drops_dependent_archives(self, tmp_path):
+        ct = ColdTier(str(tmp_path), dim=8, checkpoint_interval=0)
+        _build(ct, n_versions=10, n_docs=2)
+        ct.compact()
+        assert ct.archives()
+        # the archive consumed closures from the tail versions; flipping
+        # one of those must drop it (and its npz)
+        consumed_versions = [v for a in ct.archives() for v, _ in
+                             a["consumed"]]
+        v_flip = min(consumed_versions)
+        ct.mark_committed(v_flip, committed=False)
+        assert not ct.archives()
+        arc_dir = os.path.join(str(tmp_path), "_archive")
+        assert [f for f in os.listdir(arc_dir) if f.endswith(".npz")] == []
+        _assert_snap_identical(ct.snapshot(include_closed=True),
+                               ct.snapshot(include_closed=True,
+                                           from_scratch=True))
+
+    def test_compact_idempotent(self, tmp_path):
+        ct = ColdTier(str(tmp_path), dim=8, checkpoint_interval=0)
+        _build(ct, n_versions=10, n_docs=2)
+        r1 = ct.compact()
+        r2 = ct.compact()                    # covered runs not re-archived
+        assert r1["archived_runs"] >= 1 and r2["archived_runs"] == 0
+
+
+class TestZoneMapsAndHistory:
+    def test_log_entries_carry_zone_maps(self, tmp_path):
+        ct = ColdTier(str(tmp_path), dim=8)
+        ct.commit([_rec("a", 0, "x", 100), _rec("b", 1, "y", 150)], [], 150)
+        e = ct.read_entries(1, 1)[0]
+        assert e["zone"]["vf_min"] == 100 and e["zone"]["vf_max"] == 150
+        assert sorted(tuple(k) for k in e["zone"]["keys"]) == \
+            [("a", 0), ("b", 1)]
+
+    def test_history_is_doc_scoped_and_prunes(self, tmp_path):
+        ct = ColdTier(str(tmp_path), dim=8, checkpoint_interval=0)
+        _build(ct, n_versions=12, n_docs=3)
+        full = ct.snapshot(include_closed=True, from_scratch=True)
+        ct.io_counters["segment_loads"] = 0
+        ct.io_counters["segments_pruned"] = 0
+        h = ct.history("d1")
+        n_d1 = sum(1 for d in full.doc_ids if d == "d1")
+        assert len(h) == n_d1
+        # only d1's segments were opened; the rest pruned via zone keys
+        assert ct.io_counters["segments_pruned"] > 0
+        assert ct.io_counters["segment_loads"] == n_d1
+
+    def test_history_matches_full_fold_contents(self, tmp_path):
+        ct = ColdTier(str(tmp_path), dim=8, checkpoint_interval=4)
+        _build(ct, n_versions=12, n_docs=3)
+        ct.compact()
+        full = ct.snapshot(include_closed=True, from_scratch=True)
+        for doc in ("d0", "d1", "d2"):
+            h = ct.history(doc)
+            ref = sorted(
+                ((int(full.position[i]), int(full.valid_from[i]),
+                  int(full.valid_to[i]), full.chunk_ids[i])
+                 for i in range(len(full)) if full.doc_ids[i] == doc))
+            got = [(r["position"], r["valid_from"], r["valid_to"],
+                    r["chunk_id"]) for r in h]
+            assert got == ref
+
+    def test_history_after_compaction_prunes_archives(self, tmp_path):
+        ct = ColdTier(str(tmp_path), dim=8, checkpoint_interval=0)
+        # two docs with disjoint lifetimes: archive zone doc-lists prune
+        ts = 1000
+        for v in range(8):
+            ct.commit([_rec("only-a", 0, f"a{v}", ts)],
+                      [] if v == 0 else
+                      [{"doc_id": "only-a", "position": 0,
+                        "closed_at": ts, "status": "superseded"}], ts)
+            ts += 100
+        ct.commit([_rec("only-b", 0, "b0", ts)], [], ts)
+        ct.compact()
+        assert ct.archives()
+        ct.io_counters["archive_loads"] = 0
+        h = ct.history("only-b")
+        assert len(h) == 1 and h[0]["status"] == "active"
+        assert ct.io_counters["archive_loads"] == 0   # pruned by doc set

@@ -104,3 +104,108 @@ class TestTemporalKernel:
             i = np.asarray(i)[0][np.isfinite(np.asarray(s)[0])]
             assert np.all(vf[i] <= ts), mode
             assert np.all(ts < vt[i]), mode
+
+
+class TestTemporalKernelEdgeCases:
+    """ISSUE 3 satellite: kernel parity vs ref.py on the degenerate
+    shapes the full-history fused path can hit in production."""
+
+    def _corpus(self, n, d=64, seed=0):
+        rng = np.random.default_rng(seed)
+        c = _rand((n, d), seed)
+        base = 1_700_000_000_000_000
+        vf = base + rng.integers(0, 10**6, n).astype(np.int64)
+        vt = np.where(rng.random(n) < 0.5, VALID_TO_OPEN,
+                      vf + rng.integers(1, 10**6, n)).astype(np.int64)
+        return c, vf, vt, base
+
+    def test_all_rows_masked(self):
+        """Every row invalid at ts: all slots -inf, no index leaks."""
+        c, vf, vt, base = self._corpus(200)
+        ts = int(vf.min()) - 1                # before any validity starts
+        for mode in ("ref", "interpret"):
+            s, i = temporal_topk(_rand((3, 64), 1), c, vf, vt, ts, 7,
+                                 mode=mode)
+            assert np.all(np.isneginf(np.asarray(s))), mode
+
+    def test_k_exceeds_valid_candidates(self):
+        """k > number of valid rows: finite slots carry exactly the valid
+        rows, the rest are -inf, in both modes."""
+        c, vf, vt, _ = self._corpus(64)
+        # make exactly 3 rows valid at ts
+        ts = int(vf.min())
+        vf = vf.copy(); vt = vt.copy()
+        vf[:] = ts + 1
+        vf[:3] = ts
+        vt[:3] = VALID_TO_OPEN
+        for mode in ("ref", "interpret"):
+            s, i = temporal_topk(_rand((2, 64), 2), c, vf, vt, ts, 10,
+                                 mode=mode)
+            s, i = np.asarray(s), np.asarray(i)
+            for qi in range(2):
+                fin = np.isfinite(s[qi])
+                assert fin.sum() == 3, mode
+                assert set(i[qi][fin]) == {0, 1, 2}, mode
+
+    def test_empty_history(self):
+        """N == 0 corpus: empty result block, no kernel dispatch crash."""
+        c = np.zeros((0, 32), np.float32)
+        empty = np.zeros(0, np.int64)
+        for mode in (None, "ref"):
+            s, i = temporal_topk(_rand((2, 32), 3), c, empty, empty,
+                                 1000, 5, mode=mode)
+            assert np.asarray(s).shape == (2, 0)
+            assert np.asarray(i).shape == (2, 0)
+
+    @pytest.mark.parametrize("n", [1, 127, 129, 500, 513])
+    def test_non_multiple_of_block_rows(self, n):
+        """Row counts that don't divide the block size exercise the
+        padding path; padded rows must never rank (empty validity)."""
+        c, vf, vt, base = self._corpus(n, seed=n)
+        ts = int(np.median(vf))
+        q = _rand((2, 64), 4)
+        s_ref, i_ref = temporal_topk_ref(q, c, vf, vt, ts, min(5, n))
+        s_k, i_k = temporal_topk(q, c, vf, vt, ts, 5, bn=128,
+                                 mode="interpret")
+        np.testing.assert_allclose(np.asarray(s_k), s_ref,
+                                   rtol=1e-5, atol=1e-5)
+        fin = np.isfinite(np.asarray(s_k))
+        assert np.all(np.asarray(i_k)[fin] < n)       # no padded index
+
+    def test_per_query_windows_match_ref(self):
+        """The window kernel's PER-QUERY bounds: each query row gets its
+        own overlap mask inside one dispatch."""
+        from repro.kernels.temporal_mask_score.ops import temporal_window_topk
+        from repro.kernels.temporal_mask_score.ref import (
+            temporal_window_topk_ref)
+        c, vf, vt, base = self._corpus(300, seed=7)
+        q = _rand((4, 64), 8)
+        t0s = np.array([vf.min(), vf.min() + 500_000,
+                        vf.max(), vf.min() - 10], np.int64)
+        t1s = t0s + np.array([1, 300_000, 10**9, 5], np.int64)
+        s_ref, i_ref = temporal_window_topk_ref(q, c, vf, vt, t0s, t1s, 6)
+        s_k, i_k = temporal_window_topk(q, c, vf, vt, t0s, t1s, 6,
+                                        bn=128, mode="interpret")
+        np.testing.assert_allclose(np.asarray(s_k), s_ref,
+                                   rtol=1e-5, atol=1e-5)
+        # returned rows must overlap their OWN query's window
+        s_k, i_k = np.asarray(s_k), np.asarray(i_k)
+        for qi in range(4):
+            fin = np.isfinite(s_k[qi])
+            for j in np.asarray(i_k[qi][fin]):
+                assert vf[j] < t1s[qi] and t0s[qi] < vt[j]
+
+    def test_point_equals_window_of_one_microsecond(self):
+        """temporal_topk(ts) must equal temporal_window_topk([ts, ts+1))
+        exactly — the degenerate-window identity the engine relies on."""
+        from repro.kernels.temporal_mask_score.ops import temporal_window_topk
+        c, vf, vt, base = self._corpus(256, seed=9)
+        q = _rand((3, 64), 10)
+        ts = int(np.median(vf))
+        b = np.full(3, ts, np.int64)
+        for mode in ("ref", "interpret"):
+            s_p, i_p = temporal_topk(q, c, vf, vt, ts, 5, mode=mode)
+            s_w, i_w = temporal_window_topk(q, c, vf, vt, b, b + 1, 5,
+                                            mode=mode)
+            np.testing.assert_array_equal(np.asarray(s_p), np.asarray(s_w))
+            np.testing.assert_array_equal(np.asarray(i_p), np.asarray(i_w))

@@ -176,15 +176,50 @@ class TestStoreBatchParity:
     def test_empty_batch(self, store):
         assert store.query_batch([]) == []
 
-    def test_snapshot_cache_hits_and_invalidation(self, store):
+    def test_resident_history_incremental_and_correct(self, store):
+        """The fused path seeds its resident full-history arrays ONCE and
+        advances them incrementally on commit — repeated point-in-time
+        queries and post-ingest queries never re-fold the log."""
         ts = T2 + 500
         store.query_batch(QUERIES, k=3, at=ts)
-        h0 = store.temporal.snap_hits
+        assert store.temporal.resident_builds == 1
+        d0 = store.temporal.fused_dispatches
         store.query_batch(QUERIES, k=3, at=ts)
-        assert store.temporal.snap_hits > h0          # memoized re-fold
+        assert store.temporal.fused_dispatches == d0 + 1
+        assert store.temporal.resident_builds == 1    # no re-seed
+
+        n0 = store.temporal._resident.n
         store.ingest("policy", DOCS["policy"][0], ts=T3 + 7)
-        assert not store.temporal._snap_cache         # invalidated
+        # ingest advanced the resident columns in place (no rebuild)
+        assert store.temporal.resident_builds == 1
+        assert store.temporal._resident.n > n0
         _assert_parity(store, QUERIES, at=ts)         # still correct
+        # and the resident columns equal the full-history fold exactly
+        snap = store.cold.snapshot(include_closed=True, from_scratch=True)
+        res = store.temporal._resident
+        assert res.n == len(snap)
+        emb, vf, vt = res.views()
+        np.testing.assert_array_equal(vf, snap.valid_from)
+        np.testing.assert_array_equal(vt, snap.valid_to)
+        np.testing.assert_array_equal(emb, snap.embeddings)
+        assert res.chunk_ids == snap.chunk_ids
+
+    def test_oracle_path_matches_fused(self, tmp_path):
+        """The paper-faithful NumPy fold path (temporal_fused=False) and
+        the fused kernel path return the same records and scores."""
+        fused = LiveVectorLake(str(tmp_path / "f"), dim=96)
+        oracle = LiveVectorLake(str(tmp_path / "o"), dim=96,
+                                temporal_fused=False)
+        for s in (fused, oracle):
+            for v, ts in enumerate((T1, T2, T3)):
+                for d, versions in DOCS.items():
+                    s.ingest(d, versions[v], ts=ts)
+        for at in (T1 + 500, T2 + 500, T2):           # incl boundary instant
+            rf = fused.query_batch(QUERIES, k=3, at=at)
+            ro = oracle.query_batch(QUERIES, k=3, at=at)
+            for a, b in zip(rf, ro):
+                assert [(r.chunk_id, r.score) for r in a] == \
+                    [(r.chunk_id, r.score) for r in b]
 
 
 class TestServingCoalescing:

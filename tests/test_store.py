@@ -163,6 +163,24 @@ class TestFaultTolerance:
         texts = " ".join(snap.texts)
         assert "12 million" not in texts
 
+    def test_compensation_evicts_resident_history(self, tmp_path):
+        """Regression: a temporal query BETWEEN the crash and the
+        compensation folds the (still-committed) entry into the
+        engine's resident arrays; compensation must evict it — the
+        fused path may never serve rolled-back rows or keep valid rows
+        closed by a rolled-back closure."""
+        root = str(tmp_path / "lvl")
+        store = LiveVectorLake(root, dim=DIM)
+        store.ingest("doc1", V1, ts=1_000_000)
+        with pytest.raises(FaultInjected):
+            store.ingest("doc1", V2, ts=2_000_000, fail_after="cold")
+        # this query seeds the resident history WITH the doomed commit
+        store.query("quarterly revenue", k=1, at=2_500_000)
+        store.reconcile(policy="compensate")
+        res = store.query("quarterly revenue", k=1, at=2_500_000)
+        assert res and "10 million" in res[0].text     # V1 valid again
+        assert "12 million" not in " ".join(r.text for r in res)
+
     def test_hot_tier_rebuild_deterministic(self, tmp_path):
         root = str(tmp_path / "lvl")
         store = LiveVectorLake(root, dim=DIM)

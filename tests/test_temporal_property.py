@@ -1,0 +1,284 @@
+"""Temporal-correctness battery (ISSUE 3).
+
+Two layers:
+
+  - seeded-random fuzz (always runs): temporal-leakage invariants on
+    BOTH the fused kernel path and the NumPy oracle path, across random
+    ts grids, batch queries, and instants exactly at valid_from /
+    valid_to boundaries; plus snapshot-equivalence sweeps over random
+    commit/supersede/delete interleavings.
+  - hypothesis property tests (skip cleanly when hypothesis is absent,
+    like tests/test_property.py): the same invariants driven by
+    minimized adversarial op sequences.
+
+The oracle everywhere is the from-scratch O(history) log fold
+(``snapshot(from_scratch=True)``) — byte-identical snapshot equality,
+including ``include_closed=True`` and exact ``valid_to`` metadata.
+"""
+import numpy as np
+import pytest
+
+from repro.core.cold_tier import ColdTier
+from repro.core.store import LiveVectorLake
+from repro.core.temporal import TemporalEngine
+from repro.core.types import ChunkRecord, VALID_TO_OPEN
+
+DIM = 16
+
+
+def _rec(doc, pos, tag, ts):
+    rng = np.random.default_rng(abs(hash((doc, pos, tag))) % 2**31)
+    e = rng.standard_normal(DIM).astype(np.float32)
+    e /= np.linalg.norm(e)
+    return ChunkRecord(chunk_id=f"h-{doc}-{pos}-{tag}", doc_id=doc,
+                       position=pos, valid_from=ts, text=f"{doc}@{pos}:{tag}",
+                       embedding=e)
+
+
+def apply_ops(ct: ColdTier, ops, t0=1000, dt=100, compact_at=None):
+    """Apply a commit/supersede/delete op sequence the way the store
+    does: every write to an occupied (doc, pos) slot closes it first,
+    deletes close without writing. Returns (commit timestamps, end ts).
+
+    ops: list of commits; each commit is a list of (doc, pos, action)
+    with action in {"write", "delete"}.
+    """
+    open_slots: set = set()
+    ts = t0
+    stamps = []
+    for ci, commit in enumerate(ops):
+        records, closures, seen = [], [], set()
+        for doc, pos, action in commit:
+            key = (doc, pos)
+            if key in seen:
+                continue                      # one op per slot per commit
+            seen.add(key)
+            if key in open_slots:
+                closures.append({"doc_id": doc, "position": pos,
+                                 "closed_at": ts,
+                                 "status": ("superseded" if action == "write"
+                                            else "deleted")})
+                if action == "delete":
+                    open_slots.discard(key)
+            elif action == "delete":
+                continue                      # nothing to delete
+            if action == "write":
+                records.append(_rec(doc, pos, f"c{ci}", ts))
+                open_slots.add(key)
+        ct.commit(records, closures, ts)
+        stamps.append(ts)
+        if compact_at is not None and ci == compact_at:
+            ct.compact()
+        ts += dt
+    return stamps, ts
+
+
+def assert_snapshots_identical(ct: ColdTier, ts_grid, tag=""):
+    for ts in ts_grid:
+        for inc in (False, True):
+            a = ct.snapshot(as_of_ts=int(ts), include_closed=inc)
+            b = ct.snapshot(as_of_ts=int(ts), include_closed=inc,
+                            from_scratch=True)
+            ctx = f"{tag} ts={ts} include_closed={inc}"
+            assert a.chunk_ids == b.chunk_ids, ctx
+            np.testing.assert_array_equal(a.valid_from, b.valid_from,
+                                          err_msg=ctx)
+            np.testing.assert_array_equal(a.valid_to, b.valid_to,
+                                          err_msg=ctx)
+            np.testing.assert_array_equal(a.embeddings, b.embeddings,
+                                          err_msg=ctx)
+            assert a.texts == b.texts, ctx
+            assert a.as_of == b.as_of, ctx
+
+
+def _random_ops(rng, n_commits, n_docs=3, n_pos=3):
+    ops = []
+    for _ in range(n_commits):
+        n = int(rng.integers(1, 4))
+        commit = []
+        for _ in range(n):
+            commit.append((f"d{rng.integers(0, n_docs)}",
+                           int(rng.integers(0, n_pos)),
+                           "delete" if rng.random() < 0.25 else "write"))
+        ops.append(commit)
+    return ops
+
+
+class TestSnapshotEquivalenceSeeded:
+    """Checkpointed/archived snapshot == from-scratch fold, on random
+    interleavings (always runs; the hypothesis class below drives the
+    same property with minimized counterexamples)."""
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_random_interleavings(self, tmp_path, seed):
+        rng = np.random.default_rng(seed)
+        interval = int(rng.choice([1, 2, 3, 5]))
+        ct = ColdTier(str(tmp_path), dim=DIM, checkpoint_interval=interval)
+        ops = _random_ops(rng, n_commits=int(rng.integers(5, 18)))
+        compact_at = (int(rng.integers(0, len(ops)))
+                      if rng.random() < 0.5 else None)
+        stamps, end = apply_ops(ct, ops, compact_at=compact_at)
+        # grid: random instants + every commit instant and its neighbors
+        grid = set(int(x) for x in rng.integers(900, end + 200, 12))
+        for s in stamps:
+            grid.update((s - 1, s, s + 1))
+        assert_snapshots_identical(ct, sorted(grid), tag=f"seed={seed}")
+
+    def test_compact_then_more_commits(self, tmp_path):
+        """Archives stay exact when new commits (and closures targeting
+        re-opened slots) land AFTER compaction."""
+        ct = ColdTier(str(tmp_path), dim=DIM, checkpoint_interval=0)
+        ops1 = [[("d0", 0, "write")], [("d0", 0, "write")],
+                [("d0", 0, "write")], [("d1", 0, "write")],
+                [("d0", 0, "delete"), ("d1", 0, "write")]]
+        stamps1, end1 = apply_ops(ct, ops1)
+        ct.compact()
+        ops2 = [[("d0", 0, "write")], [("d0", 0, "write")],
+                [("d1", 0, "delete")]]
+        stamps2, end2 = apply_ops(ct, ops2, t0=end1)
+        grid = [s + d for s in stamps1 + stamps2 for d in (-1, 0, 1)]
+        assert_snapshots_identical(ct, grid + [end2 + 10**6])
+
+
+class TestLeakageFuzzSeeded:
+    """assert_no_leakage fuzzed across random ts grids and batch queries
+    on BOTH the fused kernel path and the NumPy oracle path, including
+    instants exactly at valid_from/valid_to boundaries."""
+
+    @pytest.fixture(scope="class")
+    def store(self, tmp_path_factory):
+        root = tmp_path_factory.mktemp("leak")
+        store = LiveVectorLake(str(root), dim=32,
+                               cold_checkpoint_interval=3)
+        texts = ["alpha beta gamma.\n\ndelta epsilon zeta.",
+                 "alpha beta UPDATED.\n\ndelta epsilon zeta.",
+                 "alpha beta UPDATED.\n\nnew paragraph entirely.",
+                 "final alpha content."]
+        self_ts = []
+        for v, t in enumerate(texts):
+            s = store.ingest("doc-a", t, ts=1_000_000 + v * 1_000)
+            self_ts.append(s.ts)
+        for v, t in enumerate(texts[::-1]):
+            store.ingest("doc-b", t, ts=1_010_000 + v * 1_000)
+        return store
+
+    def _boundary_instants(self, store):
+        snap = store.cold.snapshot(include_closed=True)
+        out = set()
+        for i in range(len(snap)):
+            vf, vt = int(snap.valid_from[i]), int(snap.valid_to[i])
+            out.update((vf - 1, vf, vf + 1))
+            if vt != VALID_TO_OPEN:
+                out.update((vt - 1, vt, vt + 1))
+        return sorted(out)
+
+    def _engines(self, store):
+        oracle = TemporalEngine(store.cold, fused=False)
+        return [("fused", store.temporal), ("oracle", oracle)]
+
+    def test_point_queries_no_leakage(self, store):
+        rng = np.random.default_rng(0)
+        instants = self._boundary_instants(store)
+        instants += [int(x) for x in
+                     rng.integers(990_000, 1_030_000, 20)]
+        q = rng.standard_normal((4, 32)).astype(np.float32)
+        for name, eng in self._engines(store):
+            for ts in instants:
+                res = eng.query_at_batch(q, ts, k=6)
+                for row in res:
+                    eng.assert_no_leakage(row, ts)   # raises on leakage
+
+    def test_batch_equals_sequential_on_boundaries(self, store):
+        """A query returns the same records at the same ranks alone or
+        inside a batch (scores equal to ULP-level BLAS tolerance), on
+        both paths, at exact validity boundaries."""
+        rng = np.random.default_rng(1)
+        q = rng.standard_normal((5, 32)).astype(np.float32)
+        for name, eng in self._engines(store):
+            for ts in self._boundary_instants(store)[:12]:
+                batch = eng.query_at_batch(q, ts, k=4)
+                for i in range(q.shape[0]):
+                    single = eng.query_at(q[i], ts, k=4)
+                    assert [r.chunk_id for r in batch[i]] == \
+                        [r.chunk_id for r in single], (name, ts, i)
+                    for x, y in zip(batch[i], single):
+                        assert abs(x.score - y.score) < 1e-5, (name, ts, i)
+
+    def test_fused_and_oracle_same_records(self, store):
+        """Same chunk sets at every fuzzed instant (scores may differ at
+        ULP level between the two matmul shapes)."""
+        rng = np.random.default_rng(2)
+        q = rng.standard_normal((3, 32)).astype(np.float32)
+        engines = dict(self._engines(store))
+        for ts in self._boundary_instants(store):
+            rf = engines["fused"].query_at_batch(q, ts, k=8)
+            ro = engines["oracle"].query_at_batch(q, ts, k=8)
+            for a, b in zip(rf, ro):
+                assert {r.chunk_id for r in a} == {r.chunk_id for r in b}, ts
+                for x, y in zip(a, b):
+                    assert abs(x.score - y.score) < 1e-4
+
+    def test_window_queries_no_leakage(self, store):
+        rng = np.random.default_rng(3)
+        instants = self._boundary_instants(store)
+        for name, eng in self._engines(store):
+            for _ in range(15):
+                t0, t1 = sorted(rng.choice(instants, 2, replace=False))
+                if t0 == t1:
+                    t1 += 1
+                res = eng.query_window_batch(
+                    rng.standard_normal((3, 32)).astype(np.float32),
+                    int(t0), int(t1), k=5)
+                for row in res:
+                    eng.assert_no_window_leakage(row, int(t0), int(t1))
+
+
+# ----------------------------------------------------------------------
+# hypothesis layer (optional dependency, like tests/test_property.py)
+# ----------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                           # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    _op = st.tuples(st.sampled_from(["d0", "d1", "d2"]),
+                    st.integers(0, 2),
+                    st.sampled_from(["write", "write", "delete"]))
+    _commit = st.lists(_op, min_size=1, max_size=3)
+    _ops = st.lists(_commit, min_size=1, max_size=12)
+
+    class TestSnapshotEquivalenceHypothesis:
+        @given(ops=_ops, interval=st.sampled_from([1, 2, 3, 5]),
+               do_compact=st.booleans())
+        @settings(max_examples=40, deadline=None)
+        def test_checkpointed_fold_identical(self, tmp_path_factory, ops,
+                                             interval, do_compact):
+            """Under ANY interleaved commit/supersede/delete sequence,
+            the checkpointed (and optionally compacted) snapshot is
+            record-for-record identical to the from-scratch log fold for
+            every ts on the sampled grid, include_closed included."""
+            root = tmp_path_factory.mktemp("hyp")
+            ct = ColdTier(str(root), dim=DIM,
+                          checkpoint_interval=interval)
+            stamps, end = apply_ops(
+                ct, ops, compact_at=(len(ops) - 1 if do_compact else None))
+            grid = sorted({t + d for t in stamps for d in (-1, 0, 1)}
+                          | {900, end + 10**6})
+            assert_snapshots_identical(ct, grid, tag="hypothesis")
+
+        @given(ops=_ops, k=st.integers(1, 6))
+        @settings(max_examples=25, deadline=None)
+        def test_fused_path_no_leakage(self, tmp_path_factory, ops, k):
+            """The fused kernel path never returns a chunk whose validity
+            interval misses the query instant, at any commit boundary."""
+            root = tmp_path_factory.mktemp("hypleak")
+            ct = ColdTier(str(root), dim=DIM, checkpoint_interval=2)
+            stamps, end = apply_ops(ct, ops)
+            eng = TemporalEngine(ct, fused=True)
+            rng = np.random.default_rng(0)
+            q = rng.standard_normal((2, DIM)).astype(np.float32)
+            for ts in {t + d for t in stamps for d in (-1, 0, 1)}:
+                for row in eng.query_at_batch(q, int(ts), k=k):
+                    eng.assert_no_leakage(row, int(ts))

@@ -1,9 +1,12 @@
 """Focused unit tests: hot-tier slot mechanics, WAL state machine,
-cold-tier snapshot isolation, embedding cache."""
+cold-tier snapshot isolation (incl. checkpoint/compaction crash
+injection), embedding cache."""
+import os
+
 import numpy as np
 import pytest
 
-from repro.core.cold_tier import ColdTier
+from repro.core.cold_tier import ColdTier, FaultPoint
 from repro.core.embedder import CachingEmbedder, HashProjectionEmbedder
 from repro.core.hot_tier import HotTier
 from repro.core.types import ChunkRecord, VALID_TO_OPEN
@@ -134,6 +137,141 @@ class TestColdTierIsolation:
             f.write(bytes([last[0] ^ 0xFF]))     # guaranteed bit flip
         with pytest.raises(IOError, match="checksum"):
             ct.snapshot()
+
+
+def _close(doc, pos, ts):
+    return {"doc_id": doc, "position": pos, "closed_at": ts,
+            "status": "superseded"}
+
+
+class TestColdTierCrashRecovery:
+    """ISSUE 3 satellite: kill between segment write, log append, and
+    checkpoint write — and mid-compaction. Recovery (a fresh ColdTier on
+    the same root) must never surface an uncommitted checkpoint, lose a
+    closure, or diverge from the from-scratch fold."""
+
+    def _seed(self, root, n=7, interval=4):
+        ct = ColdTier(root, dim=8, checkpoint_interval=interval)
+        ts = 1000
+        for v in range(n):
+            closures = [] if v == 0 else [_close("d", 0, ts)]
+            ct.commit([_rec("d", 0, f"t{v}", ts=ts)], closures, ts)
+            ts += 100
+        return ct, ts
+
+    def _assert_consistent(self, root, tag=""):
+        ct = ColdTier(root, dim=8)           # fresh open = recovery path
+        a = ct.snapshot(include_closed=True)
+        b = ct.snapshot(include_closed=True, from_scratch=True)
+        assert a.chunk_ids == b.chunk_ids, tag
+        np.testing.assert_array_equal(a.valid_to, b.valid_to, err_msg=tag)
+        return ct
+
+    def test_crash_between_segment_and_log(self, tmp_path):
+        root = str(tmp_path)
+        ct, ts = self._seed(root)
+        with pytest.raises(FaultPoint):
+            ct.commit([_rec("d", 0, "lost", ts=ts)], [_close("d", 0, ts)],
+                      ts, fail_after="segment")
+        ct2 = self._assert_consistent(root, "segment crash")
+        # the orphaned segment's commit never became visible, and the
+        # in-flight closure was NOT applied (atomic commit)
+        snap = ct2.snapshot()
+        assert snap.texts == ["t6"]          # pre-crash head still open
+        # the version number is reused by the next commit
+        v = ct2.commit([_rec("d", 0, "retry", ts=ts + 1)],
+                       [_close("d", 0, ts + 1)], ts + 1)
+        assert v == 8
+        assert ct2.snapshot().texts == ["retry"]
+
+    def test_crash_between_log_and_checkpoint(self, tmp_path):
+        root = str(tmp_path)
+        ct, ts = self._seed(root, n=7, interval=4)  # next commit = v8 = ckpt
+        with pytest.raises(FaultPoint):
+            ct.commit([_rec("d", 0, "v8", ts=ts)], [_close("d", 0, ts)],
+                      ts, fail_after="log")
+        ct2 = self._assert_consistent(root, "log crash")
+        # the commit IS durable (log entry landed); only the checkpoint
+        # is missing — no closure lost
+        assert ct2.latest_version() == 8
+        assert ct2.snapshot().texts == ["v8"]
+        assert [m["version"] for m in ct2.checkpoints()] == [4]
+
+    def test_crash_between_checkpoint_npz_and_meta(self, tmp_path):
+        root = str(tmp_path)
+        ct, ts = self._seed(root, n=7, interval=4)
+        with pytest.raises(FaultPoint):
+            ct.commit([_rec("d", 0, "v8", ts=ts)], [_close("d", 0, ts)],
+                      ts, fail_after="checkpoint_data")
+        # npz written, meta missing: the checkpoint is NOT durable
+        ckpt_dir = os.path.join(root, "_ckpt")
+        assert any(f.endswith(".npz") and f.startswith("ckpt-00000008")
+                   for f in os.listdir(ckpt_dir))
+        ct2 = self._assert_consistent(root, "checkpoint crash")
+        assert [m["version"] for m in ct2.checkpoints()] == [4]
+        # recovery swept the orphan npz
+        assert not any(f.startswith("ckpt-00000008")
+                       for f in os.listdir(ckpt_dir))
+        # and the next checkpoint write succeeds normally
+        ct2.write_checkpoint()
+        assert [m["version"] for m in ct2.checkpoints()] == [4, 8]
+
+    def test_crash_between_archive_and_manifest(self, tmp_path):
+        root = str(tmp_path)
+        ct, ts = self._seed(root, n=10, interval=0)
+        with pytest.raises(FaultPoint):
+            ct.compact(fail_after="archive")
+        arc_dir = os.path.join(root, "_archive")
+        assert any(f.endswith(".npz") for f in os.listdir(arc_dir))
+        ct2 = self._assert_consistent(root, "compact crash")
+        # manifest never landed: no archive is visible, orphan swept
+        assert ct2.archives() == []
+        assert not any(f.endswith(".npz") for f in os.listdir(arc_dir))
+        # re-running compaction completes
+        r = ct2.compact()
+        assert r["archived_runs"] == 1
+        self._assert_consistent(root, "after recompact")
+
+    def test_uncommitted_checkpoint_never_surfaced(self, tmp_path):
+        """A checkpoint that baked a version later compensated by WAL
+        reconciliation must not serve stale rows."""
+        root = str(tmp_path)
+        ct, ts = self._seed(root, n=7, interval=4)
+        ct.commit([_rec("d", 0, "maybe", ts=ts)], [_close("d", 0, ts)], ts)
+        assert [m["version"] for m in ct.checkpoints()] == [4, 8]
+        ct.mark_committed(8, committed=False)   # compensate v8
+        assert [m["version"] for m in ct.checkpoints()] == [4]
+        ct2 = self._assert_consistent(root, "compensated")
+        snap = ct2.snapshot()
+        assert snap.texts == ["t6"]          # v8 row invisible
+        # closure applied by v8 is also rolled back: t6 is open again
+        assert snap.valid_to.tolist() == [VALID_TO_OPEN]
+
+    def test_closures_survive_crash_loop(self, tmp_path):
+        """Repeated crash/reopen cycles at every fault point: the final
+        store state always matches the from-scratch fold and no closure
+        is lost."""
+        root = str(tmp_path)
+        ct = ColdTier(root, dim=8, checkpoint_interval=2)
+        ts = 1000
+        for v, fault in enumerate([None, "segment", None, "log", None,
+                                   "checkpoint_data", None, None]):
+            closures = [] if v == 0 else [_close("d", 0, ts)]
+            try:
+                ct.commit([_rec("d", 0, f"t{v}", ts=ts)], closures, ts,
+                          fail_after=fault)
+            except FaultPoint:
+                pass
+            ct = ColdTier(root, dim=8, checkpoint_interval=2)  # reopen
+            ts += 100
+        snap = ct.snapshot(include_closed=True)
+        ref = ct.snapshot(include_closed=True, from_scratch=True)
+        assert snap.chunk_ids == ref.chunk_ids
+        np.testing.assert_array_equal(snap.valid_to, ref.valid_to)
+        # exactly one open row at the head, every superseded row closed
+        open_rows = [i for i, vt in enumerate(snap.valid_to)
+                     if vt == VALID_TO_OPEN]
+        assert len(open_rows) == 1
 
 
 class TestEmbeddingCache:
