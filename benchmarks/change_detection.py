@@ -38,8 +38,8 @@ def run(n_docs: int = 25, n_versions: int = 3, seed: int = 0) -> dict:
             "recall": tp / max(total, 1)}
 
 
-def main() -> list[tuple]:
-    r = run()
+def main(smoke: bool = False) -> list[tuple]:
+    r = run(n_docs=8, n_versions=2) if smoke else run()
     return [
         ("change_detection/true_positives", r["tp"],
          f"of {r['total_true_changes']} ground-truth changes"),

@@ -26,11 +26,13 @@ def build_store(root: str, n_docs: int = 100, n_versions: int = 5,
     return store, corpus
 
 
-def run(n_queries: int = 60, seed: int = 0) -> dict:
+def run(n_queries: int = 60, seed: int = 0, n_docs: int = 100,
+        n_versions: int = 5) -> dict:
     rng = np.random.default_rng(seed)
     out = {}
     with tempfile.TemporaryDirectory() as root:
-        store, corpus = build_store(root, seed=seed)
+        store, corpus = build_store(root, n_docs=n_docs,
+                                    n_versions=n_versions, seed=seed)
         facts = [f for f in corpus.facts]
         queries = [f"{rng.choice(facts).name} units recorded"
                    for _ in range(n_queries)]
@@ -74,8 +76,8 @@ def run(n_queries: int = 60, seed: int = 0) -> dict:
     return out
 
 
-def main() -> list[tuple]:
-    r = run()
+def main(smoke: bool = False) -> list[tuple]:
+    r = run(n_queries=12, n_docs=20, n_versions=3) if smoke else run()
     rows = []
     for k in ("current_hot_ms", "historical_cold_ms",
               "historical_resident_ms"):

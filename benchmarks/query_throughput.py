@@ -26,7 +26,6 @@ import time
 
 import numpy as np
 
-from repro.core.types import ChunkRecord
 from repro.index.lsm import SegmentedIndex
 
 from .common import Timer
@@ -182,8 +181,8 @@ def rows_from(result: dict) -> list[tuple]:
     return rows
 
 
-def main() -> list[tuple]:
-    return rows_from(run())
+def main(smoke: bool = False) -> list[tuple]:
+    return rows_from(run(smoke=smoke))
 
 
 if __name__ == "__main__":

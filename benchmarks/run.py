@@ -1,4 +1,5 @@
-"""Benchmark runner — one function per paper table/figure.
+"""Benchmark runner — one function per paper table/figure plus the
+system-scaling suites added since.
 
 Prints ``name,value,derived`` CSV rows:
   Table II  -> update_performance
@@ -6,6 +7,13 @@ Prints ``name,value,derived`` CSV rows:
   §V-B3     -> change_detection
   §V-B4     -> storage_efficiency
   §V-B5     -> temporal_accuracy
+  DESIGN §7 -> streaming_churn, search_scaling
+  DESIGN §8 -> query_throughput
+  DESIGN §9 -> temporal_scaling
+  DESIGN §10-> shard_scaling
+
+``--smoke`` shrinks every suite to CI sizes (each suite's ``main``
+honors the flag); ``--only`` runs a comma-separated subset.
 
 The roofline/dry-run analysis (§Roofline) is a separate entry point
 (``python -m benchmarks.roofline``) because it must force 512 host
@@ -13,14 +21,23 @@ devices before jax initializes.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI (passed to every suite)")
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma-separated suite names to run")
+    args = ap.parse_args()
+
     from . import (change_detection, query_latency, query_throughput,
-                   search_scaling, storage_efficiency, streaming_churn,
-                   temporal_accuracy, temporal_scaling, update_performance)
+                   search_scaling, shard_scaling, storage_efficiency,
+                   streaming_churn, temporal_accuracy, temporal_scaling,
+                   update_performance)
     suites = [
         ("update_performance", update_performance),
         ("query_latency", query_latency),
@@ -31,13 +48,20 @@ def main() -> None:
         ("search_scaling", search_scaling),
         ("streaming_churn", streaming_churn),
         ("query_throughput", query_throughput),
+        ("shard_scaling", shard_scaling),
     ]
+    if args.only:
+        keep = {s.strip() for s in args.only.split(",")}
+        unknown = keep - {name for name, _ in suites}
+        if unknown:
+            sys.exit(f"unknown suite(s): {sorted(unknown)}")
+        suites = [(n, m) for n, m in suites if n in keep]
     print("name,value,notes")
     failures = 0
     for name, mod in suites:
         t0 = time.perf_counter()
         try:
-            rows = mod.main()
+            rows = mod.main(smoke=args.smoke)
             for row_name, val, note in rows:
                 if isinstance(val, float):
                     print(f"{row_name},{val:.4f},{note}")

@@ -103,9 +103,10 @@ def run(sizes=(2_000, 10_000, 20_000, 50_000), dim: int = 384, k: int = 10,
     return out
 
 
-def main() -> list[tuple]:
+def main(smoke: bool = False) -> list[tuple]:
+    results = (run(sizes=(2_000,), n_queries=6) if smoke else run())
     rows = []
-    for r in run():
+    for r in results:
         rows.append((f"search_scaling/n{r['n']}/exact_p50_ms",
                      r["exact_p50_ms"], "fused top-k scan (CPU)"))
         rows.append((f"search_scaling/n{r['n']}/ivf_p50_ms",

@@ -1,0 +1,209 @@
+"""Shard fabric scaling: scatter-gather QPS vs shard count with the
+oracle-equivalence gate (DESIGN.md §10).
+
+For S in 1..8 the same ingest stream drives a single ``LiveVectorLake``
+(the oracle) and an S-shard ``ShardFabric``; the gate requires the
+fabric's results to be equivalent to the oracle's for current AND
+point-in-time batches per ``repro.shard.results_equivalent`` — ids and
+order identical wherever score gaps exceed cross-layout float noise,
+scores within (1e-5 rel, 1e-7 abs). In-process all shards
+share one CPU, so wall-clock QPS measures the scatter-gather overhead
+(per-shard pass + merge), not horizontal speedup; the per-shard work
+fraction column shows what each shard of a real deployment would scan.
+A replicated (R=2) point and an online-split-while-serving point are
+also reported.
+
+  PYTHONPATH=src python -m benchmarks.shard_scaling [--smoke] [--json out.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.store import LiveVectorLake
+from repro.shard import Rebalancer, ShardFabric, results_equivalent
+
+from .common import Timer
+
+DIM = 128
+VOCAB = ["alpha", "bravo", "carbon", "delta", "ember", "fjord", "glacier",
+         "harbor", "isotope", "jetty", "kernel", "lagoon", "meadow",
+         "nebula", "orchid", "plasma", "quartz", "rivet", "summit",
+         "timber", "umbra", "vertex", "willow", "xylem", "yonder", "zephyr"]
+
+
+def make_stream(rng, n_docs: int, n_versions: int, chunks: int = 3):
+    stream, ts, texts = [], 0, {}
+    for _ in range(n_versions):
+        for i in range(n_docs):
+            doc = f"doc{i}"
+            if doc not in texts:
+                texts[doc] = [" ".join(rng.choice(VOCAB, 6))
+                              for _ in range(chunks)]
+            else:
+                texts[doc][int(rng.integers(chunks))] = \
+                    " ".join(rng.choice(VOCAB, 6))
+            ts += 1_000_000
+            stream.append((doc, "\n\n".join(texts[doc]), ts))
+    return stream
+
+
+def _qps(fn, n_queries: int, repeats: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        with Timer() as t:
+            fn()
+        best = min(best, t.elapsed)
+    return n_queries / max(best, 1e-9)
+
+
+def _bench_target(target, queries, k, mid_ts) -> dict:
+    cur = target.query_batch(queries, k=k)
+    at = target.query_batch(queries, k=k, at=mid_ts)
+    return {
+        "current": cur, "at": at,
+        "qps_current": _qps(lambda: target.query_batch(queries, k=k),
+                            len(queries)),
+        "qps_at": _qps(lambda: target.query_batch(queries, k=k, at=mid_ts),
+                       len(queries)),
+    }
+
+
+def run(smoke: bool = False) -> dict:
+    shard_counts = (1, 2) if smoke else (1, 2, 4, 8)
+    n_docs = 24 if smoke else 96
+    n_versions = 2 if smoke else 3
+    n_queries = 16 if smoke else 48
+    k = 10
+    rng = np.random.default_rng(0)
+    stream = make_stream(rng, n_docs, n_versions)
+    queries = [" ".join(rng.choice(VOCAB, 4)) for _ in range(n_queries)]
+    mid_ts = stream[-1][2] // 2
+    cap = 1 << 15          # exact-scan hot tiers: the gate compares
+    #                        exhaustive search on both sides
+
+    with tempfile.TemporaryDirectory() as root:
+        oracle = LiveVectorLake(f"{root}/oracle", dim=DIM,
+                                hot_capacity=cap)
+        for doc, text, ts in stream:
+            oracle.ingest(doc, text, ts=ts)
+        oracle.query_batch(queries[:2], k=k)         # warm-up
+        base = _bench_target(oracle, queries, k, mid_ts)
+        # extended oracle lists: the tied cohort at the k boundary
+        ext = {"current": oracle.query_batch(queries, k=4 * k),
+               "at": oracle.query_batch(queries, k=4 * k, at=mid_ts)}
+
+        def gate(res) -> bool:
+            return all(results_equivalent(base[m][qi], res[m][qi],
+                                          ext[m][qi])
+                       for m in ("current", "at")
+                       for qi in range(n_queries))
+
+        points = []
+        for s_count in shard_counts:
+            fab = ShardFabric(f"{root}/fab{s_count}", n_shards=s_count,
+                              dim=DIM, hot_capacity=cap)
+            for doc, text, ts in stream:
+                fab.ingest(doc, text, ts=ts)
+            fab.query_batch(queries[:2], k=k)        # warm-up
+            res = _bench_target(fab, queries, k, mid_ts)
+            identical = gate(res)
+            chunks = [fab.lake(s).stats()["hot"]["active"]
+                      for s in fab.ring.shards]
+            points.append({
+                "shards": s_count,
+                "qps_current": res["qps_current"],
+                "qps_at": res["qps_at"],
+                "identical": identical,
+                "max_shard_fraction": max(chunks) / max(sum(chunks), 1),
+                "planner": dict(fab.planner.stats),
+            })
+
+        # replication point: R=2 on the largest fabric
+        fabr = ShardFabric(f"{root}/fabR", n_shards=shard_counts[-1],
+                           replicas=2, dim=DIM, hot_capacity=cap)
+        for doc, text, ts in stream:
+            fabr.ingest(doc, text, ts=ts)
+        resr = _bench_target(fabr, queries, k, mid_ts)
+        replicated = {
+            "shards": shard_counts[-1], "replicas": 2,
+            "qps_current": resr["qps_current"],
+            "identical": gate(resr),
+            "dedup_dropped": fabr.planner.stats["dedup_dropped"],
+        }
+
+        # online rebalance: split the 2-shard fabric while it serves
+        fab2 = ShardFabric(f"{root}/fab_split", n_shards=2, dim=DIM,
+                           hot_capacity=cap)
+        for doc, text, ts in stream:
+            fab2.ingest(doc, text, ts=ts)
+        with Timer() as t:
+            rep = Rebalancer(fab2).split(f"s{2:02d}")
+        post = _bench_target(fab2, queries, k, mid_ts)
+        split = {
+            "docs_copied": rep["docs_copied"], "purged": rep["purged"],
+            "epochs": fab2.stats()["epoch"], "wall_s": t.elapsed,
+            "identical_after": gate(post),
+        }
+
+    return {"smoke": smoke, "n_docs": n_docs, "n_versions": n_versions,
+            "n_queries": n_queries, "k": k,
+            "oracle_qps_current": base["qps_current"],
+            "oracle_qps_at": base["qps_at"],
+            "points": points, "replicated": replicated, "split": split,
+            "gate": {"identical_everywhere": (
+                all(p["identical"] for p in points)
+                and replicated["identical"] and split["identical_after"])},
+            "timestamp": time.time()}
+
+
+def rows_from(result: dict) -> list[tuple]:
+    rows = [("shard_scaling/oracle/qps_current",
+             result["oracle_qps_current"], "single-lake baseline"),
+            ("shard_scaling/oracle/qps_at", result["oracle_qps_at"],
+             "single-lake temporal baseline")]
+    for p in result["points"]:
+        note = (f"identical={'yes' if p['identical'] else 'NO'} "
+                f"max_shard_frac={p['max_shard_fraction']:.2f}")
+        rows.append((f"shard_scaling/s{p['shards']}/qps_current",
+                     p["qps_current"], note))
+        rows.append((f"shard_scaling/s{p['shards']}/qps_at",
+                     p["qps_at"], note))
+    r = result["replicated"]
+    rows.append((f"shard_scaling/s{r['shards']}r2/qps_current",
+                 r["qps_current"],
+                 f"identical={'yes' if r['identical'] else 'NO'} "
+                 f"dedup_dropped={r['dedup_dropped']}"))
+    s = result["split"]
+    rows.append(("shard_scaling/split/wall_s", s["wall_s"],
+                 f"docs_copied={s['docs_copied']} epochs={s['epochs']} "
+                 f"identical_after="
+                 f"{'yes' if s['identical_after'] else 'NO'}"))
+    g = result["gate"]
+    rows.append(("shard_scaling/gate",
+                 1.0 if g["identical_everywhere"] else 0.0,
+                 "identical=yes everywhere" if g["identical_everywhere"]
+                 else "EQUIVALENCE FAILED"))
+    return rows
+
+
+def main(smoke: bool = False) -> list[tuple]:
+    return rows_from(run(smoke=smoke))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small sizes for CI")
+    ap.add_argument("--json", type=str, default=None,
+                    help="write the full result record to PATH")
+    args = ap.parse_args()
+    result = run(smoke=args.smoke)
+    for name, val, note in rows_from(result):
+        print(f"{name},{val:.3f},{note}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=1)

@@ -49,8 +49,8 @@ def run(n_docs: int = 100, n_versions: int = 5, seed: int = 0) -> dict:
         }
 
 
-def main() -> list[tuple]:
-    r = run()
+def main(smoke: bool = False) -> list[tuple]:
+    r = run(n_docs=20, n_versions=3) if smoke else run()
     return [
         ("storage/hot_active_chunks", r["hot_active_chunks"],
          "paper: ~1200"),

@@ -137,8 +137,8 @@ def run(dim: int = 128, n_base: int = 6_000, n_batches: int = 120,
     }
 
 
-def main() -> list[tuple]:
-    r = run()
+def main(smoke: bool = False) -> list[tuple]:
+    r = run(n_base=1_500, n_batches=20) if smoke else run()
     note = (f"segments={r['segments']} rows={r['live_rows']} "
             f"wamp={r['write_amplification']:.2f}")
     return [

@@ -83,8 +83,8 @@ def run(n_docs: int = 60, n_versions: int = 5, seed: int = 0,
             "current_accuracy": n_cur_ok / 10}
 
 
-def main() -> list[tuple]:
-    r = run()
+def main(smoke: bool = False) -> list[tuple]:
+    r = run(n_docs=15, n_versions=3, n_queries=10) if smoke else run()
     return [
         ("temporal/n_queries", r["n_queries"], "paper: 20"),
         ("temporal/accuracy", r["accuracy"], "paper: 1.0"),

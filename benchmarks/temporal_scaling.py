@@ -204,8 +204,8 @@ def rows_from(result: dict) -> list[tuple]:
     return rows
 
 
-def main() -> list[tuple]:
-    return rows_from(run())
+def main(smoke: bool = False) -> list[tuple]:
+    return rows_from(run(smoke=smoke))
 
 
 if __name__ == "__main__":

@@ -83,8 +83,8 @@ def _initial_chunks(corpus) -> int:
     return sum(len(chunk_document(t)) for t in corpus.versions[0].values())
 
 
-def main() -> list[tuple]:
-    r = run()
+def main(smoke: bool = False) -> list[tuple]:
+    r = run(n_docs=20, n_versions=3) if smoke else run()
     rows = []
     for sysname, m in r.items():
         rows.append((f"update_perf/{sysname}/reprocessed_pct",

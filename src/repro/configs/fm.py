@@ -2,7 +2,6 @@
 <v_i, v_j> x_i x_j via the O(nk) sum-square trick. [Rendle, ICDM'10]"""
 from __future__ import annotations
 
-import dataclasses
 
 from ..models.recsys import FMConfig
 from .base import ArchSpec, register

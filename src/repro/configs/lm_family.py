@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 
 from ..models.transformer import TransformerConfig
-from .base import Cell, bf16, i32, sds
+from .base import Cell, i32, sds
 
 LM_SHAPES = {
     "train_4k": dict(kind="train", seq=4096, batch=256),

@@ -15,9 +15,11 @@ Hash equality is content equality (SHA-256), so this is deterministic:
 """
 from __future__ import annotations
 
+import dataclasses
 from collections import Counter
 
-from .types import ChangeSet, Chunk
+from .types import (STATUS_DELETED, STATUS_SUPERSEDED, VALID_TO_OPEN,
+                    ChangeSet, Chunk, ChunkRecord)
 
 
 def detect_changes(new_chunks: list[Chunk], old_hashes: list[str]) -> ChangeSet:
@@ -81,3 +83,58 @@ def positional_diff(new_chunks: list[Chunk], old_hashes: list[str]
         if new_h is not None:
             append.append(p)
     return close, append
+
+
+@dataclasses.dataclass
+class HistoryEvent:
+    """One commit's worth of a single document's history, reconstructed
+    from its validity intervals (the inverse of the ingest CDC diff)."""
+
+    ts: int                          # commit instant (valid_from / closed_at)
+    records: list[ChunkRecord]       # rows opened at ts
+    closures: list[dict]             # rows closed at ts
+    hashes_after: list[str]          # position-ordered live hashes after ts
+
+
+def history_to_events(rows: list[ChunkRecord]) -> list[HistoryEvent]:
+    """Re-derive the per-commit CDC delta stream of ONE document from its
+    full-history rows (every version, open and closed).
+
+    A row ``[valid_from, valid_to)`` contributes an open event at
+    ``valid_from`` and — when closed — a closure event at ``valid_to``.
+    Replaying the returned events in order through ``ColdTier.commit``
+    reproduces the document's exact validity intervals on another shard:
+    this is how migration moves a doc WITHOUT changing temporal
+    semantics (DESIGN.md §10.4). ``hashes_after`` is the hash-store
+    entry the CDC layer needs after each event, so a migrated doc diffs
+    future ingests identically to the source.
+    """
+    instants: set[int] = set()
+    for r in rows:
+        instants.add(int(r.valid_from))
+        if r.valid_to != VALID_TO_OPEN:
+            instants.add(int(r.valid_to))
+    events: list[HistoryEvent] = []
+    live: dict[int, str] = {}        # position -> chunk hash
+    for ts in sorted(instants):
+        opened = sorted((r for r in rows if int(r.valid_from) == ts),
+                        key=lambda r: r.position)
+        closed = sorted((r for r in rows
+                         if r.valid_to != VALID_TO_OPEN
+                         and int(r.valid_to) == ts),
+                        key=lambda r: r.position)
+        opened_pos = {r.position for r in opened}
+        closures = [{"doc_id": r.doc_id, "position": r.position,
+                     "closed_at": ts,
+                     "status": (STATUS_SUPERSEDED if r.position in opened_pos
+                                else STATUS_DELETED)}
+                    for r in closed]
+        for c in closures:
+            if c["status"] == STATUS_DELETED:
+                live.pop(c["position"], None)
+        for r in opened:
+            live[r.position] = r.chunk_id
+        events.append(HistoryEvent(
+            ts=ts, records=opened, closures=closures,
+            hashes_after=[live[p] for p in sorted(live)]))
+    return events

@@ -52,7 +52,7 @@ from typing import Optional
 import numpy as np
 
 from .hashing import blob_checksum
-from .types import (STATUS_ACTIVE, STATUS_DELETED, STATUS_SUPERSEDED,
+from .types import (STATUS_ACTIVE, STATUS_SUPERSEDED,
                     VALID_TO_OPEN, ChunkRecord)
 
 _LOG_DIR = "_log"
@@ -506,8 +506,13 @@ class ColdTier:
             v += 1
             if e is None:
                 continue
+            # Skip (not stop at) entries past the target instant: entry ts
+            # is NOT monotonic in version order once a shard migration has
+            # imported another document's older history (shard/rebalance),
+            # and an entry's rows/closures all carry ts >= the entry's own
+            # ts, so skipping it never changes validity at up_to_ts.
             if up_to_ts is not None and e["ts"] > up_to_ts:
-                break
+                continue
             fold.max_entry_ts = max(fold.max_entry_ts, e["ts"])
             if not e.get("committed", True):
                 continue
@@ -560,7 +565,6 @@ class ColdTier:
             self.io_counters["segments_pruned"] += 1
             return
         seg = self.load_segment(e["segment"], e.get("checksum"))
-        m = len(seg["position"])
         doc_ids = seg["doc_ids"].tolist()
         if only_doc is not None:
             sel = np.asarray([d == only_doc for d in doc_ids])
@@ -659,7 +663,13 @@ class ColdTier:
                           as_of_prune=prune,
                           use_overlays=not from_scratch)
         if as_of_ts is None:
-            as_of_ts = fold.last_committed_ts or 0
+            # "now" = the NEWEST instant the log has seen, not the last
+            # entry's ts: after a shard migration imports another doc's
+            # older history, version order no longer implies ts order and
+            # the last entry can predate live data (an uncommitted entry
+            # can only push the instant later — its rows are skipped by
+            # the fold either way).
+            as_of_ts = max(fold.last_committed_ts or 0, fold.max_entry_ts)
         cols = fold.columns()
         n = fold.n
         if n == 0:

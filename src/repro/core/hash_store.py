@@ -40,6 +40,15 @@ class HashStore:
     def doc_ids(self) -> list[str]:
         return sorted(self._docs)
 
+    def remove(self, doc_id: str) -> bool:
+        """Drop a document's entry (shard hand-off: the doc now lives on
+        another shard's lake). Returns whether it existed."""
+        existed = self._docs.pop(doc_id, None) is not None
+        self._versions.pop(doc_id, None)
+        if existed and self._path:
+            self.save()
+        return existed
+
     def __contains__(self, doc_id: str) -> bool:
         return doc_id in self._docs
 

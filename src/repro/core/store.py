@@ -18,6 +18,7 @@ fault-injection hook used by the fault-tolerance tests.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import time
 from typing import Optional, Sequence
@@ -32,8 +33,8 @@ from .hash_store import HashStore
 from .hot_tier import HotTier
 from .temporal import (CURRENT, COMPARATIVE, HISTORICAL, TemporalEngine,
                        classify_query)
-from .types import (STATUS_DELETED, STATUS_SUPERSEDED, CDCSummary,
-                    ChunkRecord, SearchResult)
+from .types import (STATUS_DELETED, STATUS_SUPERSEDED, VALID_TO_OPEN,
+                    CDCSummary, ChunkRecord, SearchResult)
 
 
 class FaultInjected(RuntimeError):
@@ -211,33 +212,12 @@ class LiveVectorLake:
                       max_wait_s: float = 0.0) -> "Batcher":
         """A serving-layer batcher (serve/batcher.py) over this store:
         concurrent queries queue and coalesce into batched
-        ``query_batch`` passes. Payloads are query strings or
-        ``(text, at, window)`` tuples; requests are bucketed by temporal
-        intent so one dispatched batch maps to ONE engine group — all
-        concurrent CURRENT queries land in a single hot-tier batch."""
-        from ..serve.batcher import Batcher
-
-        def norm(payload) -> tuple[str, Optional[int], Optional[tuple]]:
-            if isinstance(payload, str):
-                return payload, None, None
-            text, p_at, p_window = payload
-            return text, p_at, p_window
-
-        def bucket(payload):
-            # the resolved intent IS the bucket key (frozen dataclass):
-            # one dispatched batch == exactly one engine group, whether
-            # the intent came from explicit args or the query text.
-            text, p_at, p_window = norm(payload)
-            return classify_query(text, at=p_at, window=p_window)
-
-        def run(payloads: list) -> list:
-            texts = [norm(p)[0] for p in payloads]
-            it = bucket(payloads[0])   # whole batch shares this intent
-            return self.query_batch(texts, k=k, at=it.at,
-                                    window=it.window)
-
-        return Batcher(run_batch=run, max_batch=max_batch,
-                       max_wait_s=max_wait_s, bucket_fn=bucket)
+        ``query_batch`` passes, bucketed by temporal intent so one
+        dispatched batch maps to ONE engine group — all concurrent
+        CURRENT queries land in a single hot-tier batch."""
+        from ..serve.batcher import intent_batcher
+        return intent_batcher(self.query_batch, k=k, max_batch=max_batch,
+                              max_wait_s=max_wait_s)
 
     # ------------------------------------------------------------------
     # fault tolerance
@@ -318,6 +298,107 @@ class LiveVectorLake:
                 self.wal.mark(txn, "COMMIT")
                 actions["rolled_forward"] += 1
         return actions
+
+    # ------------------------------------------------------------------
+    # shard migration primitives (DESIGN.md §10.4)
+    # ------------------------------------------------------------------
+    def export_doc_history(self, doc_id: str) -> tuple[list[ChunkRecord], int]:
+        """Full-history rows of one document (every version, open and
+        closed) plus its CDC doc version — the unit a shard migration
+        copies. Uses the cold tier's DOC-SCOPED fold (zone-map key sets
+        prune every segment/archive not touching the doc, same path as
+        ``history()``), so exporting one doc does not fold the whole
+        lake. Replaying the rows through ``import_history`` on another
+        lake reproduces the exact validity intervals, so temporal
+        queries survive the move."""
+        fold = self.cold._fold(only_doc=doc_id)
+        cols = fold.columns()
+        rows = [ChunkRecord(
+            chunk_id=cols["chunk_ids"][i], doc_id=doc_id,
+            position=int(cols["position"][i]),
+            valid_from=int(cols["valid_from"][i]),
+            valid_to=int(cols["valid_to"][i]),
+            version=int(cols["version"][i]), text=cols["texts"][i],
+            embedding=cols["embeddings"][i])
+            for i in range(fold.n)]
+        return rows, self.hash_store.version(doc_id)
+
+    def import_history(self, doc_id: str, rows: Sequence[ChunkRecord],
+                       doc_version: int,
+                       fail_after_events: Optional[int] = None) -> dict:
+        """Replay one document's full history into this lake (migration
+        receive path). The history is decomposed back into its per-commit
+        CDC deltas (``history_to_events``) and each event runs the normal
+        WAL -> cold -> hot protocol at its ORIGINAL timestamp, so the
+        imported validity intervals are byte-identical to the source's.
+
+        Idempotent at event granularity: events at or before the newest
+        instant this lake has already applied for the doc are skipped, so
+        a re-run after a mid-import crash (or a doc moving back to a
+        shard that served it before) resumes instead of duplicating
+        rows. ``fail_after_events`` crashes after N applied events
+        (tests only)."""
+        from .cdc import history_to_events
+        events = history_to_events(list(rows))
+        have, _ = self.export_doc_history(doc_id)
+        applied_up_to = max(
+            [int(r.valid_from) for r in have] +
+            [int(r.valid_to) for r in have if r.valid_to != VALID_TO_OPEN],
+            default=0)
+        applied = 0
+        for n_applied, ev in enumerate(events):
+            if ev.ts <= applied_up_to:
+                continue
+            if fail_after_events is not None \
+                    and applied >= fail_after_events:
+                raise FaultInjected(
+                    f"crash after importing {applied} events")
+            records = [dataclasses.replace(
+                r, valid_to=VALID_TO_OPEN, version=0) for r in ev.records]
+            expected_version = self.cold.latest_version() + 1
+            txn = self.wal.begin("ingest", {
+                "doc_id": doc_id, "ts": ev.ts,
+                "cold_version": expected_version,
+                "doc_version": min(n_applied + 1, doc_version),
+                "hashes": ev.hashes_after})
+            version = self.cold.commit(records, ev.closures, ev.ts)
+            assert version == expected_version
+            self.wal.mark(txn, "COLD_OK")
+            self._hot_apply(records, ev.closures)
+            self.wal.mark(txn, "HOT_OK")
+            self.hash_store.put(doc_id, ev.hashes_after,
+                                min(n_applied + 1, doc_version))
+            self.wal.mark(txn, "COMMIT")
+            self.temporal.on_commit(version=version, records=records,
+                                    closures=ev.closures)
+            applied += 1
+        # A doc can return to a lake that previously handed it off (hot
+        # rows purged, cold history retained): every event replays as a
+        # no-op, so re-seat its open rows and hash entry explicitly.
+        open_rows = [dataclasses.replace(r, version=0) for r in rows
+                     if r.valid_to == VALID_TO_OPEN]
+        self._hot_apply(open_rows, [])
+        final_hashes = [r.chunk_id for r in
+                        sorted(open_rows, key=lambda r: r.position)]
+        self.hash_store.put(doc_id, final_hashes, doc_version)
+        self.embedder.warm([r.chunk_id for r in rows],
+                           np.stack([r.embedding for r in rows])
+                           if rows else np.zeros((0, self.dim), np.float32))
+        if events:
+            self._last_ts = max(self._last_ts, events[-1].ts)
+        return {"events_total": len(events), "events_applied": applied,
+                "events_skipped": len(events) - applied}
+
+    def purge_doc(self, doc_id: str) -> int:
+        """Drop a document from this lake's SERVING state (migration
+        hand-off: another shard now owns it). Hot rows and the hash-store
+        entry go away; the cold history stays on disk — it is immutable
+        audit state, and the fabric's ownership filter keeps non-owners'
+        copies out of every query result. Returns hot rows removed."""
+        keys = [k for k in self.hot._by_key if k[0] == doc_id]
+        removed = self.hot.delete(keys)
+        self.hash_store.remove(doc_id)
+        return removed
 
     def compact_cold(self, min_run: int = 2) -> dict:
         """Cold-tier maintenance: rewrite fully-closed commit runs into

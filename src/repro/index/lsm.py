@@ -60,15 +60,21 @@ def merge_topk_candidates(scores: np.ndarray, gids: np.ndarray,
     per-source authority row-array over the global row-id space: bit g is
     set iff the index's ``_by_key`` maps row g's key to exactly row g —
     so the per-candidate dict lookup of the old tuple-sort merge becomes
-    ONE vectorized gather. Returns (top_s, top_g), both (Q, k); losers
-    and empty slots are (-inf, -1).
+    ONE vectorized gather. A 2-D ``authority`` is taken as an explicit
+    per-candidate (Q, W) mask instead (the shard planner's ownership +
+    replica-dedup bits vary per query, not per global row). Returns
+    (top_s, top_g), both (Q, k); losers and empty slots are (-inf, -1).
 
     Ordering matches the old stable tuple sort exactly: descending score,
     ties broken by candidate column (i.e. source order, then the
     source's own rank order).
     """
     valid = np.isfinite(scores) & (gids >= 0)
-    valid &= authority[np.clip(gids, 0, None)]
+    authority = np.asarray(authority, bool)
+    if authority.ndim == 2:
+        valid &= authority
+    else:
+        valid &= authority[np.clip(gids, 0, None)]
     s = np.where(valid, scores, -np.inf).astype(np.float32)
     order = np.argsort(-s, axis=1, kind="stable")[:, :k]
     top_s = np.take_along_axis(s, order, axis=1)

@@ -28,7 +28,7 @@ import traceback
 
 def run_cell(arch: str, shape: str, multi_pod: bool = False,
              collectives: bool = True) -> dict:
-    import jax  # noqa: deferred so XLA_FLAGS applies
+    import jax  # noqa: F401  (deferred so XLA_FLAGS applies)
     from .hlo_analysis import collective_stats, cost_summary
     from .mesh import make_production_mesh
     from .steps import build_cell
@@ -99,7 +99,7 @@ def main() -> None:
                       f"flops/dev={rec['flops']:.3e} "
                       f"coll={rec['collectives']['total_bytes']/1e6:.1f}MB",
                       flush=True)
-            except Exception as e:  # noqa: record failures, keep going
+            except Exception as e:  # record failures, keep going
                 rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
                        "status": "fail", "error": f"{type(e).__name__}: {e}",
                        "traceback": traceback.format_exc()[-2000:]}

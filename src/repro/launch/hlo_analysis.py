@@ -15,7 +15,6 @@ Caveats handled:
 from __future__ import annotations
 
 import re
-from typing import Optional
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,

@@ -7,7 +7,6 @@ batching (Layer 5 interface; end-to-end driver).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 
 def main() -> None:

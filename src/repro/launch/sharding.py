@@ -25,7 +25,6 @@ from __future__ import annotations
 from typing import Any, Optional
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .mesh import dp_axes
@@ -124,7 +123,6 @@ def zero1_opt_specs(param_specs, opt_shape, mesh) -> Any:
     axes (ZeRO-1). Adafactor r/c (reduced shapes) get a shape-driven
     variant of the same rule."""
     dp = dp_axes(mesh)
-    dp_n = _size(mesh, dp)
 
     def per_state(path, leaf):
         p_str = jax.tree_util.keystr(path)
@@ -232,6 +230,31 @@ def gnn_batch_specs(input_specs: dict, mesh) -> dict:
             out[name] = P(*([None] * len(shape)))
     return {k: sanitize(v, tuple(input_specs[k].shape), mesh)
             for k, v in out.items()}
+
+
+# ---------------------------------------------------------------------------
+# Shard fabric fan-out (DESIGN.md §10.5)
+# ---------------------------------------------------------------------------
+def fabric_fanout_specs(mesh, n_shards: int
+                        ) -> tuple[P, P, P, tuple[P, P]]:
+    """PartitionSpecs for the shard fabric's device fan-out: a stacked
+    per-shard corpus (S, N_pad, d) and alive mask (S, N_pad) split their
+    shard dim over the data-parallel axes (each device scores its local
+    shards with ONE fused top-k dispatch); queries are replicated; the
+    per-shard (S, Q, k) candidate blocks come back shard-partitioned and
+    the host merge is tiny — the same merge a shard is "just another
+    candidate source" for. Divisibility-sanitized: a DP axis group that
+    does not divide S is dropped (replicated) like every other rule
+    here."""
+    dp = dp_axes(mesh)
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    shard_dim = (dp_spec if dp_spec is not None
+                 and n_shards % _size(mesh, dp_spec) == 0 else None)
+    q_spec = P(None, None)
+    emb_spec = P(shard_dim, None, None)
+    mask_spec = P(shard_dim, None)
+    out_specs = (P(shard_dim, None, None), P(shard_dim, None, None))
+    return q_spec, emb_spec, mask_spec, out_specs
 
 
 # ---------------------------------------------------------------------------

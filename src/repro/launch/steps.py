@@ -26,7 +26,6 @@ from ..models import transformer as tfm
 from ..train.optimizer import Optimizer, adafactor, adamw
 from . import sharding as shd
 from .compat import shard_map
-from .mesh import dp_axes
 
 ADAFACTOR_THRESHOLD = 100e9        # params above this use factored state
 

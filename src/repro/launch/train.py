@@ -27,13 +27,9 @@ def main() -> None:
 
     import jax
     import jax.numpy as jnp
-    import numpy as np
 
-    from ..configs import get_arch
     from ..launch.steps import build_cell, make_smoke_args
-    from ..train import grad_compress
     from ..train.checkpoint import CheckpointManager
-    from ..train.optimizer import adafactor, adamw
 
     bundle = build_cell(args.arch, args.shape, reduced=args.reduced)
     assert bundle.kind == "train", "use a train shape"
@@ -49,8 +45,6 @@ def main() -> None:
         params, opt_state = tree["params"], tree["opt_state"]
         print(f"resumed from step {start}")
 
-    rng = np.random.default_rng(0)
-    spec = get_arch(args.arch)
     losses = []
     for i in range(start, start + args.steps):
         # fresh synthetic batch each step (deterministic stream)

@@ -11,7 +11,7 @@ search path and the recsys retrieval path are one substrate (DESIGN.md
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -162,7 +162,6 @@ def dlrm_init(key, cfg: DLRMConfig) -> dict:
 def dlrm_forward(params, cfg: DLRMConfig, dense, sparse_ids, weights=None):
     """dense: (B, 13); sparse_ids: (B, 26, L) multi-hot (L=1 one-hot)."""
     from ..kernels.embedding_bag.ops import embedding_bag
-    b = dense.shape[0]
     x_bot = mlp_apply(params["bot"], dense.astype(cfg.dtype),
                       len(cfg.bot_mlp) - 1, final_act=True)      # (B, 128)
     embs = []

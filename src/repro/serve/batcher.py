@@ -6,6 +6,11 @@ state stays uniform per batch. Straggler mitigation = hedged backup
 requests: if a batch's execution exceeds `hedge_factor x` the EWMA
 latency, the work is re-issued (in-process simulation of the multi-replica
 hedge; the hook is where a real deployment would target a second replica).
+
+Failure isolation: a batch whose execution raises (e.g. a shard failing
+mid-gather in the fabric planner) completes ONLY its own requests with
+``error`` set — the rest of the queue, including other intent buckets,
+stays drainable and later submits still work.
 """
 from __future__ import annotations
 
@@ -24,6 +29,7 @@ class Request:
     result: Any = None
     done: bool = False
     hedged: bool = False
+    error: Optional[Exception] = None   # set iff the batch execution failed
 
 
 class Batcher:
@@ -40,7 +46,7 @@ class Batcher:
         self._next_id = 0
         self._lat_ewma: Optional[float] = None
         self.stats = {"batches": 0, "requests": 0, "hedges": 0,
-                      "mean_batch_size": 0.0}
+                      "failed_batches": 0, "mean_batch_size": 0.0}
 
     def submit(self, payload: Any) -> Request:
         req = Request(self._next_id, payload,
@@ -64,15 +70,38 @@ class Batcher:
 
     def _execute(self, batch: list[Request]) -> None:
         t0 = time.perf_counter()
-        results = self.run_batch([r.payload for r in batch])
+        try:
+            results = self.run_batch([r.payload for r in batch])
+            if len(results) != len(batch):
+                raise RuntimeError(
+                    f"run_batch returned {len(results)} results for "
+                    f"{len(batch)} requests")
+        except Exception as e:   # noqa: BLE001 — batch fault isolation
+            # Failure domain = this batch only (e.g. a shard raising
+            # mid-gather): its requests complete with error set; other
+            # buckets still queued are untouched and keep draining.
+            for r in batch:
+                r.error = e
+                r.result = None
+                r.done = True
+            self.stats["batches"] += 1
+            self.stats["failed_batches"] += 1
+            self.stats["requests"] += len(batch)
+            self.stats["mean_batch_size"] = (self.stats["requests"]
+                                             / self.stats["batches"])
+            return
         elapsed = time.perf_counter() - t0
         # hedged backup request on straggling execution
         if (self._lat_ewma is not None
                 and elapsed > self.hedge_factor * self._lat_ewma):
             self.stats["hedges"] += 1
             t1 = time.perf_counter()
-            retry = self.run_batch([r.payload for r in batch])
-            if time.perf_counter() - t1 < elapsed:
+            try:
+                retry = self.run_batch([r.payload for r in batch])
+            except Exception:    # noqa: BLE001 — hedge is best-effort
+                retry = None     # keep the straggler's (good) results
+            if retry is not None and len(retry) == len(batch) \
+                    and time.perf_counter() - t1 < elapsed:
                 results = retry
             for r in batch:
                 r.hedged = True
@@ -91,3 +120,35 @@ class Batcher:
             batch = self._take_batch()
             if batch:
                 self._execute(batch)
+
+
+def intent_batcher(query_batch, k: int = 5, max_batch: int = 32,
+                   max_wait_s: float = 0.0) -> Batcher:
+    """A Batcher over any retrieval callable with the engine signature
+    ``query_batch(texts, k=..., at=..., window=...)`` — the one factory
+    behind both ``LiveVectorLake.query_batcher`` and
+    ``ShardFabric.query_batcher``.
+
+    Payloads are query strings or ``(text, at, window)`` tuples;
+    requests bucket by their RESOLVED temporal intent (frozen
+    dataclass), so one dispatched batch maps to exactly one engine
+    group whether the intent came from explicit args or the query
+    text."""
+    from ..core.temporal import classify_query
+
+    def norm(payload):
+        if isinstance(payload, str):
+            return payload, None, None
+        return payload
+
+    def bucket(payload):
+        text, p_at, p_window = norm(payload)
+        return classify_query(text, at=p_at, window=p_window)
+
+    def run(payloads: list) -> list:
+        texts = [norm(p)[0] for p in payloads]
+        it = bucket(payloads[0])      # whole batch shares this intent
+        return query_batch(texts, k=k, at=it.at, window=it.window)
+
+    return Batcher(run_batch=run, max_batch=max_batch,
+                   max_wait_s=max_wait_s, bucket_fn=bucket)

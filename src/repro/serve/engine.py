@@ -16,7 +16,6 @@ from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..core.store import LiveVectorLake
 from ..data.tokenizer import HashTokenizer

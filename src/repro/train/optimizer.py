@@ -15,8 +15,7 @@ Both expose the same (init, update) pair over arbitrary pytrees.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -1,5 +1,4 @@
 """Layer 1 unit tests: semantic chunking + content-addressable hashing."""
-import pytest
 
 from repro.core.chunking import chunk_document, reassemble, split_blocks
 from repro.core.hashing import chunk_hash, normalize

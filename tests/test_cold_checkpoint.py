@@ -140,7 +140,6 @@ class TestArchives:
         ct = ColdTier(str(tmp_path), dim=8, checkpoint_interval=0)
         end = _build(ct, n_versions=12, n_docs=2)
         ct.compact()
-        a = ct.archives()[0]
         ct.io_counters["archive_loads"] = 0
         ct.io_counters["archives_pruned"] = 0
         # far past every closure in the archive: zone map proves no row
@@ -168,7 +167,7 @@ class TestArchives:
         open (valid_to == OPEN), even when the archive baked the final
         closure."""
         ct = ColdTier(str(tmp_path), dim=8, checkpoint_interval=0)
-        end = _build(ct, n_versions=10, n_docs=2)
+        _build(ct, n_versions=10, n_docs=2)
         ct.compact()
         a = ct.archives()[0]
         # pick an instant before the archive's last closure lands

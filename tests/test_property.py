@@ -13,7 +13,6 @@ from hypothesis import given, settings, strategies as st
 from repro.core.cdc import detect_changes, positional_diff
 from repro.core.chunking import chunk_document, split_blocks
 from repro.core.hashing import chunk_hash, normalize
-from repro.core.types import VALID_TO_OPEN
 from repro.kernels.common import le_i64, lt_i64, split_i64
 
 # text strategy: paragraphs of printable words

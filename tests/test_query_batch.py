@@ -1,13 +1,11 @@
 """Batched query engine tests (DESIGN.md §8): batch/single parity across
 temporal intents and index states, the vectorized merge vs the tuple-sort
 reference, authority-array invariants, and serving-layer coalescing."""
-import tempfile
-
 import numpy as np
 import pytest
 
 from repro.core.store import LiveVectorLake
-from repro.core.types import ChunkRecord, VALID_TO_OPEN
+from repro.core.types import ChunkRecord
 from repro.index.lsm import SegmentedIndex, merge_topk_candidates
 
 T1, T2, T3 = 1_000_000, 2_000_000, 3_000_000

@@ -1,0 +1,116 @@
+"""Batcher failure-path tests (serve/batcher.py): a batch whose
+execution raises — e.g. a shard failing mid-gather in the fabric
+planner — must complete ONLY its own requests with ``error`` set and
+leave the coalescing queue drainable (no deadlock, no stranded
+requests, later submits unaffected)."""
+import tempfile
+
+import numpy as np
+
+from repro.serve.batcher import Batcher
+from repro.shard import ShardFabric, ShardGatherError
+
+
+class TestBatcherFailureIsolation:
+    def test_failing_batch_fails_only_its_bucket(self):
+        calls = []
+
+        def run(payloads):
+            calls.append(list(payloads))
+            if any("boom" in p for p in payloads):
+                raise RuntimeError("shard down")
+            return [p.upper() for p in payloads]
+
+        b = Batcher(run, max_batch=4,
+                    bucket_fn=lambda p: "bad" if "boom" in p else "good")
+        good = [b.submit(f"ok{i}") for i in range(3)]
+        bad = [b.submit(f"boom{i}") for i in range(2)]
+        more_good = [b.submit("late")]
+        b.drain()
+        assert not b._queue                      # drainable: queue empty
+        for r in good + more_good:
+            assert r.done and r.error is None
+        assert more_good[0].result == "LATE"
+        for r in bad:
+            assert r.done and r.result is None
+            assert isinstance(r.error, RuntimeError)
+        assert b.stats["failed_batches"] == 1
+        assert b.stats["batches"] == len(calls)
+
+    def test_queue_survives_repeated_failures_and_recovers(self):
+        state = {"fail": True}
+
+        def run(payloads):
+            if state["fail"]:
+                raise ValueError("still down")
+            return list(payloads)
+
+        b = Batcher(run, max_batch=2)
+        r1 = b.submit("a")
+        b.drain()
+        assert isinstance(r1.error, ValueError)
+        state["fail"] = False                    # shard comes back
+        r2 = b.submit("b")
+        b.drain()
+        assert r2.done and r2.error is None and r2.result == "b"
+
+    def test_length_mismatch_is_an_error_not_a_hang(self):
+        b = Batcher(lambda ps: ps[:-1], max_batch=4)
+        reqs = [b.submit(i) for i in range(3)]
+        b.drain()
+        assert not b._queue
+        for r in reqs:
+            assert r.done and isinstance(r.error, RuntimeError)
+
+    def test_shard_raising_mid_gather_through_fabric_batcher(self):
+        """End to end: one shard dies; with R=1 the CURRENT bucket's
+        batch fails with ShardGatherError, the temporal bucket that
+        doesn't trip the fault still answers, and the queue drains."""
+        with tempfile.TemporaryDirectory() as root:
+            fab = ShardFabric(root, n_shards=3, dim=32, hot_capacity=512)
+            ts = 0
+            for i in range(6):
+                ts += 1_000_000
+                fab.ingest(f"doc{i}", f"alpha bravo {chr(97 + i)}\n\n"
+                           f"carbon delta {chr(97 + i)}", ts=ts)
+            dead = fab.ring.shards[0]
+            orig = fab.lake(dead).query_batch
+
+            def flaky(texts, **kw):
+                if kw.get("at") is None:        # fail only CURRENT gathers
+                    raise RuntimeError("shard down")
+                return orig(texts, **kw)
+            fab.lake(dead).query_batch = flaky
+
+            b = fab.query_batcher(k=3)
+            current = [b.submit("alpha bravo"), b.submit("carbon delta")]
+            temporal = [b.submit(("alpha bravo", ts // 2, None))]
+            b.drain()
+            assert not b._queue
+            for r in current:
+                assert r.done and isinstance(r.error, ShardGatherError)
+            assert temporal[0].done and temporal[0].error is None
+            assert len(temporal[0].result) > 0
+            for res in temporal[0].result:
+                assert res.valid_from <= ts // 2 < res.valid_to
+            # the fabric keeps serving new batches after the failure
+            ok = [b.submit(("carbon delta", ts // 2, None))]
+            b.drain()
+            assert ok[0].error is None and len(ok[0].result) > 0
+
+    def test_hedge_retry_failure_keeps_original_results(self):
+        state = {"calls": 0}
+
+        def run(payloads):
+            state["calls"] += 1
+            if state["calls"] == 3:              # only the hedge retry dies
+                raise RuntimeError("hedge died")
+            return list(payloads)
+
+        b = Batcher(run, max_batch=2, hedge_factor=0.0)   # always hedge
+        b.submit("x")
+        b.drain()                                # establish EWMA
+        r = b.submit("y")
+        b.drain()
+        assert r.done and r.error is None and r.result == "y"
+        assert np.isfinite(b._lat_ewma)

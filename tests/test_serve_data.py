@@ -1,7 +1,6 @@
 """Serving substrate + data pipeline tests."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.data.corpus import generate_corpus
 from repro.data.pipeline import (Prefetcher, synthetic_lm_batches,

@@ -1,0 +1,471 @@
+"""Shard fabric tests (DESIGN.md §10): ring/manifest units, the
+oracle-equivalence property over shard counts S in {1, 2, 4, 8},
+replication + shard-failure tolerance, the device fan-out hook, and
+crash-injected online rebalancing (split / merge / replica migration)
+proving a killed migration never loses or double-serves a doc.
+
+Equivalence definition (the planner's guarantee, stated executably by
+``repro.shard.results_equivalent``): sharded results match the
+single-lake oracle record for record and rank for rank wherever score
+gaps exceed float noise; scores agree within (1e-5 rel, 1e-7 abs) —
+BLAS/XLA round differently for different matrix shapes, so cross-layout
+score BITS can differ by a few ulp; iso-score bands are unordered
+(their order is layout-dependent on both sides).
+"""
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core.store import FaultInjected, LiveVectorLake
+from repro.shard import (CorruptFabricManifest, FabricManifest, HashRing,
+                         MigrationInterrupted, Rebalancer, ShardFabric,
+                         ShardGatherError, device_fanout_topk,
+                         results_equivalent)
+
+DIM = 64
+CAP = 8192      # exact-scan hot tier on every lake: both sides exhaustive
+
+
+# ---------------------------------------------------------------------------
+# corpus + equivalence helpers
+# ---------------------------------------------------------------------------
+VOCAB = ["alpha", "bravo", "carbon", "delta", "ember", "fjord", "glacier",
+         "harbor", "isotope", "jetty", "kernel", "lagoon", "meadow",
+         "nebula", "orchid", "plasma", "quartz", "rivet", "summit",
+         "timber", "umbra", "vertex", "willow", "xylem", "yonder", "zephyr"]
+
+
+def make_stream(rng, n_docs=12, n_versions=3, chunks=3, words=6):
+    """Deterministic ingest stream [(doc_id, text, ts)] with strictly
+    increasing ts, updates re-rolling a random chunk each version."""
+    stream = []
+    ts = 0
+    texts = {}
+    for v in range(n_versions):
+        for i in range(n_docs):
+            doc = f"doc{i}"
+            if doc not in texts:
+                texts[doc] = [" ".join(rng.choice(VOCAB, words))
+                              for _ in range(chunks)]
+            else:
+                texts[doc][int(rng.integers(chunks))] = \
+                    " ".join(rng.choice(VOCAB, words))
+            ts += 1_000_000
+            stream.append((doc, "\n\n".join(texts[doc]), ts))
+    return stream
+
+
+def drive(target, stream):
+    for doc, text, ts in stream:
+        target.ingest(doc, text, ts=ts)
+
+
+def make_queries(rng, n=8, words=4):
+    return [" ".join(rng.choice(VOCAB, words)) for _ in range(n)]
+
+
+def assert_equivalent(oracle_res, fab_res, oracle_ext):
+    assert results_equivalent(oracle_res, fab_res, oracle_ext), (
+        [(r.doc_id, r.position, r.valid_from, r.score)
+         for r in oracle_res],
+        [(r.doc_id, r.position, r.valid_from, r.score)
+         for r in fab_res])
+
+
+def check_parity(oracle, fab, queries, k=5, **kw):
+    o = oracle.query_batch(queries, k=k, **kw)
+    oe = oracle.query_batch(queries, k=4 * k, **kw)
+    f = fab.query_batch(queries, k=k, **kw)
+    for qi in range(len(queries)):
+        assert_equivalent(o[qi], f[qi], oe[qi])
+
+
+# ---------------------------------------------------------------------------
+# ring
+# ---------------------------------------------------------------------------
+class TestHashRing:
+    def test_determinism_and_distinct_owners(self):
+        ring = HashRing(["s0", "s1", "s2", "s3"], vnodes=32, replicas=3)
+        for i in range(50):
+            o1 = ring.owners(f"doc{i}")
+            o2 = HashRing(["s3", "s1", "s0", "s2"], vnodes=32,
+                          replicas=3).owners(f"doc{i}")
+            assert o1 == o2                       # order-independent build
+            assert len(set(o1)) == 3
+
+    def test_replicas_clamped_and_validated(self):
+        assert HashRing(["a", "b"], replicas=5).replicas == 2
+        with pytest.raises(ValueError):
+            HashRing([], replicas=1)
+        with pytest.raises(ValueError):
+            HashRing(["a", "a"])
+        with pytest.raises(ValueError):
+            HashRing(["a"], replicas=0)
+
+    def test_minimal_movement_on_add(self):
+        ring = HashRing([f"s{i}" for i in range(4)], vnodes=64)
+        docs = [f"doc{i}" for i in range(400)]
+        diff = ring.diff_owners(ring.with_shard("s4"), docs)
+        # every changed doc gained the new shard, and only ~1/S move
+        for d, (old, new) in diff.items():
+            assert "s4" in new
+        assert 0 < len(diff) < len(docs) // 2
+
+    def test_remove_reverses_add(self):
+        ring = HashRing(["s0", "s1", "s2"], vnodes=16, replicas=2)
+        assert ring.with_shard("s3").without_shard("s3") == ring
+
+    def test_roundtrip(self):
+        ring = HashRing(["a", "b", "c"], vnodes=8, replicas=2)
+        assert HashRing.from_dict(ring.to_dict()) == ring
+
+
+# ---------------------------------------------------------------------------
+# fabric manifest
+# ---------------------------------------------------------------------------
+class TestFabricManifest:
+    def test_epochs_monotonic_and_atomic(self):
+        with tempfile.TemporaryDirectory() as root:
+            m = FabricManifest(root)
+            assert m.load() is None
+            assert m.commit({"ring": {"shards": ["a"]}}) == 1
+            assert m.commit({"ring": {"shards": ["a", "b"]}}) == 2
+            state = m.load()
+            assert state["epoch"] == 2
+            assert state["ring"]["shards"] == ["a", "b"]
+
+    def test_checksum_detects_corruption(self):
+        import os
+        with tempfile.TemporaryDirectory() as root:
+            m = FabricManifest(root)
+            m.commit({"ring": {"shards": ["a"]}})
+            path = os.path.join(root, "FABRIC.json")
+            data = open(path).read()
+            assert '"a"' in data
+            open(path, "w").write(data.replace('"a"', '"b"'))
+            assert m.load() is None               # checksum mismatch
+            with pytest.raises(CorruptFabricManifest):
+                ShardFabric(root, dim=DIM)
+
+
+# ---------------------------------------------------------------------------
+# oracle equivalence (the property of acceptance criterion 3)
+# ---------------------------------------------------------------------------
+class TestOracleEquivalence:
+    @pytest.mark.parametrize("n_shards", [1, 2, 4, 8])
+    def test_sharded_matches_single_lake(self, n_shards):
+        rng = np.random.default_rng(100 + n_shards)
+        stream = make_stream(rng)
+        queries = make_queries(rng)
+        last_ts = stream[-1][2]
+        with tempfile.TemporaryDirectory() as r1, \
+                tempfile.TemporaryDirectory() as r2:
+            oracle = LiveVectorLake(r1, dim=DIM, hot_capacity=CAP)
+            fab = ShardFabric(r2, n_shards=n_shards, dim=DIM,
+                              hot_capacity=CAP)
+            drive(oracle, stream)
+            drive(fab, stream)
+            check_parity(oracle, fab, queries)                  # current
+            for ts in (stream[3][2], last_ts // 2, last_ts):    # temporal
+                check_parity(oracle, fab, queries, at=ts)
+            check_parity(oracle, fab, queries,                  # windows
+                         window=(stream[2][2], last_ts // 2))
+            check_parity(oracle, fab, queries, window=(1, last_ts + 1))
+
+    def test_replicated_fabric_matches_oracle(self):
+        rng = np.random.default_rng(7)
+        stream = make_stream(rng, n_docs=10)
+        queries = make_queries(rng)
+        with tempfile.TemporaryDirectory() as r1, \
+                tempfile.TemporaryDirectory() as r2:
+            oracle = LiveVectorLake(r1, dim=DIM, hot_capacity=CAP)
+            fab = ShardFabric(r2, n_shards=4, replicas=2, dim=DIM,
+                              hot_capacity=CAP)
+            drive(oracle, stream)
+            drive(fab, stream)
+            check_parity(oracle, fab, queries)
+            check_parity(oracle, fab, queries, at=stream[-1][2] // 2)
+            # every doc is on exactly R owner lakes
+            for doc in fab.all_docs():
+                holders = [s for s in fab.ring.shards
+                           if fab.lake(s).has_doc(doc)]
+                assert sorted(holders) == sorted(fab.ring.owners(doc))
+
+    def test_reopened_fabric_clock_matches_oracle(self):
+        """A fresh fabric process starts with _last_ts=0; its monotonic
+        clock must sync from EVERY shard before the first resolution,
+        or a stale explicit ts would resolve below instants other
+        shards already stored (diverging from the oracle)."""
+        rng = np.random.default_rng(77)
+        stream = make_stream(rng, n_docs=12)
+        with tempfile.TemporaryDirectory() as r1, \
+                tempfile.TemporaryDirectory() as r2:
+            oracle = LiveVectorLake(r1, dim=DIM, hot_capacity=CAP)
+            fab = ShardFabric(r2, n_shards=4, dim=DIM, hot_capacity=CAP)
+            drive(oracle, stream)
+            drive(fab, stream)
+            del fab
+            fab2 = ShardFabric(r2)          # bare reopen, cold clock
+            s_o = oracle.ingest("doc0", "quartz rivet summit",
+                                ts=2_000_000)
+            s_f = fab2.ingest("doc0", "quartz rivet summit",
+                              ts=2_000_000)
+            assert s_o.ts == s_f.ts
+            check_parity(oracle, fab2, make_queries(rng))
+            check_parity(oracle, fab2, make_queries(rng), at=s_f.ts - 1)
+
+    def test_mixed_intent_batch_and_batcher(self):
+        rng = np.random.default_rng(11)
+        stream = make_stream(rng, n_docs=8)
+        mid = stream[-1][2] // 2
+        with tempfile.TemporaryDirectory() as r1, \
+                tempfile.TemporaryDirectory() as r2:
+            oracle = LiveVectorLake(r1, dim=DIM, hot_capacity=CAP)
+            fab = ShardFabric(r2, n_shards=3, dim=DIM, hot_capacity=CAP)
+            drive(oracle, stream)
+            drive(fab, stream)
+            payloads = [("alpha bravo", None, None),
+                        ("carbon delta", mid, None),
+                        ("ember fjord", None, (1, mid)),
+                        ("glacier harbor", None, None),
+                        ("isotope jetty", mid, None)]
+            b = fab.query_batcher(k=4)
+            reqs = [b.submit(p) for p in payloads]
+            b.drain()
+            for req, (text, at, window) in zip(reqs, payloads):
+                assert req.done and req.error is None
+                o = oracle.query_batch([text], k=4, at=at, window=window)[0]
+                oe = oracle.query_batch([text], k=16, at=at,
+                                        window=window)[0]
+                assert_equivalent(o, req.result, oe)
+
+
+# ---------------------------------------------------------------------------
+# failure tolerance
+# ---------------------------------------------------------------------------
+class TestShardFailure:
+    def _fabric(self, root, rng, replicas):
+        stream = make_stream(rng, n_docs=10)
+        fab = ShardFabric(root, n_shards=4, replicas=replicas, dim=DIM,
+                          hot_capacity=CAP)
+        drive(fab, stream)
+        return fab, stream
+
+    def test_r1_shard_failure_fails_the_batch(self):
+        rng = np.random.default_rng(21)
+        with tempfile.TemporaryDirectory() as root:
+            fab, _ = self._fabric(root, rng, replicas=1)
+            dead = fab.ring.shards[1]
+
+            def boom(*a, **k):
+                raise RuntimeError("shard down")
+            fab.lake(dead).query_batch = boom
+            with pytest.raises(ShardGatherError):
+                fab.query_batch(["alpha bravo"], k=3)
+
+    def test_r2_survives_one_dead_shard_identically(self):
+        rng = np.random.default_rng(22)
+        stream = make_stream(rng, n_docs=10)
+        queries = make_queries(rng)
+        with tempfile.TemporaryDirectory() as r1, \
+                tempfile.TemporaryDirectory() as r2:
+            oracle = LiveVectorLake(r1, dim=DIM, hot_capacity=CAP)
+            drive(oracle, stream)
+            fab = ShardFabric(r2, n_shards=4, replicas=2, dim=DIM,
+                              hot_capacity=CAP)
+            drive(fab, stream)
+            dead = fab.ring.shards[2]
+
+            def boom(*a, **k):
+                raise RuntimeError("shard down")
+            fab.lake(dead).query_batch = boom
+            check_parity(oracle, fab, queries)
+            check_parity(oracle, fab, queries, at=stream[-1][2] // 2)
+            assert fab.planner.stats["shard_failures"] > 0
+
+
+# ---------------------------------------------------------------------------
+# online rebalancing + crash injection
+# ---------------------------------------------------------------------------
+def exactly_once_docs(fab, stream):
+    """Each doc's position-0 current chunk must appear exactly once in a
+    query that retrieves it."""
+    current = {}
+    for doc, text, _ in stream:
+        current[doc] = text.split("\n\n")[0]
+    for doc, chunk in current.items():
+        res = fab.query(chunk, k=10)
+        hits = [r for r in res if r.doc_id == doc and r.position == 0]
+        assert len(hits) == 1, (doc, len(hits))
+
+
+class TestRebalance:
+    def test_split_merge_replicas_keep_oracle_parity(self):
+        rng = np.random.default_rng(31)
+        stream = make_stream(rng, n_docs=12)
+        queries = make_queries(rng)
+        mid = stream[-1][2] // 2
+        with tempfile.TemporaryDirectory() as r1, \
+                tempfile.TemporaryDirectory() as r2:
+            oracle = LiveVectorLake(r1, dim=DIM, hot_capacity=CAP)
+            drive(oracle, stream)
+            fab = ShardFabric(r2, n_shards=3, dim=DIM, hot_capacity=CAP)
+            drive(fab, stream)
+            rb = Rebalancer(fab)
+            rep = rb.split("s03")
+            assert rep["docs_copied"] > 0
+            check_parity(oracle, fab, queries)
+            check_parity(oracle, fab, queries, at=mid)     # history moved
+            rb.merge("s01")
+            assert "s01" not in fab.ring.shards
+            check_parity(oracle, fab, queries)
+            check_parity(oracle, fab, queries, at=mid)
+            Rebalancer(fab).set_replicas(2)
+            check_parity(oracle, fab, queries)
+            check_parity(oracle, fab, queries, at=mid)
+
+    def test_ingest_during_copy_phase_lands_post_flip(self):
+        """Docs created/updated while a migration is mid-copy must be
+        served after the flip (union routing + dual-write)."""
+        rng = np.random.default_rng(32)
+        stream = make_stream(rng, n_docs=10, n_versions=2)
+        with tempfile.TemporaryDirectory() as r1, \
+                tempfile.TemporaryDirectory() as r2:
+            oracle = LiveVectorLake(r1, dim=DIM, hot_capacity=CAP)
+            fab = ShardFabric(r2, n_shards=3, dim=DIM, hot_capacity=CAP)
+            drive(oracle, stream)
+            drive(fab, stream)
+            ts = stream[-1][2]
+            with pytest.raises(MigrationInterrupted):
+                Rebalancer(fab, fail_at="before_flip").split("s03")
+            mid_stream = [("docnew", "quartz rivet summit\n\ntimber umbra",
+                           ts + 1_000_000)]
+            moving = sorted(fab._transition["docs"])
+            for doc in moving[:1]:       # update an already-copied doc
+                mid_stream.append((doc, "vertex willow xylem\n\nyonder "
+                                   "zephyr alpha", ts + 2_000_000))
+            drive(oracle, mid_stream)
+            drive(fab, mid_stream)
+            Rebalancer(fab).resume()
+            assert fab.manifest.load()["transition"] is None
+            queries = make_queries(rng) + ["quartz rivet summit",
+                                           "vertex willow xylem"]
+            check_parity(oracle, fab, queries)
+            check_parity(oracle, fab, queries, at=ts + 1_500_000)
+
+    @pytest.mark.parametrize("fault", ["copy:0", "copy:1", "before_flip",
+                                       "after_flip", "before_final"])
+    def test_killed_split_recovers_exactly_once(self, fault):
+        rng = np.random.default_rng(33)
+        stream = make_stream(rng, n_docs=10)
+        queries = make_queries(rng)
+        with tempfile.TemporaryDirectory() as r1, \
+                tempfile.TemporaryDirectory() as r2:
+            oracle = LiveVectorLake(r1, dim=DIM, hot_capacity=CAP)
+            drive(oracle, stream)
+            fab = ShardFabric(r2, n_shards=3, dim=DIM, hot_capacity=CAP)
+            drive(fab, stream)
+            with pytest.raises(MigrationInterrupted):
+                Rebalancer(fab, fail_at=fault).split("s03")
+            # crashed mid-migration: a FRESH fabric (new process) resumes
+            # from the manifest transition record on open
+            fab2 = ShardFabric(r2, dim=DIM, hot_capacity=CAP)
+            assert fab2.manifest.load()["transition"] is None
+            assert "s03" in fab2.ring.shards
+            exactly_once_docs(fab2, stream)
+            check_parity(oracle, fab2, queries)
+            check_parity(oracle, fab2, queries, at=stream[-1][2] // 2)
+
+    def test_killed_import_mid_doc_recovers(self):
+        """Crash INSIDE a doc's history import (partial cold commits on
+        the destination): the event-idempotent import resumes without
+        duplicating or losing rows."""
+        rng = np.random.default_rng(34)
+        stream = make_stream(rng, n_docs=10)
+        queries = make_queries(rng)
+        with tempfile.TemporaryDirectory() as r1, \
+                tempfile.TemporaryDirectory() as r2:
+            oracle = LiveVectorLake(r1, dim=DIM, hot_capacity=CAP)
+            drive(oracle, stream)
+            fab = ShardFabric(r2, n_shards=3, dim=DIM, hot_capacity=CAP)
+            drive(fab, stream)
+            with pytest.raises(FaultInjected):
+                Rebalancer(fab, fail_import_after=1).split("s03")
+            # bare reopen: dim/hot_capacity adopted from the manifest
+            fab2 = ShardFabric(r2)
+            assert fab2.manifest.load()["transition"] is None
+            exactly_once_docs(fab2, stream)
+            check_parity(oracle, fab2, queries)
+            check_parity(oracle, fab2, queries, at=stream[-1][2] // 2)
+
+    def test_killed_merge_recovers(self):
+        rng = np.random.default_rng(35)
+        stream = make_stream(rng, n_docs=10)
+        queries = make_queries(rng)
+        with tempfile.TemporaryDirectory() as r1, \
+                tempfile.TemporaryDirectory() as r2:
+            oracle = LiveVectorLake(r1, dim=DIM, hot_capacity=CAP)
+            drive(oracle, stream)
+            fab = ShardFabric(r2, n_shards=4, dim=DIM, hot_capacity=CAP)
+            drive(fab, stream)
+            victim = fab.ring.shards[0]
+            with pytest.raises(MigrationInterrupted):
+                Rebalancer(fab, fail_at="after_flip").merge(victim)
+            fab2 = ShardFabric(r2, dim=DIM, hot_capacity=CAP)
+            assert victim not in fab2.ring.shards
+            exactly_once_docs(fab2, stream)
+            check_parity(oracle, fab2, queries)
+            check_parity(oracle, fab2, queries, at=stream[-1][2] // 2)
+
+    def test_doc_can_move_back_to_former_owner(self):
+        """split then merge moves some docs back to a shard that once
+        served them (stale cold history on the destination): event-level
+        idempotent import must reconcile, not duplicate."""
+        rng = np.random.default_rng(36)
+        stream = make_stream(rng, n_docs=12)
+        queries = make_queries(rng)
+        with tempfile.TemporaryDirectory() as r1, \
+                tempfile.TemporaryDirectory() as r2:
+            oracle = LiveVectorLake(r1, dim=DIM, hot_capacity=CAP)
+            drive(oracle, stream)
+            fab = ShardFabric(r2, n_shards=3, dim=DIM, hot_capacity=CAP)
+            drive(fab, stream)
+            rb = Rebalancer(fab)
+            rb.split("s03")
+            rb.merge("s03")             # everything moves home again
+            exactly_once_docs(fab, stream)
+            check_parity(oracle, fab, queries)
+            check_parity(oracle, fab, queries, at=stream[-1][2] // 2)
+
+
+# ---------------------------------------------------------------------------
+# device fan-out hook
+# ---------------------------------------------------------------------------
+class TestDeviceFanout:
+    def test_matches_per_shard_dispatch(self):
+        from repro.kernels.topk_search.ops import topk_search
+        rng = np.random.default_rng(40)
+        S, N, d, Q, k = 4, 192, 32, 5, 7
+        emb = rng.standard_normal((S, N, d)).astype(np.float32)
+        mask = rng.random((S, N)) > 0.25
+        q = rng.standard_normal((Q, d)).astype(np.float32)
+        s, i = device_fanout_topk(q, emb, mask, k)
+        assert s.shape == (S, Q, k) and i.shape == (S, Q, k)
+        for si in range(S):
+            rs, ri = topk_search(q, emb[si], mask[si], k)
+            assert np.array_equal(np.asarray(rs), s[si])
+            assert np.array_equal(np.asarray(ri), i[si])
+
+    def test_shard_map_path_on_host_mesh(self):
+        from repro.launch.mesh import make_host_mesh
+        rng = np.random.default_rng(41)
+        S, N, d, Q, k = 2, 128, 16, 3, 5
+        emb = rng.standard_normal((S, N, d)).astype(np.float32)
+        mask = np.ones((S, N), bool)
+        q = rng.standard_normal((Q, d)).astype(np.float32)
+        base = device_fanout_topk(q, emb, mask, k)
+        fanned = device_fanout_topk(q, emb, mask, k,
+                                    mesh=make_host_mesh(1, 1))
+        assert np.array_equal(base[0], fanned[0])
+        assert np.array_equal(base[1], fanned[1])

@@ -1,6 +1,5 @@
 """End-to-end LiveVectorLake behaviour: ingest -> dual-tier -> query,
 WAL crash recovery, temporal leakage prevention (paper §III, §V)."""
-import numpy as np
 import pytest
 
 from repro.core.store import FaultInjected, LiveVectorLake

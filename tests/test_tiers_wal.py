@@ -10,7 +10,7 @@ from repro.core.cold_tier import ColdTier, FaultPoint
 from repro.core.embedder import CachingEmbedder, HashProjectionEmbedder
 from repro.core.hot_tier import HotTier
 from repro.core.types import ChunkRecord, VALID_TO_OPEN
-from repro.core.wal import (ABORT, COLD_OK, COMMIT, HOT_OK, INTENT,
+from repro.core.wal import (COLD_OK, COMMIT, HOT_OK, INTENT,
                             WriteAheadLog)
 
 
