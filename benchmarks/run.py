@@ -11,9 +11,14 @@ Prints ``name,value,derived`` CSV rows:
   DESIGN §8 -> query_throughput
   DESIGN §9 -> temporal_scaling
   DESIGN §10-> shard_scaling
+  DESIGN §11-> quantized_scan
 
 ``--smoke`` shrinks every suite to CI sizes (each suite's ``main``
-honors the flag); ``--only`` runs a comma-separated subset.
+honors the flag); ``--only`` runs a comma-separated subset. ``--json
+PATH`` additionally writes one consolidated record — every suite's
+headline rows plus wall time — so each PR can commit its perf
+trajectory point (BENCH_PR<N>.json) and CI can diff artifacts across
+PRs.
 
 The roofline/dry-run analysis (§Roofline) is a separate entry point
 (``python -m benchmarks.roofline``) because it must force 512 host
@@ -22,6 +27,8 @@ devices before jax initializes.
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 
@@ -32,12 +39,14 @@ def main() -> None:
                     help="small sizes for CI (passed to every suite)")
     ap.add_argument("--only", type=str, default=None,
                     help="comma-separated suite names to run")
+    ap.add_argument("--json", type=str, default=None,
+                    help="write a consolidated per-suite record to PATH")
     args = ap.parse_args()
 
     from . import (change_detection, query_latency, query_throughput,
-                   search_scaling, shard_scaling, storage_efficiency,
-                   streaming_churn, temporal_accuracy, temporal_scaling,
-                   update_performance)
+                   quantized_scan, search_scaling, shard_scaling,
+                   storage_efficiency, streaming_churn, temporal_accuracy,
+                   temporal_scaling, update_performance)
     suites = [
         ("update_performance", update_performance),
         ("query_latency", query_latency),
@@ -49,6 +58,7 @@ def main() -> None:
         ("streaming_churn", streaming_churn),
         ("query_throughput", query_throughput),
         ("shard_scaling", shard_scaling),
+        ("quantized_scan", quantized_scan),
     ]
     if args.only:
         keep = {s.strip() for s in args.only.split(",")}
@@ -57,6 +67,13 @@ def main() -> None:
             sys.exit(f"unknown suite(s): {sorted(unknown)}")
         suites = [(n, m) for n, m in suites if n in keep]
     print("name,value,notes")
+    record: dict = {
+        "smoke": args.smoke,
+        "timestamp": time.time(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "suites": {},
+    }
     failures = 0
     for name, mod in suites:
         t0 = time.perf_counter()
@@ -67,10 +84,23 @@ def main() -> None:
                     print(f"{row_name},{val:.4f},{note}")
                 else:
                     print(f"{row_name},{val},{note}")
-            print(f"_meta/{name}/wall_s,{time.perf_counter()-t0:.1f},")
+            wall = time.perf_counter() - t0
+            print(f"_meta/{name}/wall_s,{wall:.1f},")
+            record["suites"][name] = {
+                "wall_s": round(wall, 2),
+                "rows": [[r, (round(v, 6) if isinstance(v, float) else v),
+                          n] for r, v, n in rows],
+            }
         except Exception as e:  # pragma: no cover
             failures += 1
             print(f"_meta/{name}/ERROR,{type(e).__name__}: {e},")
+            record["suites"][name] = {
+                "wall_s": round(time.perf_counter() - t0, 2),
+                "error": f"{type(e).__name__}: {e}",
+            }
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=1)
     if failures:
         sys.exit(1)
 

@@ -171,9 +171,15 @@ class _Fold:
 
 
 class ColdTier:
-    def __init__(self, root: str, dim: int, checkpoint_interval: int = 8):
+    def __init__(self, root: str, dim: int, checkpoint_interval: int = 8,
+                 quant_sidecar: bool = False):
+        """``quant_sidecar``: also persist int8 quantization columns
+        (emb_q8/quant_scale) in every checkpoint — the store threads its
+        ``quantized`` flag here so fp32 stores never pay the quantize
+        pass or the extra checkpoint bytes (DESIGN.md §11)."""
         self.root = root
         self.dim = dim
+        self.quant_sidecar = bool(quant_sidecar)
         self.checkpoint_interval = int(checkpoint_interval)
         for d in (_LOG_DIR, _SEG_DIR, _CKPT_DIR, _ARC_DIR):
             os.makedirs(os.path.join(root, d), exist_ok=True)
@@ -350,15 +356,24 @@ class ColdTier:
             return None
         fold = self._fold()
         cols = fold.columns()
-        buf = io.BytesIO()
-        np.savez_compressed(
-            buf,
+        ckpt_cols = dict(
             embeddings=cols["embeddings"], valid_from=cols["valid_from"],
             valid_to=cols["valid_to"], version=cols["version"],
             position=cols["position"],
             chunk_ids=np.array(cols["chunk_ids"]),
             doc_ids=np.array(cols["doc_ids"]),
             texts=np.array(cols["texts"]))
+        if self.quant_sidecar:
+            # quantized-scan sidecar columns (DESIGN.md §11): the int8
+            # rows + fixed scale are persisted with the checkpoint so a
+            # reopened store seeds its resident quantized history from
+            # disk verbatim (bit-deterministic, no re-quantization)
+            from ..index.quant import fixed_scale, quantize_rows
+            scale = fixed_scale(self.dim)
+            ckpt_cols["emb_q8"] = quantize_rows(cols["embeddings"], scale)
+            ckpt_cols["quant_scale"] = scale
+        buf = io.BytesIO()
+        np.savez_compressed(buf, **ckpt_cols)
         data = buf.getvalue()
         npz_path, meta_path = self._ckpt_paths(version)
         _atomic_write(npz_path, data)
@@ -370,6 +385,23 @@ class ColdTier:
                 "checksum": blob_checksum(data)}
         _atomic_write(meta_path, json.dumps(meta, indent=1).encode())
         return version
+
+    def checkpoint_q8_at(self, version: int,
+                         expected_rows: int) -> Optional[tuple]:
+        """The persisted quantized sidecar of the checkpoint at EXACTLY
+        ``version`` — (emb_q8, quant_scale) — or None. Used by the
+        temporal engine to seed its resident quantized history from disk
+        verbatim instead of re-quantizing: with no delta commits after
+        the checkpoint, the checkpoint's row order IS the fold's."""
+        for m in self.checkpoints():
+            if m["version"] != version:
+                continue
+            cols = self._load_checkpoint(m)
+            if (cols is not None and "emb_q8" in cols
+                    and cols["emb_q8"].shape[0] == expected_rows):
+                return cols["emb_q8"], cols["quant_scale"]
+            return None
+        return None
 
     def _best_checkpoint(self, hi: int,
                          up_to_ts: Optional[int]) -> Optional[dict]:

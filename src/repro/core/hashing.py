@@ -37,3 +37,16 @@ def chunk_hash(text: str) -> str:
 def blob_checksum(data: bytes) -> str:
     """Checksum used for segment / checkpoint integrity verification."""
     return hashlib.sha256(data).hexdigest()
+
+
+def file_checksum(path: str, chunk_bytes: int = 1 << 20) -> str:
+    """Streamed ``blob_checksum`` of a file — verifies large sidecars
+    without buffering the whole file in memory."""
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        while True:
+            chunk = f.read(chunk_bytes)
+            if not chunk:
+                break
+            h.update(chunk)
+    return h.hexdigest()

@@ -34,12 +34,15 @@ from .types import ChunkRecord, SearchResult
 class HotTier:
     def __init__(self, dim: int, capacity: int = 4096,
                  root: Optional[str] = None, wal=None, nprobe: int = 8,
-                 ivf_min_rows: int = 1024):
+                 ivf_min_rows: int = 1024, quantized: bool = False,
+                 rescore_factor: int = 4):
         self.dim = dim
         self._mem_capacity = capacity
         self.index = SegmentedIndex(dim, mem_capacity=capacity, root=root,
                                     wal=wal, nprobe=nprobe,
-                                    ivf_min_rows=ivf_min_rows)
+                                    ivf_min_rows=ivf_min_rows,
+                                    quantized=quantized,
+                                    rescore_factor=rescore_factor)
 
     # ------------------------------------------------------------------
     def __len__(self) -> int:

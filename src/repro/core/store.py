@@ -46,35 +46,71 @@ class LiveVectorLake:
                  dim: int = 384, hot_capacity: int = 4096,
                  device_resident_history: bool = True,
                  cold_checkpoint_interval: int = 8,
-                 temporal_fused: Optional[bool] = None):
+                 temporal_fused: Optional[bool] = None,
+                 quantized: Optional[bool] = None, rescore_factor: int = 4):
         """``temporal_fused`` selects the cold read path: True (default)
         routes temporal queries through the fused validity-masked kernel
         over the engine's resident full-history arrays; False uses the
         paper-faithful per-snapshot NumPy fold (the reference oracle).
         ``device_resident_history`` is the legacy alias for the same
         switch. ``cold_checkpoint_interval``: persist a cold-tier
-        checkpoint every N commits (0 disables)."""
+        checkpoint every N commits (0 disables).
+
+        ``quantized=True`` turns on the int8 scan fabric (DESIGN.md
+        §11): every tier's scan streams int8 with exact fp32 rescoring
+        of an over-fetched pool (k' = ``rescore_factor`` * k) — ~4x less
+        resident embedding memory and scan traffic, recall@10 >= 0.99 vs
+        the fp32 path (which remains the oracle at quantized=False).
+        The flag is PERSISTED (STORE.json): reopening with the default
+        ``quantized=None`` adopts the stored value, so a restart cannot
+        silently materialize every quantized segment back to resident
+        fp32; pass an explicit bool to switch formats."""
         self.root = root
         os.makedirs(root, exist_ok=True)
         inner = embedder or HashProjectionEmbedder(dim=dim)
         if inner.dim != dim:
             dim = inner.dim
         self.dim = dim
+        self.quantized = self._resolve_quantized(quantized)
         self.embedder = CachingEmbedder(inner)
         self.hash_store = HashStore(os.path.join(root, "hash_store.json"))
         self.cold = ColdTier(os.path.join(root, "cold"), dim,
-                             checkpoint_interval=cold_checkpoint_interval)
+                             checkpoint_interval=cold_checkpoint_interval,
+                             quant_sidecar=self.quantized)
         from .wal import WriteAheadLog
         self.wal = WriteAheadLog(os.path.join(root, "wal.jsonl"))
         self.hot = HotTier(dim, capacity=hot_capacity,
                            root=os.path.join(root, "hot_index"),
-                           wal=self.wal)
+                           wal=self.wal, quantized=self.quantized,
+                           rescore_factor=rescore_factor)
         fused = device_resident_history if temporal_fused is None \
             else temporal_fused
-        self.temporal = TemporalEngine(self.cold, fused=fused)
+        self.temporal = TemporalEngine(self.cold, fused=fused,
+                                       quantized=self.quantized,
+                                       rescore_factor=rescore_factor)
         self._last_ts = 0
         if self.cold.latest_version() > 0:
             self.recover()
+
+    def _resolve_quantized(self, quantized: Optional[bool]) -> bool:
+        """Adopt (or persist) the store's on-disk scan format. None =
+        reopen with whatever format the store was created with."""
+        import json
+        path = os.path.join(self.root, "STORE.json")
+        cfg = {}
+        if os.path.exists(path):
+            try:
+                with open(path) as f:
+                    cfg = json.load(f)
+            except (json.JSONDecodeError, OSError):
+                cfg = {}
+        if quantized is None:
+            return bool(cfg.get("quantized", False))
+        if cfg.get("quantized") != bool(quantized):
+            cfg["quantized"] = bool(quantized)
+            with open(path, "w") as f:
+                json.dump(cfg, f, indent=1)
+        return bool(quantized)
 
     # ------------------------------------------------------------------
     # ingestion

@@ -85,13 +85,32 @@ class ResidentHistory:
     every commit instead of rebuilt. ``valid_to`` is mutated in place when
     a later commit closes a row — the arrays always equal the cold tier's
     full-history fold, record for record (the incremental-fold invariant,
-    DESIGN.md §9; the property suite checks it)."""
+    DESIGN.md §9; the property suite checks it).
 
-    def __init__(self, dim: int):
+    QUANTIZED mode (DESIGN.md §11): the resident embedding column is
+    int8 under the fixed 1/127 scale — 4x less resident memory AND 4x
+    less scan traffic for the fused temporal kernel — while the exact
+    fp32 rows spill to an append-only file (``f32_path``) read back
+    lazily (OS page cache) ONLY to rescore candidate pools. The spill is
+    a pure cache: every re-seed rewrites it. Validity metadata is
+    unchanged, so the leakage guard is untouched."""
+
+    def __init__(self, dim: int, quantized: bool = False,
+                 f32_path: Optional[str] = None):
+        from ..index.quant import AppendOnlyF32File, fixed_scale
         self.dim = dim
         self.n = 0
+        self.quantized = bool(quantized)
         cap = 1024
-        self.emb = np.zeros((cap, dim), np.float32)
+        if self.quantized:
+            assert f32_path is not None, "quantized history needs f32 spill"
+            self.emb = np.zeros((cap, dim), np.int8)
+            self.scale = fixed_scale(dim)
+            self.f32 = AppendOnlyF32File(f32_path, dim)
+        else:
+            self.emb = np.zeros((cap, dim), np.float32)
+            self.scale = None
+            self.f32 = None
         self.vf = np.zeros(cap, np.int64)
         self.vt = np.zeros(cap, np.int64)
         self.ver = np.zeros(cap, np.int32)
@@ -116,11 +135,44 @@ class ResidentHistory:
             new[:self.n] = old[:self.n]
             setattr(self, name, new)
 
-    def seed(self, snap: ColdSnapshot, applied_version: int) -> None:
-        """Initialize from a full-history (include_closed) snapshot."""
+    def _store_emb(self, where, emb_f32: np.ndarray,
+                   q8_rows: Optional[np.ndarray] = None) -> None:
+        """Land fp32 rows in the resident column: quantize (or adopt the
+        persisted q8 verbatim) + spill exact fp32 when quantized."""
+        if not self.quantized:
+            self.emb[where] = emb_f32
+            return
+        from ..index.quant import quantize_rows
+        self.emb[where] = (q8_rows if q8_rows is not None
+                           else quantize_rows(emb_f32, self.scale))
+        if isinstance(where, slice) and where.start in (0, None):
+            self.f32.reset(emb_f32)
+        else:
+            self.f32.append(emb_f32)
+
+    def fetch_f32(self, rows: np.ndarray) -> np.ndarray:
+        """Exact fp32 rows by resident row id (rescore source)."""
+        rows = np.asarray(rows, np.int64)
+        if not self.quantized:
+            return self.emb[rows]
+        return self.f32.fetch(rows)
+
+    def emb_nbytes(self) -> int:
+        """Resident embedding bytes (allocated scan column)."""
+        n = int(self.emb.nbytes)
+        if self.quantized:
+            n += int(self.scale.nbytes)
+        return n
+
+    def seed(self, snap: ColdSnapshot, applied_version: int,
+             q8_rows: Optional[np.ndarray] = None) -> None:
+        """Initialize from a full-history (include_closed) snapshot.
+        ``q8_rows``: the persisted checkpoint quantization sidecar, when
+        one exists at exactly this version — adopted verbatim so the
+        round-trip is bit-deterministic across restarts."""
         m = len(snap)
         self._reserve(m)
-        self.emb[:m] = snap.embeddings
+        self._store_emb(slice(0, m), snap.embeddings, q8_rows)
         self.vf[:m] = snap.valid_from
         self.vt[:m] = snap.valid_to
         self.ver[:m] = snap.version
@@ -148,9 +200,11 @@ class ResidentHistory:
         if m == 0:
             return 0
         self._reserve(m)
+        block = np.stack([np.asarray(r.embedding, np.float32)
+                          for r in records])
+        self._store_emb(slice(self.n, self.n + m), block)
         for i, r in enumerate(records):
             j = self.n + i
-            self.emb[j] = np.asarray(r.embedding, np.float32)
             self.vf[j] = r.valid_from
             self.vt[j] = r.valid_to
             self.ver[j] = version
@@ -177,7 +231,7 @@ class ResidentHistory:
         m = len(seg["position"])
         self._reserve(m)
         s = slice(self.n, self.n + m)
-        self.emb[s] = seg["embeddings"]
+        self._store_emb(s, seg["embeddings"])
         self.vf[s] = seg["valid_from"]
         self.vt[s] = seg["valid_to"]
         self.ver[s] = seg["version"]
@@ -194,6 +248,9 @@ class ResidentHistory:
         return m
 
     def views(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(embedding column, valid_from, valid_to) views — the
+        embedding column is fp32 in exact mode, int8 in quantized mode
+        (scored via ``scale`` + exact rescore through ``fetch_f32``)."""
         return self.emb[:self.n], self.vf[:self.n], self.vt[:self.n]
 
 
@@ -228,9 +285,12 @@ class TemporalEngine:
 
     SNAP_CACHE_MAX = 32
 
-    def __init__(self, cold: ColdTier, fused: bool = True):
+    def __init__(self, cold: ColdTier, fused: bool = True,
+                 quantized: bool = False, rescore_factor: int = 4):
         self.cold = cold
         self.fused = fused
+        self.quantized = bool(quantized)
+        self.rescore_factor = int(rescore_factor)
         self._resident: Optional[ResidentHistory] = None
         self._snap_cache: dict[tuple, ColdSnapshot] = {}
         self.snap_hits = 0
@@ -275,9 +335,21 @@ class TemporalEngine:
 
     def _resident_history(self) -> ResidentHistory:
         if self._resident is None:
-            res = ResidentHistory(self.cold.dim)
-            res.seed(self.cold.snapshot(include_closed=True),
-                     self.cold.latest_version())
+            import os
+            res = ResidentHistory(
+                self.cold.dim, quantized=self.quantized,
+                f32_path=os.path.join(self.cold.root, "resident_f32.bin"))
+            snap = self.cold.snapshot(include_closed=True)
+            latest = self.cold.latest_version()
+            q8_rows = None
+            if self.quantized:
+                # reuse the checkpoint's persisted quantization verbatim
+                # when one exists at exactly the latest version (bit-
+                # deterministic round-trip across restarts)
+                got = self.cold.checkpoint_q8_at(latest, len(snap))
+                if got is not None:
+                    q8_rows = got[0]
+            res.seed(snap, latest, q8_rows=q8_rows)
             self._resident = res
             self.resident_builds += 1
         else:
@@ -316,20 +388,41 @@ class TemporalEngine:
         full-history arrays (no per-ts materialized copy)."""
         if not self.fused:
             return self._oracle_at_batch(queries, ts, k=k)
-        from ..kernels.temporal_mask_score.ops import temporal_window_topk
-
         qp, nq = pad_queries(queries)
         res = self._resident_history()
         if res.n == 0:
             return [[] for _ in range(nq)]
-        emb, vf, vt = res.views()
         bounds = np.full(qp.shape[0], int(ts), np.int64)
-        scores, idx = temporal_window_topk(qp, emb, vf, vt, bounds,
-                                           bounds + 1, min(k, res.n))
-        self.fused_dispatches += 1
-        scores, idx = np.asarray(scores), np.asarray(idx)
+        scores, idx = self._fused_topk(qp, nq, res, bounds, bounds + 1,
+                                       min(k, res.n))
         return [self._resident_results(res, scores[qi], idx[qi], k)
                 for qi in range(nq)]
+
+    def _fused_topk(self, qp: np.ndarray, nq: int, res: ResidentHistory,
+                    t0s: np.ndarray, t1s: np.ndarray, k: int
+                    ) -> tuple[np.ndarray, np.ndarray]:
+        """One fused validity-masked dispatch over the resident history.
+        Quantized mode scans the int8 column (4x less traffic), then
+        exactly rescores the over-fetched pool in fp32 from the spill
+        file — the pool can only contain in-window rows (the kernel's
+        idx=-1 contract), so the leakage guarantee is untouched and the
+        returned scores are fp32-exact. Padding query rows are sliced
+        off before the rescore (no spill reads for discarded rows)."""
+        emb, vf, vt = res.views()
+        if res.quantized:
+            from ..index.quant import pool_k, rescore_topk
+            from ..kernels.temporal_mask_score.ops import (
+                temporal_window_topk_q8)
+            kp = pool_k(k, res.n, self.rescore_factor)
+            _, pool = temporal_window_topk_q8(qp, emb, res.scale, vf, vt,
+                                              t0s, t1s, kp)
+            scores, idx = rescore_topk(qp[:nq], np.asarray(pool)[:nq],
+                                       res.fetch_f32, k)
+        else:
+            from ..kernels.temporal_mask_score.ops import temporal_window_topk
+            scores, idx = temporal_window_topk(qp, emb, vf, vt, t0s, t1s, k)
+        self.fused_dispatches += 1
+        return np.asarray(scores), np.asarray(idx)
 
     def _oracle_at_batch(self, queries: np.ndarray, ts: int, k: int = 5
                          ) -> list[list[SearchResult]]:
@@ -362,19 +455,14 @@ class TemporalEngine:
         as the point path (a point query is the window [ts, ts+1))."""
         if not self.fused:
             return self._oracle_window_batch(queries, t0, t1, k=k)
-        from ..kernels.temporal_mask_score.ops import temporal_window_topk
-
         qp, nq = pad_queries(queries)
         res = self._resident_history()
         if res.n == 0:
             return [[] for _ in range(nq)]
-        emb, vf, vt = res.views()
         t0s = np.full(qp.shape[0], int(t0), np.int64)
         t1s = np.full(qp.shape[0], int(t1), np.int64)
-        scores, idx = temporal_window_topk(qp, emb, vf, vt, t0s, t1s,
-                                           min(k, res.n))
-        self.fused_dispatches += 1
-        scores, idx = np.asarray(scores), np.asarray(idx)
+        scores, idx = self._fused_topk(qp, nq, res, t0s, t1s,
+                                       min(k, res.n))
         return [self._resident_results(res, scores[qi], idx[qi], k)
                 for qi in range(nq)]
 

@@ -17,6 +17,15 @@ concatenated (Q, n_sources*k) candidate matrix. The same merge serves a
 future shard_map fan-out: a shard is just another candidate source
 (DESIGN.md §7.5).
 
+QUANTIZED read path (``quantized=True`` — DESIGN.md §11): every scan
+streams int8 instead of fp32 — the fused block scans the memtable's int8
+mirror + small segments' int8 rows under the fixed 1/127 scale, IVF
+member scans gather int8 — and each source over-fetches a candidate pool
+(k' = rescore_factor*k) that is exactly rescored in fp32 (memtable slots
+from the resident slot array, segment rows through the mmap winners-row
+cache) BEFORE the global merge, so merged scores are fp32-exact and the
+fp32 path remains the oracle the recall gates compare against.
+
 Consistency: ``_by_key`` maps every live (doc_id, position) to exactly
 one location — a memtable slot (int) or a (seg_id, row) pair. Inserting
 over a key that lives in a segment tombstones the old row; the merge
@@ -25,14 +34,12 @@ a query can never return two versions of one logical slot.
 
 Durability: segment files + atomic manifest under ``root`` (optional);
 seal/merge transactions are bracketed in the store's WAL. ``rebuild()``
-restores the segment set from the manifest and reconciles every row
-against the cold tier's authoritative snapshot, so only the delta since
-the last seal is re-inserted — not one monolithic insert.
+restores segments from the manifest and re-inserts only the delta.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
@@ -41,6 +48,7 @@ from ..core.types import (ChunkRecord, SearchResult, VALID_TO_OPEN,
 from .compaction import CompactionStats, SizeTieredCompactor
 from .manifest import Manifest
 from .memtable import Memtable
+from .quant import fixed_scale, pool_k, rescore_topk
 from .segment import Segment
 
 
@@ -98,28 +106,38 @@ class _Catalog:
     segment so they are scanned by ONE fused top-k dispatch instead of a
     dispatch per source; ``fused_gids`` maps fused-local rows back to
     global ids. When small segments exist the fused block is a copy, so
-    memtable writes are mirrored into it (``mirrored``)."""
+    memtable writes are mirrored into it (``mirrored``). Quantized
+    catalogs fuse the int8 mirrors instead (``fused_emb`` is int8 under
+    the fixed scale) and carry ``fused_f32``, the fused-local exact-row
+    fetch used by the rescore, plus per-column result gathers
+    (``seg_cols``) for the vectorized result build."""
 
     segs: list                    # all segments, seal order
     seg_starts: np.ndarray        # (n_segs,) global row-id base per segment
     ivf: list                     # [(segment, base)] for IVF-partitioned
     small: list                   # [(segment, base)] for exact-scan
-    fused_emb: np.ndarray         # (mem_capacity + small rows, d)
+    solo: list                    # [(segment, base)] scanned individually
+    fused_emb: np.ndarray         # (mem_capacity + small rows, d) f32|int8
     fused_gids: np.ndarray        # fused-local row -> global row id
     mirrored: bool
+    fused_f32: Optional[Callable] = None   # fused-local rows -> exact fp32
+    seg_cols: Optional[dict] = None        # vectorized result columns
 
 
 class SegmentedIndex:
     def __init__(self, dim: int, mem_capacity: int = 4096,
                  root: Optional[str] = None, wal=None, nprobe: int = 8,
-                 ivf_min_rows: int = 1024, fanout: int = 4, seed: int = 0):
+                 ivf_min_rows: int = 1024, fanout: int = 4, seed: int = 0,
+                 quantized: bool = False, rescore_factor: int = 4):
         self.dim = dim
         self.root = root
         self.wal = wal
         self.nprobe = nprobe
         self.ivf_min_rows = ivf_min_rows
         self.seed = seed
-        self.mem = Memtable(dim, mem_capacity)
+        self.quantized = bool(quantized)
+        self.rescore_factor = int(rescore_factor)
+        self.mem = Memtable(dim, mem_capacity, quantized=self.quantized)
         self.segments: dict[str, Segment] = {}     # insertion == seal order
         self.compactor = SizeTieredCompactor(fanout=fanout)
         self.cstats = CompactionStats()
@@ -143,7 +161,10 @@ class SegmentedIndex:
         return self.mem.capacity + sum(len(s) for s in self.segments.values())
 
     def nbytes(self) -> int:
-        return self.mem.nbytes() + sum(int(s.emb.nbytes)
+        """RESIDENT embedding bytes (what scans + rescores pin in RAM —
+        quantized segments count int8 + scale + winners cache, not the
+        on-disk fp32 sidecar)."""
+        return self.mem.nbytes() + sum(s.emb_nbytes()
                                        for s in self.segments.values())
 
     # ------------------------------------------------------------------
@@ -172,7 +193,8 @@ class SegmentedIndex:
         """Keep the fused scan block's memtable rows in sync: the block is
         a copy when small segments are fused behind the memtable."""
         if self._cat is not None and self._cat.mirrored:
-            self._cat.fused_emb[slot] = self.mem._emb[slot]
+            self._cat.fused_emb[slot] = (self.mem._q8[slot] if self.quantized
+                                         else self.mem._emb[slot])
 
     def delete(self, keys: Sequence[tuple[str, int]]) -> int:
         n = 0
@@ -182,6 +204,7 @@ class SegmentedIndex:
                 continue
             if isinstance(loc, int):
                 self.mem.remove(loc)
+                self._mirror(loc)
             else:
                 seg_id, row = loc
                 self.segments[seg_id].kill(row)
@@ -197,16 +220,24 @@ class SegmentedIndex:
         self._seq += 1
         return f"{self._seq:08d}"
 
+    def _new_segment(self, seg_id: str, emb, valid_from, positions,
+                     chunk_ids, doc_ids, texts, ivf_state=None) -> Segment:
+        return Segment(seg_id, emb, valid_from, positions, chunk_ids,
+                       doc_ids, texts, ivf_min_rows=self.ivf_min_rows,
+                       seed=self.seed, quantized=self.quantized,
+                       rescore_factor=self.rescore_factor,
+                       ivf_state=ivf_state)
+
     def seal(self) -> Optional[Segment]:
         """Freeze the memtable into a new base segment (IVF-partitioned at
         or above ivf_min_rows), publish it, and reset the memtable."""
         if len(self.mem) == 0:
             return None
         cols = self.mem.extract()
-        seg = Segment(self._next_id(), cols["emb"], cols["valid_from"],
-                      cols["positions"], cols["chunk_ids"], cols["doc_ids"],
-                      cols["texts"], ivf_min_rows=self.ivf_min_rows,
-                      seed=self.seed)
+        seg = self._new_segment(self._next_id(), cols["emb"],
+                                cols["valid_from"], cols["positions"],
+                                cols["chunk_ids"], cols["doc_ids"],
+                                cols["texts"])
         self._commit_segments("seal", add=[seg], remove=[])
         self.segments[seg.seg_id] = seg
         self._cat = None
@@ -235,15 +266,17 @@ class SegmentedIndex:
         if total == 0:
             merged: Optional[Segment] = None
         else:
-            merged = Segment(
+            # fetch_f32 (not .emb): a quantized victim's fp32 rows live in
+            # its sidecar — the merge re-quantizes the merged row set so
+            # scale tightness never degrades across merge generations
+            merged = self._new_segment(
                 self._next_id(),
-                np.concatenate([v.emb[rows] for v, rows in keep]),
+                np.concatenate([v.fetch_f32(rows) for v, rows in keep]),
                 np.concatenate([v.valid_from[rows] for v, rows in keep]),
                 np.concatenate([v.positions[rows] for v, rows in keep]),
                 [v.chunk_ids[i] for v, rows in keep for i in rows],
                 [v.doc_ids[i] for v, rows in keep for i in rows],
-                [v.texts[i] for v, rows in keep for i in rows],
-                ivf_min_rows=self.ivf_min_rows, seed=self.seed)
+                [v.texts[i] for v, rows in keep for i in rows])
         self._commit_segments("merge", add=[merged] if merged else [],
                               remove=victims)
         self._cat = None
@@ -263,7 +296,9 @@ class SegmentedIndex:
         """Durable transition of the live-segment set: write new files,
         atomically publish the manifest, then retire old files. Bracketed
         in the WAL; the manifest rename is the commit point, so a crash in
-        any window leaves only orphan files (cleaned on next load)."""
+        any window leaves only orphan files (cleaned on next load). Once
+        a quantized segment's fp32 sidecar is durable, its resident fp32
+        copy is released — scans run on int8 from then on."""
         if self.manifest is None:
             return
         txn = None
@@ -285,6 +320,8 @@ class SegmentedIndex:
         self.manifest.commit(entries, seq=self._seq)
         self._fault(f"{op}:after_manifest")
         self.manifest.cleanup_orphans({e["name"] for e in entries})
+        for seg in add:
+            seg.release_f32()
         if txn is not None:
             self.wal.mark(txn, "COMMIT")
 
@@ -294,7 +331,7 @@ class SegmentedIndex:
             raise CompactionInterrupted(f"injected crash at {point}")
 
     # ------------------------------------------------------------------
-    # reads (batched, array-native — DESIGN.md §8)
+    # reads (batched, array-native — DESIGN.md §8, §11)
     # ------------------------------------------------------------------
     def _catalog(self) -> _Catalog:
         """Build (lazily, cached until the segment set changes) the global
@@ -303,23 +340,70 @@ class SegmentedIndex:
             segs = list(self.segments.values())
             cap = self.mem.capacity
             seg_starts = np.empty(len(segs), np.int64)
-            small, ivf = [], []
+            small, ivf, solo = [], [], []
+            fixed = fixed_scale(self.dim)
             base = cap
             for i, s in enumerate(segs):
                 seg_starts[i] = base
-                (ivf if s.ivf is not None else small).append((s, base))
+                if s.ivf is not None:
+                    ivf.append((s, base))
+                elif self.quantized and (s.scale is None or
+                                         not np.array_equal(s.scale, fixed)):
+                    # a data-scaled segment demoted below ivf_min_rows
+                    # (config drift on reopen) cannot join the fused
+                    # block — one shared scale vector per dispatch —
+                    # so it is scanned as its own source
+                    solo.append((s, base))
+                else:
+                    small.append((s, base))
                 base += len(s)
-            parts_e = [self.mem._emb] + [s.emb for s, _ in small]
+            mem_block = self.mem._q8 if self.quantized else self.mem._emb
+            if self.quantized:
+                parts_e = [mem_block] + [s.q8 for s, _ in small]
+            else:
+                parts_e = [mem_block] + [s.emb for s, _ in small]
             parts_g = [np.arange(cap, dtype=np.int64)] + \
                 [b + np.arange(len(s), dtype=np.int64) for s, b in small]
             mirrored = bool(small)
+            small_offsets = np.cumsum(
+                [cap] + [len(s) for s, _ in small])        # fused-local
+            mem = self.mem
+
+            def fused_f32(rows: np.ndarray) -> np.ndarray:
+                """Exact fp32 rows by FUSED-LOCAL id (rescore source):
+                memtable slots from the resident fp32 slot array, small
+                segments through their winners-row caches."""
+                rows = np.asarray(rows, np.int64)
+                out = np.empty((len(rows), self.dim), np.float32)
+                in_mem = rows < cap
+                if in_mem.any():
+                    out[in_mem] = mem._emb[rows[in_mem]]
+                for si, (s, _) in enumerate(small):
+                    lo, hi = small_offsets[si], small_offsets[si + 1]
+                    sel = (rows >= lo) & (rows < hi)
+                    if sel.any():
+                        out[sel] = s.fetch_f32(rows[sel] - lo)
+                return out
+
+            # per-column gathers over the segment row space (vectorized
+            # result build): concat of each segment's cached immutable
+            # column arrays — one fancy-index replaces the per-winner
+            # Python loop, and a catalog rebuild costs O(segments), not
+            # O(corpus rows) of Python list flattening
+            if segs:
+                per_seg = [s.result_cols() for s in segs]
+                seg_cols = {key: np.concatenate([c[key] for c in per_seg])
+                            for key in per_seg[0]}
+            else:
+                seg_cols = None
             self._cat = _Catalog(
                 segs=segs, seg_starts=seg_starts, ivf=ivf, small=small,
+                solo=solo,
                 fused_emb=(np.concatenate(parts_e) if mirrored
-                           else self.mem._emb),
+                           else mem_block),
                 fused_gids=(np.concatenate(parts_g) if mirrored
                             else parts_g[0]),
-                mirrored=mirrored)
+                mirrored=mirrored, fused_f32=fused_f32, seg_cols=seg_cols)
         return self._cat
 
     def _authority_rows(self, cat: _Catalog) -> np.ndarray:
@@ -341,12 +425,12 @@ class SegmentedIndex:
         cat = self._catalog()
         auth = self._authority_rows(cat)
         expect = np.zeros_like(auth)
+        seg_pos = {s.seg_id: i for i, s in enumerate(cat.segs)}
         for key, loc in self._by_key.items():
             if isinstance(loc, int):
                 expect[loc] = True
             else:
-                seg_ids = [s.seg_id for s in cat.segs]
-                i = seg_ids.index(loc[0])
+                i = seg_pos[loc[0]]
                 expect[cat.seg_starts[i] + loc[1]] = True
         return bool(np.array_equal(auth, expect))
 
@@ -356,7 +440,15 @@ class SegmentedIndex:
         every small segment, one batched nprobe-routed pass per IVF
         segment, then one array-native merge over the concatenated
         (Q, n_sources*k) candidate matrix. A query's results are
-        bit-identical whether it runs alone or inside a batch."""
+        bit-identical whether it runs alone or inside a batch.
+
+        Scan accounting: ``_scan_scanned`` counts ROW-READS. The fused
+        block reads each row ONCE for the whole batch (that is the point
+        of the fused dispatch), so it contributes its row count once;
+        IVF member scans are per-query gathers, so they contribute their
+        per-query average times nq. The denominator is rows x queries,
+        making ``avg_fraction_scanned`` the amortized per-query fraction
+        for both source kinds."""
         q = np.atleast_2d(np.asarray(queries, np.float32))
         nq = q.shape[0]
         if not self._by_key:
@@ -370,17 +462,38 @@ class SegmentedIndex:
         # its alive mask is the authority array gathered by fused row.
         fmask = auth[cat.fused_gids]
         if fmask.any():
-            from ..kernels.topk_search.ops import topk_search
             qp, _ = pad_queries(q)
-            s, idx = topk_search(qp, cat.fused_emb, fmask,
-                                 min(k, cat.fused_emb.shape[0]))
-            s = np.asarray(s)[:nq]
-            idx = np.asarray(idx)[:nq]
+            k_eff = min(k, cat.fused_emb.shape[0])
+            if self.quantized:
+                from ..kernels.topk_search.ops import topk_search_q8
+                kp = pool_k(k_eff, cat.fused_emb.shape[0],
+                            self.rescore_factor)
+                _, pool = topk_search_q8(qp, cat.fused_emb,
+                                         fixed_scale(self.dim), fmask, kp)
+                s, idx = rescore_topk(q, np.asarray(pool)[:nq],
+                                      cat.fused_f32, k_eff)
+            else:
+                from ..kernels.topk_search.ops import topk_search
+                s, idx = topk_search(qp, cat.fused_emb, fmask, k_eff)
+                s = np.asarray(s)[:nq]
+                idx = np.asarray(idx)[:nq]
             g = np.where(np.isfinite(s),
                          cat.fused_gids[np.clip(idx, 0, None)], -1)
-            blocks_s.append(s.astype(np.float32))
+            blocks_s.append(np.asarray(s, np.float32))
             blocks_g.append(g)
-            scanned += int(fmask.sum())
+            scanned += int(fmask.sum())          # once per BATCH (fused)
+        # solo segments (scale-incompatible with the fused block): one
+        # exact scan each, whole batch per dispatch — like fused.
+        for seg, sbase in cat.solo:
+            if seg.n_alive == 0:
+                continue
+            s, rows, seg_scanned = seg.search(q, k, nprobe=self.nprobe)
+            s = np.asarray(s, np.float32)
+            rows = np.asarray(rows)
+            g = np.where(rows >= 0, sbase + np.clip(rows, 0, None), -1)
+            blocks_s.append(s)
+            blocks_g.append(g)
+            scanned += seg_scanned               # once per BATCH (exact)
         # IVF segments: batched centroid routing + per-query member scan.
         for seg, sbase in cat.ivf:
             if seg.n_alive == 0:
@@ -391,8 +504,8 @@ class SegmentedIndex:
             g = np.where(rows >= 0, sbase + np.clip(rows, 0, None), -1)
             blocks_s.append(s)
             blocks_g.append(g)
-            scanned += seg_scanned
-        self._scan_scanned += scanned * nq
+            scanned += seg_scanned * nq          # per-query avg x queries
+        self._scan_scanned += scanned
         self._scan_denom += max(len(self._by_key), 1) * nq
         if not blocks_s:
             return [[] for _ in range(nq)]
@@ -403,42 +516,57 @@ class SegmentedIndex:
 
     def _build_results(self, top_s: np.ndarray, top_g: np.ndarray,
                        cat: _Catalog) -> list[list[SearchResult]]:
-        """Materialize SearchResults for the Q*k winners only."""
+        """Materialize SearchResults for the Q*k winners only — column
+        gathers over the catalog (one fancy-index per column) instead of
+        a per-winner Python double loop; only the memtable's few winners
+        are read through its mutable per-slot lists."""
+        nq, kk = top_s.shape
         cap = self.mem.capacity
-        seg_idx = (np.searchsorted(cat.seg_starts, top_g, side="right") - 1
-                   if cat.segs else np.zeros_like(top_g))
+        g = top_g.reshape(-1)
+        s = top_s.reshape(-1)
+        valid = g >= 0
+        in_seg = valid & (g >= cap)
+        # one gather per column for ALL segment winners at once
+        chunk_ids = np.empty(g.shape, object)
+        doc_ids = np.empty(g.shape, object)
+        texts = np.empty(g.shape, object)
+        positions = np.zeros(g.shape, np.int64)
+        valid_from = np.zeros(g.shape, np.int64)
+        if in_seg.any():
+            rows = g[in_seg] - cap
+            cols = cat.seg_cols
+            chunk_ids[in_seg] = cols["chunk_ids"][rows]
+            doc_ids[in_seg] = cols["doc_ids"][rows]
+            texts[in_seg] = cols["texts"][rows]
+            positions[in_seg] = cols["positions"][rows]
+            valid_from[in_seg] = cols["valid_from"][rows]
+        in_mem = valid & (g < cap)
+        mem = self.mem
+        for j in np.nonzero(in_mem)[0]:          # few winners, mutable lists
+            row = int(g[j])
+            chunk_ids[j] = mem._chunk_ids[row] or ""
+            doc_ids[j] = mem._doc_ids[row] or ""
+            texts[j] = mem._texts[row]
+            positions[j] = mem._positions[row]
+            valid_from[j] = mem._valid_from[row]
         out: list[list[SearchResult]] = []
-        for qi in range(top_s.shape[0]):
+        for qi in range(nq):
             res: list[SearchResult] = []
-            for j in range(top_s.shape[1]):
-                g = int(top_g[qi, j])
-                if g < 0:
+            for j in range(qi * kk, qi * kk + kk):
+                if not valid[j]:
                     continue
-                score = float(top_s[qi, j])
-                if g < cap:
-                    mem, row = self.mem, g
-                    res.append(SearchResult(
-                        chunk_id=mem._chunk_ids[row] or "",
-                        doc_id=mem._doc_ids[row] or "",
-                        position=int(mem._positions[row]), score=score,
-                        text=mem._texts[row],
-                        valid_from=int(mem._valid_from[row]),
-                        valid_to=VALID_TO_OPEN, tier="hot"))
-                else:
-                    seg = cat.segs[int(seg_idx[qi, j])]
-                    row = g - int(cat.seg_starts[int(seg_idx[qi, j])])
-                    res.append(SearchResult(
-                        chunk_id=seg.chunk_ids[row], doc_id=seg.doc_ids[row],
-                        position=int(seg.positions[row]), score=score,
-                        text=seg.texts[row],
-                        valid_from=int(seg.valid_from[row]),
-                        valid_to=VALID_TO_OPEN, tier="hot"))
+                res.append(SearchResult(
+                    chunk_id=chunk_ids[j], doc_id=doc_ids[j],
+                    position=int(positions[j]), score=float(s[j]),
+                    text=texts[j], valid_from=int(valid_from[j]),
+                    valid_to=VALID_TO_OPEN, tier="hot"))
             out.append(res)
         return out
 
     def active_embeddings(self) -> np.ndarray:
         parts = [self.mem._emb[self.mem._active]]
-        parts += [s.emb[s.alive] for s in self.segments.values()]
+        parts += [s.fetch_f32(np.nonzero(s.alive)[0])
+                  for s in self.segments.values()]
         return np.concatenate(parts) if parts else np.zeros((0, self.dim))
 
     # ------------------------------------------------------------------
@@ -462,7 +590,9 @@ class SegmentedIndex:
                     for ent in m["segments"]:
                         seg = Segment.load(
                             self.root, ent["name"], ent.get("checksum"),
-                            ivf_min_rows=self.ivf_min_rows, seed=self.seed)
+                            ivf_min_rows=self.ivf_min_rows, seed=self.seed,
+                            rescore_factor=self.rescore_factor)
+                        seg = self._coerce_quantization(seg)
                         self._seg_meta[seg.seg_id] = (ent["name"],
                                                       ent["checksum"])
                         loaded.append(seg)
@@ -493,6 +623,24 @@ class SegmentedIndex:
         self.insert(delta)
         return {"restored": len(claimed), "inserted": len(delta)}
 
+    def _coerce_quantization(self, seg: Segment) -> Segment:
+        """Align a loaded segment's storage format with the index flag:
+        a fp32-format segment in a quantized index is quantized in RAM
+        (its fp32 stays resident until the next merge rewrites it with a
+        sidecar); a quantized-format segment in a fp32 index has its
+        sidecar materialized back into RAM."""
+        if self.quantized == seg.quantized:
+            return seg
+        emb = seg.fetch_f32(np.arange(len(seg)))
+        # coercion keeps row order, so the persisted IVF partitioning is
+        # still exactly valid — no k-means re-run on a format flip
+        ivf_state = ((seg.ivf.centroids, seg.ivf._assign)
+                     if seg.ivf is not None else None)
+        return self._new_segment(
+            seg.seg_id, emb, seg.valid_from, seg.positions,
+            seg.chunk_ids, seg.doc_ids, seg.texts,
+            ivf_state=ivf_state)._with_alive(seg.alive)
+
     def reset(self, drop_disk: bool = True) -> None:
         self.mem.reset()
         self.segments.clear()
@@ -518,6 +666,9 @@ class SegmentedIndex:
             "partitioned_segments": sum(1 for s in self.segments.values()
                                         if s.ivf is not None),
             "nprobe": self.nprobe,
+            "quantized": self.quantized,
+            "rescore_factor": self.rescore_factor,
+            "resident_embedding_bytes": self.nbytes(),
             "avg_fraction_scanned": (self._scan_scanned
                                      / max(self._scan_denom, 1)),
             **self.cstats.as_dict(),

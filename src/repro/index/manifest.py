@@ -62,11 +62,17 @@ class Manifest:
     def cleanup_orphans(self, keep: set[str]) -> int:
         """Delete seg-*.npz not referenced by ``keep`` — leftovers from a
         crash between segment write and manifest publish (or between
-        publish and predecessor deletion). Returns #files removed."""
+        publish and predecessor deletion). A quantized segment's fp32
+        rescore sidecar (seg-*.f32.npy) lives or dies with its npz.
+        Returns #files removed."""
         n = 0
         for fn in os.listdir(self.root):
             if fn.startswith("seg-") and fn.endswith(".npz") \
                     and fn not in keep:
+                os.unlink(os.path.join(self.root, fn))
+                n += 1
+            elif fn.startswith("seg-") and fn.endswith(".f32.npy") \
+                    and fn[:-len(".f32.npy")] + ".npz" not in keep:
                 os.unlink(os.path.join(self.root, fn))
                 n += 1
         return n

@@ -15,13 +15,28 @@ from typing import Optional
 import numpy as np
 
 from ..core.types import ChunkRecord
+from .quant import fixed_scale, quantize_rows
 
 
 class Memtable:
-    def __init__(self, dim: int, capacity: int = 4096):
+    """``quantized=True`` additionally maintains an int8 mirror of the
+    slot array under the FIXED 1/127 scale (embeddings are L2-normalized
+    so the fixed scale is always valid, and a mutable buffer cannot use
+    a data-dependent scale without re-quantizing every row on every
+    write): the fused scan block streams the int8 mirror, the fp32 slot
+    array stays resident as the exact-rescore source and seal input —
+    the memtable is capacity-bounded, so its fp32 cost never grows with
+    the corpus (DESIGN.md §11)."""
+
+    def __init__(self, dim: int, capacity: int = 4096,
+                 quantized: bool = False):
         self.dim = dim
         self.capacity = capacity
+        self.quantized = bool(quantized)
         self._emb = np.zeros((capacity, dim), np.float32)
+        self._q8 = (np.zeros((capacity, dim), np.int8) if quantized
+                    else None)
+        self._qscale = fixed_scale(dim) if quantized else None
         self._active = np.zeros(capacity, bool)
         self._valid_from = np.zeros(capacity, np.int64)
         self._positions = np.zeros(capacity, np.int64)
@@ -53,6 +68,9 @@ class Memtable:
 
     def _write(self, slot: int, r: ChunkRecord) -> None:
         self._emb[slot] = np.asarray(r.embedding, np.float32)
+        if self._q8 is not None:
+            self._q8[slot] = quantize_rows(self._emb[slot][None],
+                                           self._qscale)[0]
         self._active[slot] = True
         self._valid_from[slot] = r.valid_from
         self._positions[slot] = r.position
@@ -63,6 +81,8 @@ class Memtable:
     def remove(self, slot: int) -> None:
         self._active[slot] = False
         self._emb[slot] = 0.0
+        if self._q8 is not None:
+            self._q8[slot] = 0
         self._chunk_ids[slot] = None
         self._doc_ids[slot] = None
         self._texts[slot] = ""
@@ -70,6 +90,8 @@ class Memtable:
 
     def reset(self) -> None:
         self._emb[:] = 0.0
+        if self._q8 is not None:
+            self._q8[:] = 0
         self._active[:] = False
         self._valid_from[:] = 0
         self._positions[:] = 0
@@ -97,4 +119,9 @@ class Memtable:
         }
 
     def nbytes(self) -> int:
-        return int(self._emb.nbytes)
+        """Resident embedding bytes: the fp32 slot array plus, when
+        quantized, the int8 mirror the fused scan actually streams."""
+        n = int(self._emb.nbytes)
+        if self._q8 is not None:
+            n += int(self._q8.nbytes) + int(self._qscale.nbytes)
+        return n

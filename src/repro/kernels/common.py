@@ -27,6 +27,21 @@ def kernel_mode(override: str | None = None) -> str:
     return mode
 
 
+def kernel_mode_q8(override: str | None = None) -> str:
+    """Mode policy for the int8 asymmetric-scan kernels. Same contract
+    as ``kernel_mode`` plus a fourth path, "host": the CPU integer-GEMM
+    scan (kernels/qscan — torch._int_mm when available, blocked numpy
+    otherwise). "auto" resolves to pallas on TPU and host elsewhere —
+    on a CPU host the q8 serving path should be the fast integer scan,
+    not the jnp oracle."""
+    mode = override or os.environ.get("REPRO_KERNEL_MODE", "auto")
+    if mode == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "host"
+    if mode not in ("pallas", "interpret", "ref", "host"):
+        raise ValueError(f"bad kernel mode {mode!r}")
+    return mode
+
+
 def pad_to(x, axis: int, multiple: int, value=0):
     """Pad one axis up to a multiple (static shapes for BlockSpec grids)."""
     import jax.numpy as jnp

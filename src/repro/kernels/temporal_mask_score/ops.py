@@ -14,9 +14,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..common import kernel_mode, lt_i64, pad_to, split_i64
-from .ref import temporal_window_topk_ref
-from .temporal_mask_score import temporal_block_candidates
+from ..common import kernel_mode, kernel_mode_q8, lt_i64, pad_to, split_i64
+from .ref import temporal_window_topk_q8_ref, temporal_window_topk_ref
+from .temporal_mask_score import (temporal_block_candidates,
+                                  temporal_block_candidates_q8)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "bn", "mode"))
@@ -87,6 +88,74 @@ def temporal_window_topk(q, corpus, valid_from, valid_to, t0s, t1s, k: int,
         jnp.asarray(q), jnp.asarray(corpus, jnp.float32),
         vf_hi, vf_lo, vt_hi, vt_lo, t0_hi, t0_lo, t1_hi, t1_lo,
         k, bn, mode)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bn", "interpret"))
+def _temporal_topk_q8_jit(qs, c8, vf_hi, vf_lo, vt_hi, vt_lo,
+                          t0_hi, t0_lo, t1_hi, t1_lo,
+                          k: int, bn: int, interpret: bool):
+    c8_p, _ = pad_to(c8, 0, bn)
+    pad = lambda a, v: pad_to(a, 0, bn, value=v)[0]
+    # padded rows: empty validity interval (vf=max, vt=0) => always invalid
+    vf_hi_p, vf_lo_p = pad(vf_hi, np.int32(0x7FFFFFFF)), pad(vf_lo, -1)
+    vt_hi_p, vt_lo_p = pad(vt_hi, 0), pad(vt_lo, 0)
+    s_blk, i_blk = temporal_block_candidates_q8(
+        qs, c8_p, vf_hi_p, vf_lo_p, vt_hi_p, vt_lo_p,
+        t0_hi, t0_lo, t1_hi, t1_lo, k, bn=bn, interpret=interpret)
+    nb = s_blk.shape[0]
+    s_all = jnp.transpose(s_blk, (1, 0, 2)).reshape(qs.shape[0], nb * k)
+    i_all = jnp.transpose(i_blk, (1, 0, 2)).reshape(qs.shape[0], nb * k)
+    top_s, pos = jax.lax.top_k(s_all, k)
+    top_i = jnp.take_along_axis(i_all, pos, axis=1)
+    # contract: an empty (-inf) pool slot is idx -1 in EVERY mode, so a
+    # downstream exact rescore can never resurrect an out-of-window row
+    return top_s, jnp.where(jnp.isfinite(top_s), top_i, -1)
+
+
+def temporal_window_topk_q8(q, c8, scale, valid_from, valid_to, t0s, t1s,
+                            k: int, bn: int = 512, mode: str | None = None):
+    """Quantized fused window-overlap scoring (DESIGN.md §11): the
+    candidate-generation half of the temporal tier's quantized scan.
+
+    q: (Q, D) fp32 UNscaled queries; c8: (N, D) int8 resident history;
+    scale: (D,) per-dimension quantization scale (folded into the
+    queries once — asymmetric distance); validity columns and per-query
+    windows exactly as ``temporal_window_topk``. Callers over-fetch
+    (k' = rescore_factor * k) and exactly rescore in fp32. The overlap
+    filter runs before ranking in EVERY mode, so the leakage guarantee
+    is identical to the fp32 path."""
+    mode = kernel_mode_q8(mode)
+    q = np.atleast_2d(np.asarray(q, np.float32))
+    c8 = np.asarray(c8, np.int8)
+    scale = np.asarray(scale, np.float32)
+    t0s = np.broadcast_to(np.asarray(t0s, np.int64), (q.shape[0],))
+    t1s = np.broadcast_to(np.asarray(t1s, np.int64), (q.shape[0],))
+    k = int(min(k, c8.shape[0]))
+    if c8.shape[0] == 0 or k == 0:
+        return (np.zeros((q.shape[0], 0), np.float32),
+                np.zeros((q.shape[0], 0), np.int32))
+    from ...index.quant import fold_scale
+    qs = fold_scale(q, scale)
+    vf = np.asarray(valid_from, np.int64)
+    vt = np.asarray(valid_to, np.int64)
+    if mode == "ref":
+        s, i = temporal_window_topk_q8_ref(qs, c8, vf, vt, t0s, t1s, k)
+        return s, np.where(np.isfinite(s), i, -1)
+    if mode == "host":
+        from ..qscan import asym_scores_host, pool_topk_host
+        scores = asym_scores_host(qs, c8)
+        valid = (vf[None, :] < t1s[:, None]) & (t0s[:, None] < vt[None, :])
+        scores[~valid] = -np.inf
+        return pool_topk_host(scores, k)
+    vf_hi, vf_lo = _split_dev(vf)
+    vt_hi, vt_lo = _split_dev(vt)
+    t0_hi, t0_lo = _split_dev(t0s)
+    t1_hi, t1_lo = _split_dev(t1s)
+    bn = int(min(bn, max(128, c8.shape[0])))
+    return _temporal_topk_q8_jit(
+        jnp.asarray(qs), jnp.asarray(c8),
+        vf_hi, vf_lo, vt_hi, vt_lo, t0_hi, t0_lo, t1_hi, t1_lo,
+        k, bn, mode == "interpret")
 
 
 def temporal_topk(q, corpus, valid_from, valid_to, ts: int, k: int,

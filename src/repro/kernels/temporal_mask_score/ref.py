@@ -34,6 +34,18 @@ def temporal_window_topk_ref(q: np.ndarray, corpus: np.ndarray,
     return top.astype(np.float32), idx.astype(np.int32)
 
 
+def temporal_window_topk_q8_ref(qs: np.ndarray, c8: np.ndarray,
+                                valid_from: np.ndarray, valid_to: np.ndarray,
+                                t0s: np.ndarray, t1s: np.ndarray,
+                                k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Oracle for the quantized temporal scan: ``qs`` is the
+    scale-folded fp32 query block, ``c8`` the int8 history — the scores
+    are the exact dequantized asymmetric dot products, and the overlap
+    filter still precedes ranking (leakage guard unchanged)."""
+    return temporal_window_topk_ref(qs, np.asarray(c8, np.float32),
+                                    valid_from, valid_to, t0s, t1s, k)
+
+
 def temporal_topk_ref(q: np.ndarray, corpus: np.ndarray,
                       valid_from: np.ndarray, valid_to: np.ndarray,
                       ts: int, k: int) -> tuple[np.ndarray, np.ndarray]:

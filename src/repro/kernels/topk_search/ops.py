@@ -6,9 +6,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ..common import kernel_mode, pad_to
-from .ref import topk_search_ref
-from .topk_search import topk_block_candidates
+import numpy as np
+
+from ..common import kernel_mode, kernel_mode_q8, pad_to
+from .ref import topk_search_q8_ref, topk_search_ref
+from .topk_search import topk_block_candidates, topk_block_candidates_q8
 
 
 @functools.partial(jax.jit, static_argnames=("k", "bn", "mode"))
@@ -42,3 +44,59 @@ def topk_search(q, corpus, mask, k: int, bn: int = 512,
     k = int(min(k, corpus.shape[0]))
     bn = int(min(bn, max(128, corpus.shape[0])))
     return _topk_search_jit(q, corpus, mask, k, bn, kernel_mode(mode))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bn", "mode"))
+def _topk_search_q8_jit(qs, c8, mask, k: int, bn: int, mode: str):
+    if mode == "ref":
+        top_s, top_i = topk_search_q8_ref(qs, c8, mask, k)
+        return top_s, jnp.where(jnp.isfinite(top_s), top_i, -1)
+    c8_p, _ = pad_to(c8, 0, bn)
+    mask_p, _ = pad_to(mask, 0, bn, value=False)
+    s_blk, i_blk = topk_block_candidates_q8(
+        qs, c8_p, mask_p, k, bn=bn, interpret=(mode == "interpret"))
+    nb = s_blk.shape[0]
+    s_all = jnp.transpose(s_blk, (1, 0, 2)).reshape(qs.shape[0], nb * k)
+    i_all = jnp.transpose(i_blk, (1, 0, 2)).reshape(qs.shape[0], nb * k)
+    top_s, pos = jax.lax.top_k(s_all, k)
+    top_i = jnp.take_along_axis(i_all, pos, axis=1)
+    # contract: an empty (-inf) pool slot is idx -1 in EVERY mode, so a
+    # downstream exact rescore can never resurrect a masked row
+    return top_s, jnp.where(jnp.isfinite(top_s), top_i, -1)
+
+
+def topk_search_q8(q, c8, scale, mask, k: int, bn: int = 512,
+                   mode: str | None = None):
+    """Masked top-k ASYMMETRIC search over an int8 corpus (DESIGN.md
+    §11): candidate generation for the quantized scan fabric.
+
+    q: (Q, D) fp32 queries (UNscaled); c8: (N, D) int8; scale: (D,)
+    per-dimension quantization scale; mask: (N,) bool. The scale is
+    folded into the queries once, so every mode scores the exact
+    dequantized dot product q . (c8 * scale) without materializing a
+    fp32 corpus. Returns (scores (Q, k), idx (Q, k)) — callers
+    over-fetch (k' = rescore_factor * final_k) and exactly rescore the
+    pool in fp32 (index/quant.rescore_topk); the scores returned here
+    are the approximate pool scores, not the final ranking.
+
+    Modes: pallas/interpret = the streaming int8 Pallas kernel; ref =
+    pure-jnp oracle; host = CPU integer-GEMM scan (kernels/qscan, auto
+    default off-TPU)."""
+    mode = kernel_mode_q8(mode)
+    q = np.atleast_2d(np.asarray(q, np.float32))
+    c8 = np.asarray(c8, np.int8)
+    scale = np.asarray(scale, np.float32)
+    k = int(min(k, c8.shape[0]))
+    if c8.shape[0] == 0 or k == 0:
+        return (np.zeros((q.shape[0], 0), np.float32),
+                np.zeros((q.shape[0], 0), np.int32))
+    from ...index.quant import fold_scale
+    qs = fold_scale(q, scale)
+    if mode == "host":
+        from ..qscan import asym_scores_host, pool_topk_host
+        scores = asym_scores_host(qs, c8)
+        scores[:, ~np.asarray(mask, bool)] = -np.inf
+        return pool_topk_host(scores, k)
+    bn = int(min(bn, max(128, c8.shape[0])))
+    return _topk_search_q8_jit(jnp.asarray(qs), jnp.asarray(c8),
+                               jnp.asarray(mask, bool), k, bn, mode)

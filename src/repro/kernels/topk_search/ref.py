@@ -13,3 +13,14 @@ def topk_search_ref(q: jax.Array, corpus: jax.Array, mask: jax.Array,
     scores = jnp.where(mask[None, :], scores, -jnp.inf)
     top_s, top_i = jax.lax.top_k(scores, k)
     return top_s, top_i.astype(jnp.int32)
+
+
+def topk_search_q8_ref(qs: jax.Array, c8: jax.Array, mask: jax.Array,
+                       k: int) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the quantized scan: exact dequantized asymmetric
+    distance. ``qs`` is the scale-folded fp32 query block, ``c8`` the
+    int8 corpus — (qs . c8_row) IS q . dequantize(c8_row)."""
+    scores = jnp.dot(qs.astype(jnp.float32), c8.astype(jnp.float32).T)
+    scores = jnp.where(mask[None, :], scores, -jnp.inf)
+    top_s, top_i = jax.lax.top_k(scores, k)
+    return top_s, top_i.astype(jnp.int32)

@@ -51,6 +51,38 @@ def _kernel(q_ref, c_ref, mask_ref, out_s_ref, out_i_ref, *, k: int, bn: int):
     jax.lax.fori_loop(0, k, body, scores)
 
 
+def _kernel_q8(q_ref, c_ref, mask_ref, out_s_ref, out_i_ref, *, k: int,
+               bn: int):
+    """int8-corpus variant (DESIGN.md §11): the corpus block arrives as
+    int8 (1 byte/element of HBM->VMEM traffic instead of 4 — the scan is
+    bandwidth-bound, so this is the whole win) and is dequantized
+    IN-REGISTER by the astype; the per-dimension quantization scale is
+    already folded into the fp32 queries by the wrapper, so the dot
+    below IS the exact dequantized asymmetric distance."""
+    j = pl.program_id(0)
+    q = q_ref[...]                                       # (Q, D) fp32
+    c = c_ref[...].astype(jnp.float32)                   # (bn, D) int8 -> f32
+    scores = jax.lax.dot_general(
+        q, c, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (Q, bn)
+    active = mask_ref[...]
+    scores = jnp.where(active[None, :], scores, -jnp.inf)
+
+    idx_base = (j * bn).astype(jnp.int32)
+    cols = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+
+    def body(t, s):
+        best = jnp.max(s, axis=1)
+        arg = jnp.argmax(s, axis=1).astype(jnp.int32)
+        pl.store(out_s_ref, (pl.dslice(0, 1), slice(None), pl.dslice(t, 1)),
+                 best[None, :, None])
+        pl.store(out_i_ref, (pl.dslice(0, 1), slice(None), pl.dslice(t, 1)),
+                 (arg + idx_base)[None, :, None])
+        return jnp.where(cols == arg[:, None], -jnp.inf, s)
+
+    jax.lax.fori_loop(0, k, body, scores)
+
+
 def topk_block_candidates(q: jax.Array, corpus: jax.Array, mask: jax.Array,
                           k: int, bn: int = 512,
                           interpret: bool = False) -> tuple[jax.Array, jax.Array]:
@@ -79,3 +111,35 @@ def topk_block_candidates(q: jax.Array, corpus: jax.Array, mask: jax.Array,
         ],
         interpret=interpret,
     )(q, corpus, mask)
+
+
+def topk_block_candidates_q8(qs: jax.Array, c8: jax.Array, mask: jax.Array,
+                             k: int, bn: int = 512, interpret: bool = False
+                             ) -> tuple[jax.Array, jax.Array]:
+    """Stage 1 of the quantized scan: per-block top-k over an int8
+    corpus. ``qs`` is the (Q, D) fp32 query block with the per-dimension
+    quantization scale already folded in; ``c8`` is (N, D) int8 with
+    N % bn == 0. Same streaming BlockSpec shape as the fp32 kernel —
+    only the corpus byte width changes."""
+    n, d = c8.shape
+    nq = qs.shape[0]
+    assert n % bn == 0, (n, bn)
+    kern = functools.partial(_kernel_q8, k=k, bn=bn)
+    return pl.pallas_call(
+        kern,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((nq, d), lambda j: (0, 0)),     # queries: resident
+            pl.BlockSpec((bn, d), lambda j: (j, 0)),     # int8 block stream
+            pl.BlockSpec((bn,), lambda j: (j,)),         # active mask block
+        ],
+        out_specs=[
+            pl.BlockSpec((1, nq, k), lambda j: (j, 0, 0)),
+            pl.BlockSpec((1, nq, k), lambda j: (j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n // bn, nq, k), jnp.float32),
+            jax.ShapeDtypeStruct((n // bn, nq, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qs, c8, mask)

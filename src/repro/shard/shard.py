@@ -96,6 +96,7 @@ class ShardFabric:
                  embedder_factory=None, hot_capacity: int = 4096,
                  cold_checkpoint_interval: int = 8,
                  temporal_fused: Optional[bool] = None,
+                 quantized: Optional[bool] = None,
                  auto_resume_rebalance: bool = True):
         """Open (or bootstrap) a shard fabric at ``root``.
 
@@ -114,7 +115,8 @@ class ShardFabric:
         self._lake_kwargs = dict(
             dim=dim, hot_capacity=hot_capacity,
             cold_checkpoint_interval=cold_checkpoint_interval,
-            temporal_fused=temporal_fused)
+            temporal_fused=temporal_fused,
+            quantized=bool(quantized))
         state = self.manifest.load()
         if state is None:
             if self.manifest.exists():
@@ -127,8 +129,18 @@ class ShardFabric:
                                   "lake": self._persisted_lake_config()})
             state = self.manifest.load()
         # the manifest is the root of trust: adopt the persisted lake
-        # geometry so a bare ShardFabric(root) reopens correctly
+        # geometry so a bare ShardFabric(root) reopens correctly; an
+        # EXPLICIT quantized flag is the one deliberate override (format
+        # switch, like LiveVectorLake's STORE.json) and is re-persisted
+        # (compare against the MANIFEST's value, absent on pre-§11
+        # manifests — not the ctor-seeded kwargs, which always match)
+        persisted_q = bool(state.get("lake", {}).get("quantized", False))
         self._lake_kwargs.update(state.get("lake", {}))
+        if quantized is not None and persisted_q != bool(quantized):
+            self._lake_kwargs["quantized"] = bool(quantized)
+            self.manifest.commit({"ring": state["ring"],
+                                  "transition": state.get("transition"),
+                                  "lake": self._persisted_lake_config()})
         self.ring = HashRing.from_dict(state["ring"])
         self._lakes: dict[str, ShardLake] = {}
         self._last_ts = 0
@@ -139,13 +151,14 @@ class ShardFabric:
             self.recover()
 
     def _persisted_lake_config(self) -> dict:
-        # dim/capacity/checkpointing persist (reopening must not depend
-        # on the caller remembering them); embedder_factory and
+        # dim/capacity/checkpointing/quantization persist (reopening must
+        # not depend on the caller remembering them — a quantized shard's
+        # segments are quantized ON DISK); embedder_factory and
         # temporal_fused stay per-process (not serializable / a debug
         # switch)
         return {k: self._lake_kwargs[k]
                 for k in ("dim", "hot_capacity",
-                          "cold_checkpoint_interval")}
+                          "cold_checkpoint_interval", "quantized")}
 
     def commit_state(self, ring: dict, transition: Optional[dict]) -> int:
         """Commit a new fabric epoch, carrying the persistent lake

@@ -1,13 +1,21 @@
-"""Kernel validation: fused top-k search + temporal masked scoring vs the
-pure oracles, interpret=True on CPU, swept over shapes/dtypes."""
+"""Kernel validation: fused top-k search + temporal masked scoring (fp32
+and the int8 asymmetric q8 variants) vs the pure oracles, interpret=True
+on CPU, swept over shapes/dtypes."""
 import numpy as np
 import pytest
 
 from repro.core.types import VALID_TO_OPEN
-from repro.kernels.topk_search.ops import topk_search
+from repro.index.quant import (data_scale, fixed_scale, quantize_rows,
+                               rescore_topk)
+from repro.kernels.topk_search.ops import topk_search, topk_search_q8
 from repro.kernels.topk_search.ref import topk_search_ref
-from repro.kernels.temporal_mask_score.ops import temporal_topk
+from repro.kernels.temporal_mask_score.ops import (temporal_topk,
+                                                   temporal_window_topk_q8)
 from repro.kernels.temporal_mask_score.ref import temporal_topk_ref
+
+# the q8 kernel modes exercised on CPU ("pallas" needs a TPU; "host" is
+# the integer-GEMM serving path, "interpret" the lowered Pallas body)
+Q8_MODES = ("ref", "interpret", "host")
 
 
 def _rand(shape, seed=0):
@@ -52,6 +60,201 @@ def test_topk_ref_mode_matches_interpret():
     s_i, _ = topk_search(q, c, mask, 9, mode="interpret")
     np.testing.assert_allclose(np.asarray(s_r), np.asarray(s_i),
                                rtol=1e-5, atol=1e-5)
+
+
+class TestQ8TopkKernel:
+    """ISSUE 5: edge parity for the int8 asymmetric top-k kernel across
+    ref / interpret / host modes, plus pool+rescore exactness."""
+
+    @pytest.mark.parametrize("nq,n,d,k,bn", [
+        (1, 256, 128, 5, 128),
+        (4, 1000, 384, 10, 256),     # n not a multiple of bn -> padding
+        (2, 130, 384, 7, 128),
+        (3, 64, 256, 64, 128),       # k == n
+    ])
+    @pytest.mark.parametrize("mode", Q8_MODES)
+    def test_pool_covers_exact_topk(self, nq, n, d, k, bn, mode):
+        """With a 4x over-fetched pool and exact fp32 rescore, the q8
+        path must recover the fp32 oracle's top-k row set (scores
+        fp32-exact by construction)."""
+        q, c = _rand((nq, d), 1), _rand((n, d), 2)
+        mask = np.random.default_rng(3).random(n) > 0.3
+        c8 = quantize_rows(c, data_scale(c))
+        kp = min(4 * k, n)
+        _, pool = topk_search_q8(q, c8, data_scale(c), mask, kp,
+                                 bn=bn, mode=mode)
+        s_q, i_q = rescore_topk(q, np.asarray(pool), c, min(k, n))
+        s_ref, i_ref = topk_search_ref(q, c, mask, min(k, n))
+        s_ref = np.asarray(s_ref)
+        fin = np.isfinite(s_ref)
+        np.testing.assert_allclose(s_q[fin], s_ref[fin],
+                                   rtol=1e-5, atol=1e-5)
+        for qi in range(nq):
+            want = set(np.asarray(i_ref)[qi][fin[qi]].tolist())
+            got = set(i_q[qi][np.isfinite(s_q[qi])].tolist())
+            assert got == want, mode
+
+    @pytest.mark.parametrize("mode", Q8_MODES)
+    def test_all_masked_returns_neg_inf_and_minus_one(self, mode):
+        q, c = _rand((2, 64)), _rand((100, 64))
+        c8 = quantize_rows(c, fixed_scale(64))
+        s, i = topk_search_q8(q, c8, fixed_scale(64),
+                              np.zeros(100, bool), 5, mode=mode)
+        assert np.all(np.isneginf(np.asarray(s))), mode
+        # the -1 contract: a rescore can never resurrect a masked row
+        assert np.all(np.asarray(i) == -1), mode
+
+    @pytest.mark.parametrize("mode", Q8_MODES)
+    def test_k_exceeds_valid_candidates(self, mode):
+        q, c = _rand((2, 64), 1), _rand((64, 64), 2)
+        mask = np.zeros(64, bool)
+        mask[:3] = True
+        c8 = quantize_rows(c, fixed_scale(64))
+        s, i = topk_search_q8(q, c8, fixed_scale(64), mask, 10, mode=mode)
+        s, i = np.asarray(s), np.asarray(i)
+        for qi in range(2):
+            fin = np.isfinite(s[qi])
+            assert fin.sum() == 3, mode
+            assert set(i[qi][fin]) == {0, 1, 2}, mode
+            assert np.all(i[qi][~fin] == -1), mode
+
+    @pytest.mark.parametrize("mode", Q8_MODES)
+    def test_empty_corpus(self, mode):
+        c8 = np.zeros((0, 32), np.int8)
+        s, i = topk_search_q8(_rand((2, 32)), c8, fixed_scale(32),
+                              np.zeros(0, bool), 5, mode=mode)
+        assert np.asarray(s).shape == (2, 0)
+
+    def test_host_numpy_fallback_matches_torch_path(self, monkeypatch):
+        """The blocked cast+sgemm fallback (torch absent) must select
+        the same pool membership as the integer-GEMM path after exact
+        rescore — torch is an accelerator, never a dependency."""
+        from repro.kernels import qscan
+        q, c = _rand((3, 96), 11), _rand((400, 96), 12)
+        scale = data_scale(c)
+        c8 = quantize_rows(c, scale)
+        mask = np.ones(400, bool)
+        _, pool_fast = topk_search_q8(q, c8, scale, mask, 32, mode="host")
+        monkeypatch.setattr(qscan, "_TORCH", None)
+        assert not qscan.have_int8_host()
+        _, pool_slow = topk_search_q8(q, c8, scale, mask, 32, mode="host")
+        _, i_fast = rescore_topk(q, np.asarray(pool_fast), c, 8)
+        _, i_slow = rescore_topk(q, np.asarray(pool_slow), c, 8)
+        np.testing.assert_array_equal(i_fast, i_slow)
+
+    def test_modes_agree_on_pool_membership(self):
+        """ref vs interpret must be score-identical (same math); the
+        host path (query also quantized) may perturb pool ORDER but the
+        exact rescore of each pool must agree on the final top-k."""
+        q, c = _rand((3, 128), 5), _rand((700, 128), 6)
+        scale = data_scale(c)
+        c8 = quantize_rows(c, scale)
+        mask = np.ones(700, bool)
+        s_r, i_r = topk_search_q8(q, c8, scale, mask, 40, mode="ref")
+        s_i, i_i = topk_search_q8(q, c8, scale, mask, 40, mode="interpret")
+        np.testing.assert_allclose(np.asarray(s_r), np.asarray(s_i),
+                                   rtol=1e-5, atol=1e-5)
+        for mode in Q8_MODES:
+            _, pool = topk_search_q8(q, c8, scale, mask, 40, mode=mode)
+            _, i_k = rescore_topk(q, np.asarray(pool), c, 10)
+            _, pool_r = topk_search_q8(q, c8, scale, mask, 40, mode="ref")
+            _, i_ref = rescore_topk(q, np.asarray(pool_r), c, 10)
+            np.testing.assert_array_equal(i_k, i_ref, err_msg=mode)
+
+
+class TestQ8TemporalKernel:
+    """ISSUE 5: edge parity for the int8 temporal validity-masked kernel
+    — the leakage guard must be byte-for-byte as strict as fp32."""
+
+    def _corpus(self, n, d=64, seed=0):
+        rng = np.random.default_rng(seed)
+        c = _rand((n, d), seed)
+        base = 1_700_000_000_000_000
+        vf = base + rng.integers(0, 10**6, n).astype(np.int64)
+        vt = np.where(rng.random(n) < 0.5, VALID_TO_OPEN,
+                      vf + rng.integers(1, 10**6, n)).astype(np.int64)
+        return c, vf, vt, base
+
+    @pytest.mark.parametrize("mode", Q8_MODES)
+    def test_windows_match_fp32_oracle_after_rescore(self, mode):
+        from repro.kernels.temporal_mask_score.ref import (
+            temporal_window_topk_ref)
+        c, vf, vt, base = self._corpus(300, seed=7)
+        q = _rand((4, 64), 8)
+        scale = fixed_scale(64)
+        c8 = quantize_rows(c, scale)
+        t0s = np.array([vf.min(), vf.min() + 500_000,
+                        vf.max(), vf.min() - 10], np.int64)
+        t1s = t0s + np.array([1, 300_000, 10**9, 5], np.int64)
+        s_ref, i_ref = temporal_window_topk_ref(q, c, vf, vt, t0s, t1s, 6)
+        _, pool = temporal_window_topk_q8(q, c8, scale, vf, vt, t0s, t1s,
+                                          24, bn=128, mode=mode)
+        s_q, i_q = rescore_topk(q, np.asarray(pool), c, 6)
+        fin = np.isfinite(s_ref)
+        np.testing.assert_allclose(s_q[fin], s_ref[fin],
+                                   rtol=1e-5, atol=1e-5)
+        # every returned row must overlap its OWN query's window
+        for qi in range(4):
+            for j in i_q[qi][np.isfinite(s_q[qi])]:
+                assert vf[j] < t1s[qi] and t0s[qi] < vt[j], mode
+
+    @pytest.mark.parametrize("mode", Q8_MODES)
+    def test_all_rows_out_of_window(self, mode):
+        c, vf, vt, _ = self._corpus(200)
+        scale = fixed_scale(64)
+        c8 = quantize_rows(c, scale)
+        ts = int(vf.min()) - 1
+        b = np.full(3, ts, np.int64)
+        s, i = temporal_window_topk_q8(_rand((3, 64), 1), c8, scale,
+                                       vf, vt, b, b + 1, 7, mode=mode)
+        assert np.all(np.isneginf(np.asarray(s))), mode
+        assert np.all(np.asarray(i) == -1), mode
+
+    @pytest.mark.parametrize("mode", Q8_MODES)
+    def test_k_exceeds_valid(self, mode):
+        c, vf, vt, _ = self._corpus(64)
+        ts = int(vf.min())
+        vf = vf.copy(); vt = vt.copy()
+        vf[:] = ts + 1
+        vf[:3] = ts
+        vt[:3] = VALID_TO_OPEN
+        scale = fixed_scale(64)
+        b = np.full(2, ts, np.int64)
+        s, i = temporal_window_topk_q8(_rand((2, 64), 2),
+                                       quantize_rows(c, scale), scale,
+                                       vf, vt, b, b + 1, 10, mode=mode)
+        s, i = np.asarray(s), np.asarray(i)
+        for qi in range(2):
+            fin = np.isfinite(s[qi])
+            assert fin.sum() == 3, mode
+            assert set(i[qi][fin]) == {0, 1, 2}, mode
+
+    @pytest.mark.parametrize("n", [1, 127, 129, 513])
+    @pytest.mark.parametrize("mode", ("interpret",))
+    def test_non_multiple_of_block_rows(self, n, mode):
+        """Padding path: padded int8 rows carry an empty validity
+        interval and can never rank."""
+        c, vf, vt, _ = self._corpus(n, seed=n)
+        scale = fixed_scale(64)
+        ts = int(np.median(vf))
+        b = np.full(2, ts, np.int64)
+        s, i = temporal_window_topk_q8(_rand((2, 64), 4),
+                                       quantize_rows(c, scale), scale,
+                                       vf, vt, b, b + 1, 5, bn=128,
+                                       mode=mode)
+        fin = np.isfinite(np.asarray(s))
+        assert np.all(np.asarray(i)[fin] < n)         # no padded index
+        assert np.all(np.asarray(i)[~fin] == -1)
+
+    @pytest.mark.parametrize("mode", Q8_MODES)
+    def test_empty_history(self, mode):
+        c8 = np.zeros((0, 32), np.int8)
+        empty = np.zeros(0, np.int64)
+        s, i = temporal_window_topk_q8(_rand((2, 32), 3), c8,
+                                       fixed_scale(32), empty, empty,
+                                       np.zeros(2, np.int64),
+                                       np.ones(2, np.int64), 5, mode=mode)
+        assert np.asarray(s).shape == (2, 0)
 
 
 class TestTemporalKernel:
