@@ -1,0 +1,134 @@
+"""Tracing overhead on the fused-scan hot path (DESIGN.md §12 gate —
+ISSUE 6).
+
+The observability layer's design center is the no-op fast path: when no
+trace is active, every ``span()``/``add()`` call in the instrumented
+scan code returns a shared singleton without allocating or reading the
+clock. This suite measures the fused exact top-k scan (the memtable
+fused-block dispatch, the hottest instrumented path) in two modes:
+
+  - noop:   no trace active — the production default; instrumented
+            code exercises only the no-op guards;
+  - traced: every search runs under an active trace, so each dispatch
+            records real spans (fused_scan + kernel:topk_search).
+
+Samples ALTERNATE between the modes (cancels thermal/clock drift) and
+each mode takes the median, so the reported overhead is the marginal
+cost of span recording, not run-to-run noise. Gate: traced mode within
+2% of no-op mode — asserted here and in CI bench-smoke.
+
+  PYTHONPATH=src python -m benchmarks.obs_overhead [--smoke] [--json out.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro import obs
+from repro.core.types import ChunkRecord
+from repro.index.lsm import SegmentedIndex
+
+from .common import Timer
+from .search_scaling import make_corpus
+
+
+def overhead_point(n: int, dim: int, nq: int, k: int,
+                   inner: int = 4, samples: int = 15,
+                   seed: int = 0, root: str | None = None) -> dict:
+    corpus, queries = make_corpus(n, dim, nq, seed)
+    q = queries[:nq]
+    idx = SegmentedIndex(dim, mem_capacity=n, root=root)
+    idx.insert([ChunkRecord(chunk_id=f"c{i}", doc_id=f"d{i}", position=0,
+                            valid_from=1 + i, text=f"row {i}",
+                            embedding=corpus[i]) for i in range(n)])
+
+    def search_noop():
+        for _ in range(inner):
+            idx.search(q, k=k)
+
+    def search_traced():
+        with obs.trace("obs_overhead"):
+            for _ in range(inner):
+                idx.search(q, k=k)
+
+    # warm-up: jit compile + catalog build happen before any timing
+    search_traced()
+    search_noop()
+    time.sleep(0.25)
+    xs: dict[str, list[float]] = {"noop": [], "traced": []}
+    for _ in range(samples):       # alternate modes to cancel drift
+        for tag, fn in (("noop", search_noop), ("traced", search_traced)):
+            with Timer() as t:
+                fn()
+            xs[tag].append(t.elapsed * 1e3 / inner)
+    noop_ms = float(np.median(xs["noop"]))
+    traced_ms = float(np.median(xs["traced"]))
+    # spans recorded per traced search: fused_scan + kernel dispatch
+    tr = obs.SLOW_QUERIES.slowest
+    spans = 0
+    if tr is not None and tr.name == "obs_overhead":
+        spans = len(tr.root.find_prefix("")) - 1
+    return {
+        "n": n, "dim": dim, "nq": nq, "k": k,
+        "inner": inner, "samples": samples,
+        "noop_ms": noop_ms, "traced_ms": traced_ms,
+        "overhead_pct": (traced_ms / max(noop_ms, 1e-9) - 1.0) * 100.0,
+        "spans_per_sample": spans,
+    }
+
+
+def run(smoke: bool = False, seed: int = 0) -> dict:
+    import tempfile
+    n = 16_000 if smoke else 32_000
+    with tempfile.TemporaryDirectory() as root:
+        point = overhead_point(n, dim=384, nq=8, k=10, seed=seed,
+                               root=root)
+    gate = {
+        "overhead_pct": point["overhead_pct"],
+        "max_overhead_pct": 2.0,
+        "pass": point["overhead_pct"] < 2.0,
+    }
+    return {"point": point, "gate": gate, "smoke": smoke,
+            "timestamp": time.time()}
+
+
+def rows_from(result: dict) -> list[tuple]:
+    p = result["point"]
+    g = result["gate"]
+    tag = f"obs_overhead/n{p['n']}"
+    return [
+        (f"{tag}/noop_ms", p["noop_ms"],
+         "fused scan, no trace active (production default)"),
+        (f"{tag}/traced_ms", p["traced_ms"],
+         f"{p['spans_per_sample']} spans recorded per sample"),
+        (f"{tag}/overhead_pct", p["overhead_pct"], "gate <2%"),
+        ("obs_overhead/gate_pass", float(g["pass"]),
+         f"traced vs noop {p['overhead_pct']:+.2f}% "
+         f"(max {g['max_overhead_pct']}%)"),
+    ]
+
+
+def main(smoke: bool = False) -> list[tuple]:
+    result = run(smoke=smoke)
+    rows = rows_from(result)
+    assert result["gate"]["pass"], result["gate"]
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small sizes for CI")
+    ap.add_argument("--json", type=str, default=None,
+                    help="write the full result record to PATH")
+    args = ap.parse_args()
+    result = run(smoke=args.smoke)
+    for name, val, note in rows_from(result):
+        print(f"{name},{val:.4f},{note}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=1)
+    if not result["gate"]["pass"]:
+        raise SystemExit(f"obs_overhead gate FAILED: {result['gate']}")

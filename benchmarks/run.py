@@ -12,6 +12,7 @@ Prints ``name,value,derived`` CSV rows:
   DESIGN §9 -> temporal_scaling
   DESIGN §10-> shard_scaling
   DESIGN §11-> quantized_scan
+  DESIGN §12-> obs_overhead (trend diffing: ``python -m benchmarks.trend``)
 
 ``--smoke`` shrinks every suite to CI sizes (each suite's ``main``
 honors the flag); ``--only`` runs a comma-separated subset. ``--json
@@ -43,10 +44,11 @@ def main() -> None:
                     help="write a consolidated per-suite record to PATH")
     args = ap.parse_args()
 
-    from . import (change_detection, query_latency, query_throughput,
-                   quantized_scan, search_scaling, shard_scaling,
-                   storage_efficiency, streaming_churn, temporal_accuracy,
-                   temporal_scaling, update_performance)
+    from . import (change_detection, obs_overhead, query_latency,
+                   query_throughput, quantized_scan, search_scaling,
+                   shard_scaling, storage_efficiency, streaming_churn,
+                   temporal_accuracy, temporal_scaling,
+                   update_performance)
     suites = [
         ("update_performance", update_performance),
         ("query_latency", query_latency),
@@ -59,6 +61,7 @@ def main() -> None:
         ("query_throughput", query_throughput),
         ("shard_scaling", shard_scaling),
         ("quantized_scan", quantized_scan),
+        ("obs_overhead", obs_overhead),
     ]
     if args.only:
         keep = {s.strip() for s in args.only.split(",")}

@@ -1,0 +1,225 @@
+"""PR-over-PR bench trend gating (DESIGN.md §12 — ISSUE 6).
+
+Diffs two consolidated benchmark records (the ``BENCH_PR<N>.json``
+files written by ``benchmarks.run --json``) and renders a per-suite
+regression table. Exit code 1 on any gated regression, so CI can run
+
+  PYTHONPATH=src python -m benchmarks.trend BENCH_PR5.json BENCH_PR6.json
+
+Metric classes (by name, precedence top to bottom):
+
+  quality-low   leakage / false_* — machine-independent correctness;
+                ANY rise beyond ``quality_drop`` (abs, default 0.02)
+                fails.
+  quality-high  recall / precision / accuracy / gate / pass /
+                identical / hot_faster — machine-independent; any drop
+                beyond ``quality_drop`` fails.
+  perf-high     speedup / qps / throughput / reduction / savings /
+                mrows — higher is better; gated LOOSELY (default
+                allows 2x regression) because the committed baseline
+                and the CI runner are different machines.
+  perf-low      *_ms / latency / stall / bytes / reprocessed /
+                amplification / time_to_query — lower is better, same
+                loose ratio gate; rows whose baseline is below
+                ``min_base`` (sub-noise-floor timings) are
+                informational only.
+  info          wall_s, counts, and anything unmatched — reported,
+                never gated.
+
+A suite that ERRORS in the new record while the baseline had rows is
+itself a gated failure; new suites/rows are reported as ``new``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+_QUALITY_LOW = ("leakage", "false_positives", "false_negatives")
+_QUALITY_HIGH = ("recall", "precision", "accuracy", "gate", "pass",
+                 "identical", "hot_faster")
+_PERF_HIGH = ("speedup", "qps", "throughput", "reduction", "savings",
+              "mrows")
+_PERF_LOW = ("_ms", "latency", "stall", "bytes", "reprocessed",
+             "amplification", "time_to_query")
+
+
+def classify(name: str) -> str:
+    low = name.lower()
+    if "wall" in low:
+        return "info"
+    for pats, cls in ((_QUALITY_LOW, "quality-low"),
+                      (_QUALITY_HIGH, "quality-high"),
+                      (_PERF_HIGH, "perf-high"),
+                      (_PERF_LOW, "perf-low")):
+        if any(p in low for p in pats):
+            return cls
+    return "info"
+
+
+def _judge(cls: str, base: float, new: float, max_regression: float,
+           quality_drop: float, min_base: float) -> str:
+    """'ok' | 'improved' | 'REGRESSED' for one aligned metric row."""
+    delta = new - base
+    if cls == "quality-low":
+        if delta > quality_drop:
+            return "REGRESSED"
+        return "improved" if delta < -quality_drop else "ok"
+    if cls == "quality-high":
+        if delta < -quality_drop:
+            return "REGRESSED"
+        return "improved" if delta > quality_drop else "ok"
+    allowed = 1.0 + max_regression
+    if cls == "perf-high":
+        if base > min_base and new < base / allowed:
+            return "REGRESSED"
+        return "improved" if new > base * 1.1 else "ok"
+    if cls == "perf-low":
+        if base > min_base and new > base * allowed:
+            return "REGRESSED"
+        return "improved" if base > min_base and new < base / 1.1 else "ok"
+    return "ok"
+
+
+def compare(base_record: dict, new_record: dict,
+            max_regression: float = 1.0, quality_drop: float = 0.02,
+            min_base: float = 0.5) -> dict:
+    """Align two consolidated records row-by-row. Returns
+    ``{"rows": [...], "failures": [...], "suites": {...}}`` where each
+    row dict has suite/name/class/base/new/status."""
+    rows = []
+    failures = []
+    suites: dict[str, str] = {}
+    base_suites = base_record.get("suites", {})
+    new_suites = new_record.get("suites", {})
+    for suite in sorted(set(base_suites) | set(new_suites)):
+        b = base_suites.get(suite)
+        n = new_suites.get(suite)
+        if b is None:
+            suites[suite] = "new"
+            continue
+        if n is None or ("rows" in b and "error" in n):
+            suites[suite] = "MISSING"
+            failures.append(f"suite {suite}: present in baseline but "
+                            f"{'errored' if n else 'absent'} in new run")
+            continue
+        suites[suite] = "ok"
+        b_rows = {r[0]: float(r[1]) for r in b.get("rows", [])}
+        n_rows = {r[0]: float(r[1]) for r in n.get("rows", [])}
+        for name in sorted(set(b_rows) | set(n_rows)):
+            if name not in b_rows:
+                rows.append({"suite": suite, "name": name,
+                             "class": classify(name), "base": None,
+                             "new": n_rows[name], "status": "new"})
+                continue
+            if name not in n_rows:
+                rows.append({"suite": suite, "name": name,
+                             "class": classify(name),
+                             "base": b_rows[name], "new": None,
+                             "status": "removed"})
+                continue
+            cls = classify(name)
+            status = _judge(cls, b_rows[name], n_rows[name],
+                            max_regression, quality_drop, min_base)
+            row = {"suite": suite, "name": name, "class": cls,
+                   "base": b_rows[name], "new": n_rows[name],
+                   "status": status}
+            rows.append(row)
+            if status == "REGRESSED":
+                failures.append(
+                    f"{name} [{cls}]: {b_rows[name]:.4f} -> "
+                    f"{n_rows[name]:.4f}")
+    return {"rows": rows, "failures": failures, "suites": suites,
+            "thresholds": {"max_regression": max_regression,
+                           "quality_drop": quality_drop,
+                           "min_base": min_base}}
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "-"
+    return f"{v:.4g}"
+
+
+def render_markdown(cmp: dict, base_label: str = "base",
+                    new_label: str = "new") -> str:
+    th = cmp["thresholds"]
+    lines = [
+        "# Bench trend: "
+        f"{base_label} -> {new_label}",
+        "",
+        f"Gates: quality drop > {th['quality_drop']} (abs), perf "
+        f"regression > {1 + th['max_regression']:.1f}x "
+        f"(baseline > {th['min_base']}).",
+        "",
+        "| suite | metric | class | "
+        f"{base_label} | {new_label} | delta | status |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in cmp["rows"]:
+        if r["base"] is not None and r["new"] is not None:
+            delta = r["new"] - r["base"]
+            ds = f"{delta:+.4g}"
+        else:
+            ds = "-"
+        name = r["name"]
+        if name.startswith(r["suite"] + "/"):
+            name = name[len(r["suite"]) + 1:]
+        mark = {"REGRESSED": "**REGRESSED**", "improved": "improved",
+                "ok": "ok", "new": "new", "removed": "removed"}[r["status"]]
+        lines.append(f"| {r['suite']} | {name} | {r['class']} | "
+                     f"{_fmt(r['base'])} | {_fmt(r['new'])} | {ds} | "
+                     f"{mark} |")
+    for suite, st in cmp["suites"].items():
+        if st != "ok":
+            lines.append(f"| {suite} | (suite) | - | - | - | - | {st} |")
+    lines.append("")
+    if cmp["failures"]:
+        lines.append(f"**{len(cmp['failures'])} gated regression(s):**")
+        lines += [f"- {f}" for f in cmp["failures"]]
+    else:
+        n_ok = sum(r["status"] in ("ok", "improved")
+                   for r in cmp["rows"])
+        lines.append(f"No gated regressions ({n_ok} metrics compared).")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff two consolidated BENCH_PR*.json records and "
+                    "fail on gated regressions")
+    ap.add_argument("base", help="baseline record (previous PR)")
+    ap.add_argument("new", help="new record (this PR)")
+    ap.add_argument("--markdown", type=str, default=None,
+                    help="also write the diff table to PATH")
+    ap.add_argument("--max-regression", type=float, default=1.0,
+                    help="allowed fractional perf regression "
+                         "(1.0 = new may be 2x worse; cross-machine "
+                         "baselines are noisy)")
+    ap.add_argument("--quality-drop", type=float, default=0.02,
+                    help="allowed absolute drop on quality metrics")
+    ap.add_argument("--min-base", type=float, default=0.5,
+                    help="perf rows with baseline below this are "
+                         "informational (sub-noise-floor)")
+    args = ap.parse_args(argv)
+    with open(args.base) as f:
+        base = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+    cmp = compare(base, new, max_regression=args.max_regression,
+                  quality_drop=args.quality_drop, min_base=args.min_base)
+    table = render_markdown(cmp, base_label=args.base, new_label=args.new)
+    print(table)
+    if args.markdown:
+        with open(args.markdown, "w") as f:
+            f.write(table)
+    if cmp["failures"]:
+        print(f"TREND GATE FAILED: {len(cmp['failures'])} regression(s)",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -67,3 +67,19 @@ with tempfile.TemporaryDirectory() as root:
           "different grounded answer.")
     print(f"fact {fact.name}: v0={fact.value_at_version(0)} "
           f"latest={fact.value_at_version(corpus.n_versions-1)}")
+
+    # observability (DESIGN.md §12): every batch above ran under a
+    # trace; print the metrics snapshot and the slowest span tree
+    from repro import obs
+    snap = obs.REGISTRY.snapshot()
+    print("\n-- metrics snapshot (query latency histograms) --")
+    for key, h in snap["histograms"].items():
+        if key.startswith(("query_latency_ms", "trace_ms")):
+            print(f"   {key}: n={h['count']} p50={h['p50']:.2f}ms "
+                  f"p99={h['p99']:.2f}ms")
+    print(f"   scan row-reads: "
+          f"{ {k: int(v) for k, v in snap['counters'].items() if k.startswith('scan_row_reads')} }")
+    print(f"\n-- slow-query log: {obs.SLOW_QUERIES.summary()}")
+    if obs.SLOW_QUERIES.slowest is not None:
+        print("\n-- slowest trace --")
+        print(obs.SLOW_QUERIES.slowest.render())

@@ -82,3 +82,19 @@ with tempfile.TemporaryDirectory() as root:
     print(f"\nreopened at epoch {fab2.stats()['epoch']}: "
           f"ring={fab2.ring.shards} R={fab2.ring.replicas}; "
           f"v1 answer intact: '{r.text[:30]}...'")
+
+    # --- observability (DESIGN.md §12) --------------------------------
+    # fabric-wide health in one call, then the slowest span tree: one
+    # batch = one trace covering batcher -> planner -> every shard ->
+    # kernel dispatch, with per-shard rows_scanned
+    from repro import obs
+    h = fab.health()
+    print(f"\nhealth: planner={h['planner']}")
+    for key, hist in h["metrics"]["histograms"].items():
+        if key.startswith("query_latency_ms"):
+            print(f"   {key}: n={hist['count']} p50={hist['p50']:.2f}ms "
+                  f"p99={hist['p99']:.2f}ms")
+    print(f"   slow queries: {h['slow_queries']}")
+    if obs.SLOW_QUERIES.slowest is not None:
+        print("\nslowest trace:")
+        print(obs.SLOW_QUERIES.slowest.render())

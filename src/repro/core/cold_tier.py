@@ -51,6 +51,7 @@ from typing import Optional
 
 import numpy as np
 
+from .. import obs
 from .hashing import blob_checksum
 from .types import (STATUS_ACTIVE, STATUS_SUPERSEDED,
                     VALID_TO_OPEN, ChunkRecord)
@@ -588,6 +589,7 @@ class ColdTier:
         if only_doc is not None and zone and zone.get("keys") is not None:
             if all(doc != only_doc for doc, _ in zone["keys"]):
                 self.io_counters["segments_pruned"] += 1
+                obs.add("segments_pruned", 1)
                 return                       # document not in this segment
         if as_of_prune is not None and zone and zone.get("keys") is not None \
                 and zone["vf_min"] > as_of_prune:
@@ -595,6 +597,7 @@ class ColdTier:
             # read. Shadow the keys so later closures still route here.
             fold.shadow(zone["keys"])
             self.io_counters["segments_pruned"] += 1
+            obs.add("segments_pruned", 1)
             return
         seg = self.load_segment(e["segment"], e.get("checksum"))
         doc_ids = seg["doc_ids"].tolist()
@@ -640,12 +643,14 @@ class ColdTier:
         if only_doc is not None and a.get("docs") is not None \
                 and only_doc not in a["docs"]:
             self.io_counters["archives_pruned"] += 1
+            obs.add("segments_pruned", 1)
             return
         if as_of_prune is not None and \
                 (a["vt_max"] <= as_of_prune or a["vf_min"] > as_of_prune):
             # the whole archive's validity range misses the instant; its
             # rows are all closed, so nothing to shadow either.
             self.io_counters["archives_pruned"] += 1
+            obs.add("segments_pruned", 1)
             return
         self.io_counters["archive_loads"] += 1
         cols = self._load_npz(

@@ -31,6 +31,7 @@ from .cold_tier import ColdTier
 from .embedder import CachingEmbedder, Embedder, HashProjectionEmbedder
 from .hash_store import HashStore
 from .hot_tier import HotTier
+from ..obs import REGISTRY, span
 from .temporal import (CURRENT, COMPARATIVE, HISTORICAL, TemporalEngine,
                        classify_query)
 from .types import (STATUS_DELETED, STATUS_SUPERSEDED, VALID_TO_OPEN,
@@ -223,26 +224,43 @@ class LiveVectorLake:
         inside a batch."""
         if not texts:
             return []
-        intents = [classify_query(t, at=at, window=window) for t in texts]
-        vecs = self.embedder.embed(list(texts))
-        groups: dict[tuple, list[int]] = {}
-        for i, it in enumerate(intents):
-            groups.setdefault((it.mode, it.at, it.window), []).append(i)
-        out: list[Optional[list[SearchResult]]] = [None] * len(texts)
-        for (mode, g_at, g_window), idxs in groups.items():
-            q = vecs[idxs]
-            if mode == CURRENT:
-                res = self.hot.search(q, k=k)
-            elif mode == HISTORICAL:
-                res = self.temporal.query_at_batch(q, g_at, k=k)
-                for r in res:
-                    self.temporal.assert_no_leakage(r, g_at)
-            else:
-                assert mode == COMPARATIVE
-                res = self.temporal.query_window_batch(q, *g_window, k=k)
-            for j, i in enumerate(idxs):
-                out[i] = res[j]
-        return out
+        with span("store:query_batch") as sp:
+            t_store = time.perf_counter()
+            intents = [classify_query(t, at=at, window=window)
+                       for t in texts]
+            with span("embed"):
+                vecs = self.embedder.embed(list(texts))
+            groups: dict[tuple, list[int]] = {}
+            for i, it in enumerate(intents):
+                groups.setdefault((it.mode, it.at, it.window), []).append(i)
+            out: list[Optional[list[SearchResult]]] = [None] * len(texts)
+            for (mode, g_at, g_window), idxs in groups.items():
+                q = vecs[idxs]
+                t_group = time.perf_counter()
+                with span(f"intent:{mode}") as isp:
+                    isp.add("queries", len(idxs))
+                    if mode == CURRENT:
+                        tier = "hot"
+                        res = self.hot.search(q, k=k)
+                    elif mode == HISTORICAL:
+                        tier = "cold"
+                        res = self.temporal.query_at_batch(q, g_at, k=k)
+                        for r in res:
+                            self.temporal.assert_no_leakage(r, g_at)
+                    else:
+                        assert mode == COMPARATIVE
+                        tier = "cold"
+                        res = self.temporal.query_window_batch(
+                            q, *g_window, k=k)
+                REGISTRY.histogram("query_latency_ms", tier=tier,
+                                   intent=mode).observe(
+                    (time.perf_counter() - t_group) * 1e3)
+                for j, i in enumerate(idxs):
+                    out[i] = res[j]
+            sp.add("queries", len(texts))
+            REGISTRY.histogram("store_query_batch_ms").observe(
+                (time.perf_counter() - t_store) * 1e3)
+            return out
 
     def query_batcher(self, k: int = 5, max_batch: int = 32,
                       max_wait_s: float = 0.0) -> "Batcher":

@@ -37,6 +37,7 @@ from typing import Optional
 
 import numpy as np
 
+from .. import obs
 from .cold_tier import ColdSnapshot, ColdTier
 from .types import SearchResult, VALID_TO_OPEN, pad_queries
 
@@ -408,21 +409,29 @@ class TemporalEngine:
         idx=-1 contract), so the leakage guarantee is untouched and the
         returned scores are fp32-exact. Padding query rows are sliced
         off before the rescore (no spill reads for discarded rows)."""
-        emb, vf, vt = res.views()
-        if res.quantized:
-            from ..index.quant import pool_k, rescore_topk
-            from ..kernels.temporal_mask_score.ops import (
-                temporal_window_topk_q8)
-            kp = pool_k(k, res.n, self.rescore_factor)
-            _, pool = temporal_window_topk_q8(qp, emb, res.scale, vf, vt,
-                                              t0s, t1s, kp)
-            scores, idx = rescore_topk(qp[:nq], np.asarray(pool)[:nq],
-                                       res.fetch_f32, k)
-        else:
-            from ..kernels.temporal_mask_score.ops import temporal_window_topk
-            scores, idx = temporal_window_topk(qp, emb, vf, vt, t0s, t1s, k)
-        self.fused_dispatches += 1
-        return np.asarray(scores), np.asarray(idx)
+        with obs.span("fused_temporal") as sp:
+            emb, vf, vt = res.views()
+            if res.quantized:
+                from ..index.quant import pool_k, rescore_topk
+                from ..kernels.temporal_mask_score.ops import (
+                    temporal_window_topk_q8)
+                kp = pool_k(k, res.n, self.rescore_factor)
+                sp.add("rescore_pool", int(kp) * nq)
+                _, pool = temporal_window_topk_q8(qp, emb, res.scale,
+                                                  vf, vt, t0s, t1s, kp)
+                scores, idx = rescore_topk(qp[:nq], np.asarray(pool)[:nq],
+                                           res.fetch_f32, k)
+            else:
+                from ..kernels.temporal_mask_score.ops import (
+                    temporal_window_topk)
+                scores, idx = temporal_window_topk(qp, emb, vf, vt,
+                                                   t0s, t1s, k)
+            # the fused temporal block reads the whole resident history
+            # once per BATCH, same convention as the hot fused scan
+            obs.scan_row_reads(res.n, nq, per_query=False,
+                               source="fused_temporal")
+            self.fused_dispatches += 1
+            return np.asarray(scores), np.asarray(idx)
 
     def _oracle_at_batch(self, queries: np.ndarray, ts: int, k: int = 5
                          ) -> list[list[SearchResult]]:

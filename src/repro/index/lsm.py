@@ -43,6 +43,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from .. import obs
 from ..core.types import (ChunkRecord, SearchResult, VALID_TO_OPEN,
                           pad_queries)
 from .compaction import CompactionStats, SizeTieredCompactor
@@ -462,49 +463,70 @@ class SegmentedIndex:
         # its alive mask is the authority array gathered by fused row.
         fmask = auth[cat.fused_gids]
         if fmask.any():
-            qp, _ = pad_queries(q)
-            k_eff = min(k, cat.fused_emb.shape[0])
-            if self.quantized:
-                from ..kernels.topk_search.ops import topk_search_q8
-                kp = pool_k(k_eff, cat.fused_emb.shape[0],
-                            self.rescore_factor)
-                _, pool = topk_search_q8(qp, cat.fused_emb,
-                                         fixed_scale(self.dim), fmask, kp)
-                s, idx = rescore_topk(q, np.asarray(pool)[:nq],
-                                      cat.fused_f32, k_eff)
-            else:
-                from ..kernels.topk_search.ops import topk_search
-                s, idx = topk_search(qp, cat.fused_emb, fmask, k_eff)
-                s = np.asarray(s)[:nq]
-                idx = np.asarray(idx)[:nq]
-            g = np.where(np.isfinite(s),
-                         cat.fused_gids[np.clip(idx, 0, None)], -1)
-            blocks_s.append(np.asarray(s, np.float32))
-            blocks_g.append(g)
-            scanned += int(fmask.sum())          # once per BATCH (fused)
+            with obs.span("fused_scan") as fsp:
+                qp, _ = pad_queries(q)
+                k_eff = min(k, cat.fused_emb.shape[0])
+                if self.quantized:
+                    from ..kernels.topk_search.ops import topk_search_q8
+                    kp = pool_k(k_eff, cat.fused_emb.shape[0],
+                                self.rescore_factor)
+                    _, pool = topk_search_q8(qp, cat.fused_emb,
+                                             fixed_scale(self.dim),
+                                             fmask, kp)
+                    fsp.add("rescore_pool", int(kp) * nq)
+                    s, idx = rescore_topk(q, np.asarray(pool)[:nq],
+                                          cat.fused_f32, k_eff)
+                else:
+                    from ..kernels.topk_search.ops import topk_search
+                    s, idx = topk_search(qp, cat.fused_emb, fmask, k_eff)
+                    s = np.asarray(s)[:nq]
+                    idx = np.asarray(idx)[:nq]
+                g = np.where(np.isfinite(s),
+                             cat.fused_gids[np.clip(idx, 0, None)], -1)
+                blocks_s.append(np.asarray(s, np.float32))
+                blocks_g.append(g)
+                # once per BATCH (fused)
+                scanned += obs.scan_row_reads(int(fmask.sum()), nq,
+                                              per_query=False,
+                                              source="fused")
         # solo segments (scale-incompatible with the fused block): one
         # exact scan each, whole batch per dispatch — like fused.
         for seg, sbase in cat.solo:
             if seg.n_alive == 0:
                 continue
-            s, rows, seg_scanned = seg.search(q, k, nprobe=self.nprobe)
-            s = np.asarray(s, np.float32)
-            rows = np.asarray(rows)
-            g = np.where(rows >= 0, sbase + np.clip(rows, 0, None), -1)
-            blocks_s.append(s)
-            blocks_g.append(g)
-            scanned += seg_scanned               # once per BATCH (exact)
+            with obs.span(f"solo_scan:{seg.seg_id}"):
+                s, rows, seg_scanned = seg.search(q, k,
+                                                  nprobe=self.nprobe)
+                s = np.asarray(s, np.float32)
+                rows = np.asarray(rows)
+                g = np.where(rows >= 0, sbase + np.clip(rows, 0, None),
+                             -1)
+                blocks_s.append(s)
+                blocks_g.append(g)
+                # once per BATCH (exact)
+                scanned += obs.scan_row_reads(seg_scanned, nq,
+                                              per_query=False,
+                                              source="solo")
         # IVF segments: batched centroid routing + per-query member scan.
         for seg, sbase in cat.ivf:
             if seg.n_alive == 0:
                 continue
-            s, rows, seg_scanned = seg.search(q, k, nprobe=self.nprobe)
-            s = np.asarray(s, np.float32)
-            rows = np.asarray(rows)
-            g = np.where(rows >= 0, sbase + np.clip(rows, 0, None), -1)
-            blocks_s.append(s)
-            blocks_g.append(g)
-            scanned += seg_scanned * nq          # per-query avg x queries
+            with obs.span(f"ivf_scan:{seg.seg_id}") as isp:
+                s, rows, seg_scanned = seg.search(q, k,
+                                                  nprobe=self.nprobe)
+                s = np.asarray(s, np.float32)
+                rows = np.asarray(rows)
+                g = np.where(rows >= 0, sbase + np.clip(rows, 0, None),
+                             -1)
+                blocks_s.append(s)
+                blocks_g.append(g)
+                # per-query avg x queries (host-side member gathers, so
+                # bytes are accounted here — no kernel span underneath)
+                reads = obs.scan_row_reads(seg_scanned, nq,
+                                           per_query=True, source="ivf")
+                isp.add("bytes_streamed",
+                        reads * self.dim * (1 if self.quantized else 4))
+                scanned += reads
         self._scan_scanned += scanned
         self._scan_denom += max(len(self._by_key), 1) * nq
         if not blocks_s:

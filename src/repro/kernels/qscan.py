@@ -20,6 +20,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from .. import obs
+
 try:                                    # pragma: no cover - env dependent
     import torch
     _TORCH = torch
@@ -44,29 +46,33 @@ def asym_scores_host(qs: np.ndarray, c8: np.ndarray) -> np.ndarray:
     numpy fallback: corpus blocks cast int8 -> fp32 into a reusable
     cache-resident buffer, then sgemm per block (one 1-byte/elem pass
     over the corpus instead of 4)."""
-    qs = np.ascontiguousarray(np.atleast_2d(qs), np.float32)
-    c8 = np.ascontiguousarray(c8, np.int8)
-    nq, d = qs.shape
-    n = c8.shape[0]
-    if n == 0 or nq == 0:
-        return np.zeros((nq, n), np.float32)
-    qscale = np.maximum(np.abs(qs).max(axis=1) / Q8_MAX, 1e-12)
-    q8q = np.clip(np.rint(qs / qscale[:, None]), -Q8_MAX, Q8_MAX) \
-        .astype(np.int8)
-    if _TORCH is not None:
-        acc = _TORCH._int_mm(_TORCH.from_numpy(q8q),
-                             _TORCH.from_numpy(c8).t())
-        return acc.numpy().astype(np.float32) * qscale[:, None] \
-            .astype(np.float32)
-    out = np.empty((nq, n), np.float32)
-    bn = 4096
-    buf = np.empty((min(bn, n), d), np.float32)
-    for j0 in range(0, n, bn):
-        j1 = min(j0 + bn, n)
-        b = buf[:j1 - j0]
-        b[:] = c8[j0:j1]                       # int8 -> fp32, one pass
-        np.matmul(qs, b.T, out=out[:, j0:j1])
-    return out
+    # rows/bytes are recorded by the enclosing *_q8 wrapper span — this
+    # span only times the host GEMM half so the tree shows where the
+    # scan went (int_mm vs the blocked numpy fallback).
+    with obs.span("kernel:asym_scores_host"):
+        qs = np.ascontiguousarray(np.atleast_2d(qs), np.float32)
+        c8 = np.ascontiguousarray(c8, np.int8)
+        nq, d = qs.shape
+        n = c8.shape[0]
+        if n == 0 or nq == 0:
+            return np.zeros((nq, n), np.float32)
+        qscale = np.maximum(np.abs(qs).max(axis=1) / Q8_MAX, 1e-12)
+        q8q = np.clip(np.rint(qs / qscale[:, None]), -Q8_MAX, Q8_MAX) \
+            .astype(np.int8)
+        if _TORCH is not None:
+            acc = _TORCH._int_mm(_TORCH.from_numpy(q8q),
+                                 _TORCH.from_numpy(c8).t())
+            return acc.numpy().astype(np.float32) * qscale[:, None] \
+                .astype(np.float32)
+        out = np.empty((nq, n), np.float32)
+        bn = 4096
+        buf = np.empty((min(bn, n), d), np.float32)
+        for j0 in range(0, n, bn):
+            j1 = min(j0 + bn, n)
+            b = buf[:j1 - j0]
+            b[:] = c8[j0:j1]                   # int8 -> fp32, one pass
+            np.matmul(qs, b.T, out=out[:, j0:j1])
+        return out
 
 
 def pool_topk_host(scores: np.ndarray, kp: int

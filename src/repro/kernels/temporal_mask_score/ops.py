@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ... import obs
 from ..common import kernel_mode, kernel_mode_q8, lt_i64, pad_to, split_i64
 from .ref import temporal_window_topk_q8_ref, temporal_window_topk_ref
 from .temporal_mask_score import (temporal_block_candidates,
@@ -68,26 +69,30 @@ def temporal_window_topk(q, corpus, valid_from, valid_to, t0s, t1s, k: int,
     overlapping candidate come back -inf.
     """
     mode = kernel_mode(mode)
-    q = np.atleast_2d(np.asarray(q, np.float32))
-    t0s = np.broadcast_to(np.asarray(t0s, np.int64), (q.shape[0],))
-    t1s = np.broadcast_to(np.asarray(t1s, np.int64), (q.shape[0],))
-    k = int(min(k, corpus.shape[0]))
-    if corpus.shape[0] == 0 or k == 0:
-        # empty history: nothing can ever be valid, regardless of window
-        return (np.zeros((q.shape[0], 0), np.float32),
-                np.zeros((q.shape[0], 0), np.int32))
-    if mode == "ref":
-        return temporal_window_topk_ref(q, corpus, valid_from, valid_to,
-                                        t0s, t1s, k)
-    vf_hi, vf_lo = _split_dev(valid_from)
-    vt_hi, vt_lo = _split_dev(valid_to)
-    t0_hi, t0_lo = _split_dev(t0s)
-    t1_hi, t1_lo = _split_dev(t1s)
-    bn = int(min(bn, max(128, corpus.shape[0])))
-    return _temporal_topk_jit(
-        jnp.asarray(q), jnp.asarray(corpus, jnp.float32),
-        vf_hi, vf_lo, vt_hi, vt_lo, t0_hi, t0_lo, t1_hi, t1_lo,
-        k, bn, mode)
+    with obs.span("kernel:temporal_window_topk") as sp:
+        q = np.atleast_2d(np.asarray(q, np.float32))
+        t0s = np.broadcast_to(np.asarray(t0s, np.int64), (q.shape[0],))
+        t1s = np.broadcast_to(np.asarray(t1s, np.int64), (q.shape[0],))
+        k = int(min(k, corpus.shape[0]))
+        if corpus.shape[0] == 0 or k == 0:
+            # empty history: nothing can ever be valid, regardless of window
+            return (np.zeros((q.shape[0], 0), np.float32),
+                    np.zeros((q.shape[0], 0), np.int32))
+        sp.add("rows", int(corpus.shape[0]))
+        sp.add("bytes_streamed",
+               int(corpus.shape[0]) * int(corpus.shape[1]) * 4)
+        if mode == "ref":
+            return temporal_window_topk_ref(q, corpus, valid_from,
+                                            valid_to, t0s, t1s, k)
+        vf_hi, vf_lo = _split_dev(valid_from)
+        vt_hi, vt_lo = _split_dev(valid_to)
+        t0_hi, t0_lo = _split_dev(t0s)
+        t1_hi, t1_lo = _split_dev(t1s)
+        bn = int(min(bn, max(128, corpus.shape[0])))
+        return _temporal_topk_jit(
+            jnp.asarray(q), jnp.asarray(corpus, jnp.float32),
+            vf_hi, vf_lo, vt_hi, vt_lo, t0_hi, t0_lo, t1_hi, t1_lo,
+            k, bn, mode)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "bn", "interpret"))
@@ -125,37 +130,41 @@ def temporal_window_topk_q8(q, c8, scale, valid_from, valid_to, t0s, t1s,
     filter runs before ranking in EVERY mode, so the leakage guarantee
     is identical to the fp32 path."""
     mode = kernel_mode_q8(mode)
-    q = np.atleast_2d(np.asarray(q, np.float32))
-    c8 = np.asarray(c8, np.int8)
-    scale = np.asarray(scale, np.float32)
-    t0s = np.broadcast_to(np.asarray(t0s, np.int64), (q.shape[0],))
-    t1s = np.broadcast_to(np.asarray(t1s, np.int64), (q.shape[0],))
-    k = int(min(k, c8.shape[0]))
-    if c8.shape[0] == 0 or k == 0:
-        return (np.zeros((q.shape[0], 0), np.float32),
-                np.zeros((q.shape[0], 0), np.int32))
-    from ...index.quant import fold_scale
-    qs = fold_scale(q, scale)
-    vf = np.asarray(valid_from, np.int64)
-    vt = np.asarray(valid_to, np.int64)
-    if mode == "ref":
-        s, i = temporal_window_topk_q8_ref(qs, c8, vf, vt, t0s, t1s, k)
-        return s, np.where(np.isfinite(s), i, -1)
-    if mode == "host":
-        from ..qscan import asym_scores_host, pool_topk_host
-        scores = asym_scores_host(qs, c8)
-        valid = (vf[None, :] < t1s[:, None]) & (t0s[:, None] < vt[None, :])
-        scores[~valid] = -np.inf
-        return pool_topk_host(scores, k)
-    vf_hi, vf_lo = _split_dev(vf)
-    vt_hi, vt_lo = _split_dev(vt)
-    t0_hi, t0_lo = _split_dev(t0s)
-    t1_hi, t1_lo = _split_dev(t1s)
-    bn = int(min(bn, max(128, c8.shape[0])))
-    return _temporal_topk_q8_jit(
-        jnp.asarray(qs), jnp.asarray(c8),
-        vf_hi, vf_lo, vt_hi, vt_lo, t0_hi, t0_lo, t1_hi, t1_lo,
-        k, bn, mode == "interpret")
+    with obs.span("kernel:temporal_window_topk_q8") as sp:
+        q = np.atleast_2d(np.asarray(q, np.float32))
+        c8 = np.asarray(c8, np.int8)
+        scale = np.asarray(scale, np.float32)
+        t0s = np.broadcast_to(np.asarray(t0s, np.int64), (q.shape[0],))
+        t1s = np.broadcast_to(np.asarray(t1s, np.int64), (q.shape[0],))
+        k = int(min(k, c8.shape[0]))
+        if c8.shape[0] == 0 or k == 0:
+            return (np.zeros((q.shape[0], 0), np.float32),
+                    np.zeros((q.shape[0], 0), np.int32))
+        sp.add("rows", int(c8.shape[0]))
+        sp.add("bytes_streamed", int(c8.shape[0]) * int(c8.shape[1]))
+        from ...index.quant import fold_scale
+        qs = fold_scale(q, scale)
+        vf = np.asarray(valid_from, np.int64)
+        vt = np.asarray(valid_to, np.int64)
+        if mode == "ref":
+            s, i = temporal_window_topk_q8_ref(qs, c8, vf, vt, t0s, t1s, k)
+            return s, np.where(np.isfinite(s), i, -1)
+        if mode == "host":
+            from ..qscan import asym_scores_host, pool_topk_host
+            scores = asym_scores_host(qs, c8)
+            valid = (vf[None, :] < t1s[:, None]) \
+                & (t0s[:, None] < vt[None, :])
+            scores[~valid] = -np.inf
+            return pool_topk_host(scores, k)
+        vf_hi, vf_lo = _split_dev(vf)
+        vt_hi, vt_lo = _split_dev(vt)
+        t0_hi, t0_lo = _split_dev(t0s)
+        t1_hi, t1_lo = _split_dev(t1s)
+        bn = int(min(bn, max(128, c8.shape[0])))
+        return _temporal_topk_q8_jit(
+            jnp.asarray(qs), jnp.asarray(c8),
+            vf_hi, vf_lo, vt_hi, vt_lo, t0_hi, t0_lo, t1_hi, t1_lo,
+            k, bn, mode == "interpret")
 
 
 def temporal_topk(q, corpus, valid_from, valid_to, ts: int, k: int,

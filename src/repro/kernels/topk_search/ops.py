@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 import numpy as np
 
+from ... import obs
 from ..common import kernel_mode, kernel_mode_q8, pad_to
 from .ref import topk_search_q8_ref, topk_search_ref
 from .topk_search import topk_block_candidates, topk_block_candidates_q8
@@ -38,12 +39,15 @@ def topk_search(q, corpus, mask, k: int, bn: int = 512,
     (scores (Q, k), idx (Q, k)). Rows with mask=False can never appear
     unless fewer than k rows are active (callers drop -inf entries).
     """
-    q = jnp.atleast_2d(jnp.asarray(q, jnp.float32))
-    corpus = jnp.asarray(corpus, jnp.float32)
-    mask = jnp.asarray(mask, bool)
-    k = int(min(k, corpus.shape[0]))
-    bn = int(min(bn, max(128, corpus.shape[0])))
-    return _topk_search_jit(q, corpus, mask, k, bn, kernel_mode(mode))
+    with obs.span("kernel:topk_search") as sp:
+        q = jnp.atleast_2d(jnp.asarray(q, jnp.float32))
+        corpus = jnp.asarray(corpus, jnp.float32)
+        mask = jnp.asarray(mask, bool)
+        k = int(min(k, corpus.shape[0]))
+        bn = int(min(bn, max(128, corpus.shape[0])))
+        sp.add("rows", int(corpus.shape[0]))
+        sp.add("bytes_streamed", int(corpus.shape[0]) * int(corpus.shape[1]) * 4)
+        return _topk_search_jit(q, corpus, mask, k, bn, kernel_mode(mode))
 
 
 @functools.partial(jax.jit, static_argnames=("k", "bn", "mode"))
@@ -83,20 +87,23 @@ def topk_search_q8(q, c8, scale, mask, k: int, bn: int = 512,
     pure-jnp oracle; host = CPU integer-GEMM scan (kernels/qscan, auto
     default off-TPU)."""
     mode = kernel_mode_q8(mode)
-    q = np.atleast_2d(np.asarray(q, np.float32))
-    c8 = np.asarray(c8, np.int8)
-    scale = np.asarray(scale, np.float32)
-    k = int(min(k, c8.shape[0]))
-    if c8.shape[0] == 0 or k == 0:
-        return (np.zeros((q.shape[0], 0), np.float32),
-                np.zeros((q.shape[0], 0), np.int32))
-    from ...index.quant import fold_scale
-    qs = fold_scale(q, scale)
-    if mode == "host":
-        from ..qscan import asym_scores_host, pool_topk_host
-        scores = asym_scores_host(qs, c8)
-        scores[:, ~np.asarray(mask, bool)] = -np.inf
-        return pool_topk_host(scores, k)
-    bn = int(min(bn, max(128, c8.shape[0])))
-    return _topk_search_q8_jit(jnp.asarray(qs), jnp.asarray(c8),
-                               jnp.asarray(mask, bool), k, bn, mode)
+    with obs.span("kernel:topk_search_q8") as sp:
+        q = np.atleast_2d(np.asarray(q, np.float32))
+        c8 = np.asarray(c8, np.int8)
+        scale = np.asarray(scale, np.float32)
+        k = int(min(k, c8.shape[0]))
+        if c8.shape[0] == 0 or k == 0:
+            return (np.zeros((q.shape[0], 0), np.float32),
+                    np.zeros((q.shape[0], 0), np.int32))
+        sp.add("rows", int(c8.shape[0]))
+        sp.add("bytes_streamed", int(c8.shape[0]) * int(c8.shape[1]))
+        from ...index.quant import fold_scale
+        qs = fold_scale(q, scale)
+        if mode == "host":
+            from ..qscan import asym_scores_host, pool_topk_host
+            scores = asym_scores_host(qs, c8)
+            scores[:, ~np.asarray(mask, bool)] = -np.inf
+            return pool_topk_host(scores, k)
+        bn = int(min(bn, max(128, c8.shape[0])))
+        return _topk_search_q8_jit(jnp.asarray(qs), jnp.asarray(c8),
+                                   jnp.asarray(mask, bool), k, bn, mode)

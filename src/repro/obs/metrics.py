@@ -1,0 +1,171 @@
+"""Process-wide metrics registry (DESIGN.md §12).
+
+Counters, gauges, and fixed-bucket latency histograms with per-label
+instances — ``REGISTRY.histogram("query_latency_ms", tier="hot",
+intent="current")`` get-or-creates one series per (name, labels) pair.
+Histograms report p50/p99/p99.9 WITHOUT storing samples: observations
+land in geometric buckets (factor 1.15 from 1e-3 to ~1e5) and quantiles
+are linearly interpolated inside the crossing bucket, clamped to the
+observed min/max — accuracy is bounded by the bucket width (<~7.5%
+relative), validated against numpy percentiles in tests.
+
+Everything is plain-Python and allocation-light: ``Counter.inc`` is one
+float add, ``Histogram.observe`` one bisect + three adds — cheap enough
+to stay ALWAYS on (the trace layer is the part that toggles).
+"""
+from __future__ import annotations
+
+import json
+from bisect import bisect_right
+from typing import Optional
+
+
+def geometric_bounds(lo: float = 1e-3, hi: float = 1e5,
+                     factor: float = 1.15) -> list[float]:
+    bounds = [lo]
+    while bounds[-1] < hi:
+        bounds.append(bounds[-1] * factor)
+    return bounds
+
+
+_DEFAULT_BOUNDS = tuple(geometric_bounds())
+
+
+class Counter:
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        self.value += n
+
+
+class Gauge:
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+
+class Histogram:
+    """Fixed-bucket histogram: bucket i counts observations in
+    (bounds[i-1], bounds[i]]; the last slot is the overflow bucket."""
+
+    __slots__ = ("bounds", "counts", "count", "sum", "min", "max")
+
+    def __init__(self, bounds=None):
+        self.bounds = list(bounds) if bounds is not None \
+            else list(_DEFAULT_BOUNDS)
+        self.counts = [0] * (len(self.bounds) + 1)
+        self.count = 0
+        self.sum = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.counts[bisect_right(self.bounds, v)] += 1
+        self.count += 1
+        self.sum += v
+        if v < self.min:
+            self.min = v
+        if v > self.max:
+            self.max = v
+
+    def quantile(self, q: float) -> Optional[float]:
+        """Interpolated quantile from bucket counts (no samples kept)."""
+        if self.count == 0:
+            return None
+        rank = q * self.count
+        cum = 0.0
+        for i, c in enumerate(self.counts):
+            if c == 0:
+                continue
+            if cum + c >= rank:
+                lo = self.bounds[i - 1] if i > 0 else self.min
+                hi = self.bounds[i] if i < len(self.bounds) else self.max
+                frac = (rank - cum) / c
+                v = lo + frac * (hi - lo)
+                return min(max(v, self.min), self.max)
+            cum += c
+        return self.max
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+    def summary(self) -> dict:
+        if self.count == 0:
+            return {"count": 0}
+        return {"count": self.count, "sum": round(self.sum, 6),
+                "mean": round(self.mean, 6),
+                "min": round(self.min, 6), "max": round(self.max, 6),
+                "p50": round(self.quantile(0.5), 6),
+                "p99": round(self.quantile(0.99), 6),
+                "p999": round(self.quantile(0.999), 6)}
+
+
+def _series_key(name: str, labels: dict) -> str:
+    if not labels:
+        return name
+    inner = ",".join(f"{k}={labels[k]}" for k in sorted(labels))
+    return f"{name}{{{inner}}}"
+
+
+class MetricsRegistry:
+    """Get-or-create registry of labeled series. One process-wide
+    instance (``REGISTRY``) backs the whole fabric; tests may build
+    private ones or ``reset()`` the default."""
+
+    def __init__(self):
+        self._counters: dict[str, Counter] = {}
+        self._gauges: dict[str, Gauge] = {}
+        self._hists: dict[str, Histogram] = {}
+
+    def counter(self, name: str, **labels) -> Counter:
+        key = _series_key(name, labels)
+        c = self._counters.get(key)
+        if c is None:
+            c = self._counters[key] = Counter()
+        return c
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        key = _series_key(name, labels)
+        g = self._gauges.get(key)
+        if g is None:
+            g = self._gauges[key] = Gauge()
+        return g
+
+    def histogram(self, name: str, bounds=None, **labels) -> Histogram:
+        key = _series_key(name, labels)
+        h = self._hists.get(key)
+        if h is None:
+            h = self._hists[key] = Histogram(bounds)
+        return h
+
+    def snapshot(self) -> dict:
+        """One queryable view of every series: counters/gauges by value,
+        histograms by count/sum/min/max/p50/p99/p99.9."""
+        return {
+            "counters": {k: v.value
+                         for k, v in sorted(self._counters.items())},
+            "gauges": {k: v.value
+                       for k, v in sorted(self._gauges.items())},
+            "histograms": {k: h.summary()
+                           for k, h in sorted(self._hists.items())},
+        }
+
+    def to_json(self, indent: Optional[int] = 1) -> str:
+        return json.dumps(self.snapshot(), indent=indent)
+
+    def reset(self) -> None:
+        self._counters.clear()
+        self._gauges.clear()
+        self._hists.clear()
+
+
+REGISTRY = MetricsRegistry()

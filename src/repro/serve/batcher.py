@@ -11,13 +11,26 @@ Failure isolation: a batch whose execution raises (e.g. a shard failing
 mid-gather in the fabric planner) completes ONLY its own requests with
 ``error`` set — the rest of the queue, including other intent buckets,
 stays drainable and later submits still work.
+
+Observability (DESIGN.md §12): the batcher is the TRACE ROOT of the
+serving stack — each dispatched batch opens one ``obs.trace("batch")``
+so every layer underneath (planner scatter, per-shard engine pass,
+index scans, kernel dispatches) lands in one span tree, finished traces
+feed the latency histograms and the slow-query log. All counters live
+in the process-wide metrics registry under a per-instance ``batcher``
+label; the old hand-rolled ``stats`` dict survives as a read-only
+compatibility property over those series. Queue depth and time-in-queue
+are recorded as histograms (``enqueued_at`` was already on the wire).
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 from collections import deque
 from typing import Any, Callable, Optional
+
+from ..obs import REGISTRY, trace
 
 
 @dataclasses.dataclass
@@ -33,10 +46,13 @@ class Request:
 
 
 class Batcher:
+    _ids = itertools.count()
+
     def __init__(self, run_batch: Callable[[list[Any]], list[Any]],
                  max_batch: int = 8, max_wait_s: float = 0.0,
                  bucket_fn: Optional[Callable[[Any], Any]] = None,
-                 hedge_factor: float = 3.0):
+                 hedge_factor: float = 3.0,
+                 label: Optional[str] = None):
         self.run_batch = run_batch
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
@@ -45,8 +61,30 @@ class Batcher:
         self._queue: deque[Request] = deque()
         self._next_id = 0
         self._lat_ewma: Optional[float] = None
-        self.stats = {"batches": 0, "requests": 0, "hedges": 0,
-                      "failed_batches": 0, "mean_batch_size": 0.0}
+        # registry-backed stats (one labeled series set per instance)
+        self.label = label or f"b{next(Batcher._ids)}"
+        lbl = {"batcher": self.label}
+        self._c_batches = REGISTRY.counter("batcher_batches", **lbl)
+        self._c_requests = REGISTRY.counter("batcher_requests", **lbl)
+        self._c_hedges = REGISTRY.counter("batcher_hedges", **lbl)
+        self._c_failed = REGISTRY.counter("batcher_failed_batches", **lbl)
+        self._h_batch_ms = REGISTRY.histogram("batcher_batch_ms", **lbl)
+        self._h_queue_depth = REGISTRY.histogram("batcher_queue_depth",
+                                                 **lbl)
+        self._h_queue_wait_ms = REGISTRY.histogram(
+            "batcher_time_in_queue_ms", **lbl)
+
+    @property
+    def stats(self) -> dict:
+        """Compatibility shim over the metrics registry: the same keys
+        the old hand-rolled dict exposed, computed from the live
+        counters (read-only snapshot)."""
+        batches = int(self._c_batches.value)
+        requests = int(self._c_requests.value)
+        return {"batches": batches, "requests": requests,
+                "hedges": int(self._c_hedges.value),
+                "failed_batches": int(self._c_failed.value),
+                "mean_batch_size": (requests / batches) if batches else 0.0}
 
     def submit(self, payload: Any) -> Request:
         req = Request(self._next_id, payload,
@@ -59,6 +97,7 @@ class Batcher:
     def _take_batch(self) -> list[Request]:
         if not self._queue:
             return []
+        self._h_queue_depth.observe(len(self._queue))
         bucket = self._queue[0].bucket
         batch = []
         rest = deque()
@@ -68,7 +107,22 @@ class Batcher:
         self._queue.extendleft(reversed(rest))
         return batch
 
+    def _account(self, batch: list[Request], failed: bool = False) -> None:
+        self._c_batches.inc()
+        self._c_requests.inc(len(batch))
+        if failed:
+            self._c_failed.inc()
+
     def _execute(self, batch: list[Request]) -> None:
+        t_start = time.perf_counter()
+        for r in batch:
+            self._h_queue_wait_ms.observe((t_start - r.enqueued_at) * 1e3)
+        with trace("batch", intent=str(batch[0].bucket)) as root:
+            root.add("batch_size", len(batch))
+            self._run(batch)
+        self._h_batch_ms.observe((time.perf_counter() - t_start) * 1e3)
+
+    def _run(self, batch: list[Request]) -> None:
         t0 = time.perf_counter()
         try:
             results = self.run_batch([r.payload for r in batch])
@@ -84,17 +138,13 @@ class Batcher:
                 r.error = e
                 r.result = None
                 r.done = True
-            self.stats["batches"] += 1
-            self.stats["failed_batches"] += 1
-            self.stats["requests"] += len(batch)
-            self.stats["mean_batch_size"] = (self.stats["requests"]
-                                             / self.stats["batches"])
+            self._account(batch, failed=True)
             return
         elapsed = time.perf_counter() - t0
         # hedged backup request on straggling execution
         if (self._lat_ewma is not None
                 and elapsed > self.hedge_factor * self._lat_ewma):
-            self.stats["hedges"] += 1
+            self._c_hedges.inc()
             t1 = time.perf_counter()
             try:
                 retry = self.run_batch([r.payload for r in batch])
@@ -110,10 +160,7 @@ class Batcher:
         for r, res in zip(batch, results):
             r.result = res
             r.done = True
-        self.stats["batches"] += 1
-        self.stats["requests"] += len(batch)
-        self.stats["mean_batch_size"] = (self.stats["requests"]
-                                         / self.stats["batches"])
+        self._account(batch)
 
     def drain(self) -> None:
         while self._queue:

@@ -45,6 +45,7 @@ import numpy as np
 
 from ..core.types import SearchResult
 from ..index.lsm import merge_topk_candidates
+from ..obs import span
 
 
 class ShardGatherError(RuntimeError):
@@ -138,20 +139,25 @@ class ScatterGatherPlanner:
                     ) -> list[list[SearchResult]]:
         if not texts:
             return []
-        ring = self.fabric.ring
-        per_shard: dict[str, list[list[SearchResult]]] = {}
-        failures: dict[str, Exception] = {}
-        for s in ring.shards:          # scatter (shard order = merge order)
-            try:
-                per_shard[s] = self.fabric.lake(s).query_batch(
-                    texts, k=k, at=at, window=window)
-            except Exception as e:     # noqa: BLE001 — shard fault domain
-                failures[s] = e
-        self.stats["gathers"] += 1
-        self.stats["shard_failures"] += len(failures)
-        if failures and len(failures) >= ring.replicas:
-            raise ShardGatherError(failures)
-        return self._merge(texts, per_shard, k)
+        with span("plan") as plan_sp:
+            ring = self.fabric.ring
+            per_shard: dict[str, list[list[SearchResult]]] = {}
+            failures: dict[str, Exception] = {}
+            for s in ring.shards:      # scatter (shard order = merge order)
+                with span(f"shard:{s}"):
+                    try:
+                        per_shard[s] = self.fabric.lake(s).query_batch(
+                            texts, k=k, at=at, window=window)
+                    except Exception as e:  # noqa: BLE001 — shard fault
+                        failures[s] = e
+            self.stats["gathers"] += 1
+            self.stats["shard_failures"] += len(failures)
+            plan_sp.add("queries", len(texts))
+            plan_sp.add("shards", len(ring.shards))
+            plan_sp.add("shard_failures", len(failures))
+            if failures and len(failures) >= ring.replicas:
+                raise ShardGatherError(failures)
+            return self._merge(texts, per_shard, k)
 
     # ------------------------------------------------------------------
     def _merge(self, texts: Sequence[str],
@@ -160,6 +166,11 @@ class ScatterGatherPlanner:
         """Build the (Q, S*k) candidate matrix + the per-candidate
         authority mask (ownership AND replica-dedup) and run the shared
         stable top-k merge."""
+        with span("merge") as merge_sp:
+            return self._merge_inner(texts, per_shard, k, merge_sp)
+
+    def _merge_inner(self, texts, per_shard, k, merge_sp
+                     ) -> list[list[SearchResult]]:
         ring = self.fabric.ring
         shards = [s for s in ring.shards if s in per_shard]
         nq = len(texts)
@@ -192,6 +203,7 @@ class ScatterGatherPlanner:
                             seen.add(ident)
                             auth[qi, col] = True
         self.stats["candidates_merged"] += int(auth.sum())
+        merge_sp.add("candidates", int(auth.sum()))
         top_s, top_g = merge_topk_candidates(scores, gids, auth, k)
         out: list[list[SearchResult]] = []
         for qi in range(nq):

@@ -321,3 +321,17 @@ class ShardFabric:
             "shards": per_shard,
             "docs": len(self.all_docs()),
         }
+
+    def health(self) -> dict:
+        """Fabric-wide health in ONE call (DESIGN.md §12): topology +
+        per-shard tier stats (``stats()``), the planner's gather
+        counters, the process-wide metrics snapshot (per-tier latency
+        histograms, scan-accounting counters, batcher series), and the
+        slow-query log summary."""
+        from ..obs import REGISTRY, SLOW_QUERIES
+        return {
+            "fabric": self.stats(),
+            "planner": dict(self.planner.stats),
+            "metrics": REGISTRY.snapshot(),
+            "slow_queries": SLOW_QUERIES.summary(),
+        }

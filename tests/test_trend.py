@@ -1,0 +1,155 @@
+"""Bench trend gating tests (benchmarks/trend.py — ISSUE 6): metric
+classification by name, loose perf ratio gates vs tight absolute
+quality gates, suite-error handling, the markdown diff table, and the
+CLI exit codes against the committed BENCH_PR5.json baseline."""
+import copy
+import json
+import os
+
+import pytest
+
+from benchmarks.trend import classify, compare, main, render_markdown
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(REPO, "BENCH_PR5.json")
+
+
+def _record(rows, suite="s"):
+    return {"suites": {suite: {"wall_s": 1.0, "rows": rows}}}
+
+
+class TestClassify:
+    @pytest.mark.parametrize("name,cls", [
+        ("quantized_scan/n20000/recall_at_10", "quality-high"),
+        ("change_detection/precision", "quality-high"),
+        ("temporal/accuracy", "quality-high"),
+        ("shard_scaling/gate", "quality-high"),
+        ("temporal_scaling/gate_pass", "quality-high"),
+        ("temporal/leakage_rate", "quality-low"),
+        ("change_detection/false_positives", "quality-low"),
+        ("quantized_scan/n20000/speedup", "perf-high"),
+        ("query_throughput/store/batched_qps", "perf-high"),
+        ("storage/cold_delta_savings_pct", "perf-high"),
+        ("quantized_scan/bytes_n20000/reduction", "perf-high"),
+        ("query_latency/current_hot_ms/p50", "perf-low"),
+        ("update_perf/livevectorlake/time_to_query_s", "perf-low"),
+        ("streaming_churn/max_write_stall_ms", "perf-low"),
+        ("storage/hot_bytes", "perf-low"),
+        ("shard_scaling/split/wall_s", "info"),
+        ("temporal/n_queries", "info"),
+        ("storage/hot_active_chunks", "info"),
+    ])
+    def test_names(self, name, cls):
+        assert classify(name) == cls
+
+
+class TestCompare:
+    def test_identical_records_pass(self):
+        rec = _record([["s/p50_ms", 10.0, ""], ["s/recall", 1.0, ""]])
+        cmp = compare(rec, copy.deepcopy(rec))
+        assert cmp["failures"] == []
+        assert all(r["status"] == "ok" for r in cmp["rows"])
+
+    def test_quality_drop_fails_tight(self):
+        base = _record([["s/recall_at_10", 1.0, ""]])
+        ok = compare(base, _record([["s/recall_at_10", 0.99, ""]]))
+        assert ok["failures"] == []              # within abs 0.02
+        bad = compare(base, _record([["s/recall_at_10", 0.95, ""]]))
+        assert len(bad["failures"]) == 1
+        assert bad["rows"][0]["status"] == "REGRESSED"
+
+    def test_leakage_rise_fails(self):
+        base = _record([["s/leakage_rate", 0.0, ""]])
+        assert compare(base, _record([["s/leakage_rate", 0.5, ""]])
+                       )["failures"]
+        assert not compare(base, _record([["s/leakage_rate", 0.0, ""]])
+                           )["failures"]
+
+    def test_perf_gates_loosely(self):
+        base = _record([["s/scan_ms", 10.0, ""]])
+        # 1.8x slower: inside the default 2x cross-machine allowance
+        assert not compare(base, _record([["s/scan_ms", 18.0, ""]])
+                           )["failures"]
+        # 2.5x slower: gated
+        assert compare(base, _record([["s/scan_ms", 25.0, ""]])
+                       )["failures"]
+        # higher-better symmetric
+        base = _record([["s/qps", 1000.0, ""]])
+        assert not compare(base, _record([["s/qps", 600.0, ""]])
+                           )["failures"]
+        assert compare(base, _record([["s/qps", 400.0, ""]])
+                       )["failures"]
+
+    def test_sub_noise_floor_timings_are_informational(self):
+        base = _record([["s/fused_ms", 0.4, ""]])
+        # 3x on a 0.4ms row: below min_base, never gated
+        assert not compare(base, _record([["s/fused_ms", 1.2, ""]])
+                           )["failures"]
+
+    def test_improvement_is_labeled(self):
+        base = _record([["s/scan_ms", 10.0, ""]])
+        cmp = compare(base, _record([["s/scan_ms", 5.0, ""]]))
+        assert cmp["rows"][0]["status"] == "improved"
+
+    def test_new_and_removed_rows_do_not_gate(self):
+        base = _record([["s/a_ms", 1.0, ""]])
+        new = _record([["s/b_ms", 1.0, ""]])
+        cmp = compare(base, new)
+        assert cmp["failures"] == []
+        assert {r["status"] for r in cmp["rows"]} == {"new", "removed"}
+
+    def test_new_suite_ok_errored_suite_fails(self):
+        base = {"suites": {"a": {"wall_s": 1, "rows": [["a/x_ms", 1, ""]]}}}
+        new_ok = {"suites": {
+            "a": {"wall_s": 1, "rows": [["a/x_ms", 1, ""]]},
+            "b": {"wall_s": 1, "rows": [["b/y_ms", 1, ""]]}}}
+        assert compare(base, new_ok)["failures"] == []
+        assert compare(base, new_ok)["suites"]["b"] == "new"
+        new_err = {"suites": {"a": {"wall_s": 1, "error": "Boom: x"}}}
+        cmp = compare(base, new_err)
+        assert cmp["suites"]["a"] == "MISSING"
+        assert cmp["failures"]
+
+    def test_custom_thresholds(self):
+        base = _record([["s/scan_ms", 10.0, ""]])
+        new = _record([["s/scan_ms", 13.0, ""]])
+        assert not compare(base, new)["failures"]
+        assert compare(base, new, max_regression=0.2)["failures"]
+
+
+class TestRender:
+    def test_markdown_table_shape(self):
+        base = _record([["s/scan_ms", 10.0, ""], ["s/recall", 1.0, ""]])
+        new = _record([["s/scan_ms", 25.0, ""], ["s/recall", 1.0, ""]])
+        cmp = compare(base, new)
+        md = render_markdown(cmp, "PR5", "PR6")
+        assert "| suite | metric |" in md
+        assert "**REGRESSED**" in md
+        assert "PR5" in md and "PR6" in md
+        assert "1 gated regression" in md
+
+    def test_markdown_reports_clean_run(self):
+        rec = _record([["s/scan_ms", 10.0, ""]])
+        md = render_markdown(compare(rec, copy.deepcopy(rec)))
+        assert "No gated regressions" in md
+
+
+class TestCLI:
+    def test_baseline_vs_itself_passes(self, tmp_path):
+        out = tmp_path / "diff.md"
+        rc = main([BASELINE, BASELINE, "--markdown", str(out)])
+        assert rc == 0
+        assert "No gated regressions" in out.read_text()
+
+    def test_injected_regression_fails_the_gate(self, tmp_path):
+        with open(BASELINE) as f:
+            bad = json.load(f)
+        for row in bad["suites"]["quantized_scan"]["rows"]:
+            if row[0].endswith("recall_at_10"):
+                row[1] = 0.5
+        p = tmp_path / "bad.json"
+        p.write_text(json.dumps(bad))
+        out = tmp_path / "diff.md"
+        rc = main([BASELINE, str(p), "--markdown", str(out)])
+        assert rc == 1
+        assert "**REGRESSED**" in out.read_text()
