@@ -1,0 +1,272 @@
+"""Always-on serving under SLO: open-loop load vs maintenance churn
+(DESIGN.md §13 gate — ISSUE 7).
+
+An OPEN-LOOP arrival generator (arrivals pre-scheduled at rate λ;
+latency = completion − *scheduled* arrival, so coordinated omission is
+impossible — a stalled server keeps accumulating queue wait) drives
+mixed traffic (current + point-in-time queries) against a live
+replicated ``ShardFabric`` in three phases:
+
+  quiescent  no writes; background maintenance attached but idle;
+  storm      concurrent ingest churn with seal/compaction/checkpoint
+             running on the ``FabricMaintenance`` worker thread —
+             the same request schedule as quiescent;
+  degraded   one shard's queries fault-injected dead
+             (``shard:<id>:query``); with R=2 the surviving replica
+             covers every key, so degraded-marked results must still
+             reach recall@10 ≥ 0.95 of the full-fabric answers.
+
+Latencies flow through the PR 6 metrics registry
+(``load_slo_latency_ms{phase=...}``) and are reported as p50/p99/p99.9.
+
+Gates (asserted in ``main`` and in CI bench-smoke):
+  - storm p99 within ``max_p99_ratio`` of quiescent p99;
+  - degraded recall@10 ≥ 0.95 with explicit degraded/shards_missing
+    markers on the gather;
+  - exact request accounting: completed == submitted, zero dropped,
+    zero duplicated, zero errors.
+
+  PYTHONPATH=src python -m benchmarks.load_slo [--smoke] [--json out.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import queue
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.obs import REGISTRY
+from repro.serve.maintenance import FabricMaintenance
+from repro.shard import ShardFabric
+from repro.testing.faults import FAULTS
+
+from .shard_scaling import VOCAB, make_stream
+
+DIM = 64
+K = 10
+
+
+# ----------------------------------------------------------------------
+# open-loop engine
+# ----------------------------------------------------------------------
+def _open_loop(fabric, queries, mid_ts: int, rate_hz: float,
+               n_requests: int, phase: str, workers: int = 8) -> dict:
+    """Fire ``n_requests`` at fixed rate; every 4th request is temporal
+    (at=mid_ts). Returns accounting + percentile record."""
+    hist = REGISTRY.histogram("load_slo_latency_ms", phase=phase)
+    results: dict[int, object] = {}
+    errors: list[str] = []
+    dup = [0]
+    lock = threading.Lock()
+    q: queue.Queue = queue.Queue()
+
+    def worker():
+        while True:
+            item = q.get()
+            if item is None:
+                return
+            rid, sched_t, text, at = item
+            try:
+                if at is None:
+                    res = fabric.query_batch([text], k=K)[0]
+                else:
+                    res = fabric.query_batch([text], k=K, at=at)[0]
+                lat_ms = (time.perf_counter() - sched_t) * 1e3
+                with lock:
+                    if rid in results:
+                        dup[0] += 1
+                    results[rid] = res
+                hist.observe(lat_ms)
+            except Exception as e:  # noqa: BLE001 — counted, never dropped
+                with lock:
+                    errors.append(f"req{rid}: {type(e).__name__}: {e}")
+
+    threads = [threading.Thread(target=worker, daemon=True)
+               for _ in range(workers)]
+    for t in threads:
+        t.start()
+    t0 = time.perf_counter() + 0.02
+    for i in range(n_requests):
+        sched = t0 + i / rate_hz
+        now = time.perf_counter()
+        if sched > now:                    # open loop: never fall behind
+            time.sleep(sched - now)       # the *schedule*, only ahead
+        q.put((i, sched, queries[i % len(queries)],
+               mid_ts if i % 4 == 3 else None))
+    for _ in threads:
+        q.put(None)
+    for t in threads:
+        t.join(60.0)
+    return {
+        "phase": phase,
+        "submitted": n_requests,
+        "completed": len(results),
+        "duplicated": dup[0],
+        "errors": errors,
+        "p50_ms": hist.quantile(0.5),
+        "p99_ms": hist.quantile(0.99),
+        "p999_ms": hist.quantile(0.999),
+    }
+
+
+def _recall(deg_hits, full_hits) -> float:
+    full = {(r.doc_id, r.position) for r in full_hits}
+    if not full:
+        return 1.0
+    got = {(r.doc_id, r.position) for r in deg_hits}
+    return len(full & got) / len(full)
+
+
+# ----------------------------------------------------------------------
+def run(smoke: bool = False, max_p99_ratio: float = 25.0,
+        seed: int = 0) -> dict:
+    n_docs = 20 if smoke else 64
+    n_versions = 2 if smoke else 3
+    n_queries = 16 if smoke else 32
+    rate_hz = 80.0 if smoke else 150.0
+    n_requests = 96 if smoke else 360
+    churn_updates = 48 if smoke else 192
+
+    REGISTRY.reset()
+    rng = np.random.default_rng(seed)
+    stream = make_stream(rng, n_docs, n_versions)
+    queries = [" ".join(rng.choice(VOCAB, 4)) for _ in range(n_queries)]
+    mid_ts = stream[-1][2] // 2
+
+    with tempfile.TemporaryDirectory() as root:
+        fab = ShardFabric(root, n_shards=2, replicas=2, dim=DIM,
+                          hot_capacity=64, degraded_reads=True)
+        for doc, text, ts in stream:
+            fab.ingest(doc, text, ts=ts)
+        fab.query_batch(queries[:2], k=K)              # warm-up
+        fab.query_batch(queries[:2], k=K, at=mid_ts)
+
+        maint = FabricMaintenance(fab, checkpoint_every=8,
+                                  backoff_s=1e-4).start()
+        maint.drain(timeout=30.0)
+
+        # -- phase 1: quiescent ---------------------------------------
+        quiescent = _open_loop(fab, queries, mid_ts, rate_hz,
+                               n_requests, "quiescent")
+
+        # -- phase 2: compaction storm --------------------------------
+        last_ts = stream[-1][2]
+        stop_churn = threading.Event()
+        churned = [0]
+
+        def churn():
+            ts = last_ts
+            i = 0
+            while i < churn_updates and not stop_churn.is_set():
+                doc = f"doc{i % n_docs}"
+                ts += 1_000_000
+                fab.ingest(doc, " ".join(rng.choice(VOCAB, 6)), ts=ts)
+                maint.tick()
+                churned[0] = i = i + 1
+        ct = threading.Thread(target=churn, daemon=True)
+        ct.start()
+        storm = _open_loop(fab, queries, mid_ts, rate_hz,
+                           n_requests, "storm")
+        stop_churn.set()
+        ct.join(60.0)
+        maint.drain(timeout=60.0)
+        storm["churn_updates"] = churned[0]
+        storm["maintenance"] = {
+            "jobs": REGISTRY.counter("maintenance_jobs",
+                                     worker=maint.worker.name).value,
+            "failures": REGISTRY.counter("maintenance_failures",
+                                         worker=maint.worker.name).value,
+        }
+
+        # -- phase 3: one shard down, degraded reads ------------------
+        full = fab.query_batch(queries, k=K)
+        dead = fab.ring.shards[0]
+        FAULTS.arm(f"shard:{dead}:query", times=10**9,
+                   message="load_slo drill: shard down")
+        try:
+            deg = fab.query_batch(queries, k=K)
+            gather = dict(fab.planner.last_gather or {})
+        finally:
+            FAULTS.reset()
+        recall = float(np.mean([_recall(deg[i], full[i])
+                                for i in range(n_queries)]))
+        degraded = {
+            "dead_shard": dead,
+            "marked_degraded": bool(gather.get("degraded")),
+            "complete": bool(gather.get("complete")),
+            "shards_missing": list(gather.get("shards_missing", ())),
+            "recall_at10": recall,
+        }
+        maint.stop(drain=True, timeout=60.0)
+
+    ratio = storm["p99_ms"] / max(quiescent["p99_ms"] or 1e-9, 1e-9)
+    accounting_ok = all(
+        p["completed"] == p["submitted"] and p["duplicated"] == 0
+        and not p["errors"] for p in (quiescent, storm))
+    gate = {
+        "p99_ratio": ratio,
+        "max_p99_ratio": max_p99_ratio,
+        "p99_ok": ratio <= max_p99_ratio,
+        "recall_at10": recall,
+        "degraded_ok": (degraded["marked_degraded"]
+                        and bool(degraded["shards_missing"])
+                        and recall >= 0.95),
+        "accounting_ok": accounting_ok,
+    }
+    gate["pass"] = (gate["p99_ok"] and gate["degraded_ok"]
+                    and gate["accounting_ok"])
+    return {"smoke": smoke, "n_docs": n_docs, "rate_hz": rate_hz,
+            "n_requests": n_requests,
+            "quiescent": quiescent, "storm": storm, "degraded": degraded,
+            "gate": gate, "timestamp": time.time()}
+
+
+def rows_from(result: dict) -> list[tuple]:
+    rows = []
+    for phase in ("quiescent", "storm"):
+        p = result[phase]
+        note = (f"open-loop {result['rate_hz']:.0f}/s, "
+                f"{p['completed']}/{p['submitted']} ok")
+        if phase == "storm":
+            note += (f", {p['churn_updates']} churn writes, "
+                     f"{p['maintenance']['jobs']:.0f} maint jobs")
+        rows.append((f"load_slo/{phase}/p50_ms", p["p50_ms"], note))
+        rows.append((f"load_slo/{phase}/p99_ms", p["p99_ms"], note))
+        rows.append((f"load_slo/{phase}/p999_ms", p["p999_ms"], note))
+    g = result["gate"]
+    d = result["degraded"]
+    rows.append(("load_slo/degraded/recall_at10", d["recall_at10"],
+                 f"shard {d['dead_shard']} down, R=2, "
+                 f"marked={'yes' if d['marked_degraded'] else 'NO'}"))
+    rows.append(("load_slo/gate_pass", 1.0 if g["pass"] else 0.0,
+                 f"storm/quiescent p99 {g['p99_ratio']:.1f}x "
+                 f"(max {g['max_p99_ratio']:.0f}x), "
+                 f"accounting={'ok' if g['accounting_ok'] else 'BAD'}"))
+    return rows
+
+
+def main(smoke: bool = False) -> list[tuple]:
+    result = run(smoke=smoke)
+    rows = rows_from(result)
+    assert result["gate"]["pass"], result["gate"]
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small sizes for CI")
+    ap.add_argument("--json", type=str, default=None,
+                    help="write the full result record to PATH")
+    args = ap.parse_args()
+    result = run(smoke=args.smoke)
+    for name, val, note in rows_from(result):
+        print(f"{name},{val:.4f},{note}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=1)
+    if not result["gate"]["pass"]:
+        raise SystemExit(f"load_slo gate FAILED: {result['gate']}")

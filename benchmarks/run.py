@@ -13,6 +13,7 @@ Prints ``name,value,derived`` CSV rows:
   DESIGN §10-> shard_scaling
   DESIGN §11-> quantized_scan
   DESIGN §12-> obs_overhead (trend diffing: ``python -m benchmarks.trend``)
+  DESIGN §13-> load_slo
 
 ``--smoke`` shrinks every suite to CI sizes (each suite's ``main``
 honors the flag); ``--only`` runs a comma-separated subset. ``--json
@@ -44,10 +45,10 @@ def main() -> None:
                     help="write a consolidated per-suite record to PATH")
     args = ap.parse_args()
 
-    from . import (change_detection, obs_overhead, query_latency,
-                   query_throughput, quantized_scan, search_scaling,
-                   shard_scaling, storage_efficiency, streaming_churn,
-                   temporal_accuracy, temporal_scaling,
+    from . import (change_detection, load_slo, obs_overhead,
+                   query_latency, query_throughput, quantized_scan,
+                   search_scaling, shard_scaling, storage_efficiency,
+                   streaming_churn, temporal_accuracy, temporal_scaling,
                    update_performance)
     suites = [
         ("update_performance", update_performance),
@@ -62,6 +63,7 @@ def main() -> None:
         ("shard_scaling", shard_scaling),
         ("quantized_scan", quantized_scan),
         ("obs_overhead", obs_overhead),
+        ("load_slo", load_slo),
     ]
     if args.only:
         keep = {s.strip() for s in args.only.split(",")}

@@ -52,6 +52,7 @@ from typing import Optional
 import numpy as np
 
 from .. import obs
+from ..testing.faults import FAULTS
 from .hashing import blob_checksum
 from .types import (STATUS_ACTIVE, STATUS_SUPERSEDED,
                     VALID_TO_OPEN, ChunkRecord)
@@ -268,8 +269,9 @@ class ColdTier:
             keys = [[r.doc_id, int(r.position)] for r in records]
             zone = {"vf_min": int(vf.min()), "vf_max": int(vf.max()),
                     "keys": keys if len(keys) <= _ZONE_KEYS_CAP else None}
-        if fail_after == "segment":
+        if fail_after == "segment":               # legacy per-call shim
             raise FaultPoint("crash after segment write, before log append")
+        FAULTS.check("cold:commit:segment", exc=FaultPoint)
 
         entry = {
             "version": version,
@@ -283,8 +285,9 @@ class ColdTier:
         }
         _atomic_write(self._log_path(version),
                       json.dumps(entry, indent=1).encode())
-        if fail_after == "log":
+        if fail_after == "log":                   # legacy per-call shim
             raise FaultPoint("crash after log append, before checkpoint")
+        FAULTS.check("cold:commit:log", exc=FaultPoint)
 
         if self.checkpoint_interval > 0 and \
                 version % self.checkpoint_interval == 0:
@@ -355,7 +358,10 @@ class ColdTier:
         version = self.latest_version()
         if version == 0:
             return None
-        fold = self._fold()
+        # pin the fold to the version just read: a commit landing on
+        # another thread between the two would otherwise bake rows newer
+        # than the checkpoint's stamped version (duplicated on delta fold)
+        fold = self._fold(up_to_version=version)
         cols = fold.columns()
         ckpt_cols = dict(
             embeddings=cols["embeddings"], valid_from=cols["valid_from"],
@@ -378,8 +384,9 @@ class ColdTier:
         data = buf.getvalue()
         npz_path, meta_path = self._ckpt_paths(version)
         _atomic_write(npz_path, data)
-        if fail_after == "checkpoint_data":
+        if fail_after == "checkpoint_data":       # legacy per-call shim
             raise FaultPoint("crash after checkpoint npz, before meta")
+        FAULTS.check("cold:checkpoint:data", exc=FaultPoint)
         meta = {"version": version, "n_rows": fold.n,
                 "as_of_ts": fold.last_committed_ts or 0,
                 "max_entry_ts": fold.max_entry_ts,
@@ -850,8 +857,10 @@ class ColdTier:
                                       row_vt, row_version, closed_by,
                                       closure_target)
             new_archives.append(rec)
-        if fail_after == "archive" and new_archives:
+        if fail_after == "archive" and new_archives:   # legacy shim
             raise FaultPoint("crash after archive write, before manifest")
+        if new_archives:
+            FAULTS.check("cold:compact:archive", exc=FaultPoint)
         if new_archives:
             manifest = sorted(self.archives() + new_archives,
                               key=lambda r: r["lo"])

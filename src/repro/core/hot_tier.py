@@ -64,6 +64,12 @@ class HotTier:
         """Memtable slot array (memtable-resident keys only)."""
         return self.index.mem._emb
 
+    def doc_keys(self, doc_id: str) -> list[tuple[str, int]]:
+        """Snapshot of one document's live keys, taken under the index
+        lock so a background compaction can't mutate the map mid-scan."""
+        with self.index._lock:
+            return [k for k in self.index._by_key if k[0] == doc_id]
+
     # -- writes ----------------------------------------------------------
     def insert(self, records: Sequence[ChunkRecord]) -> None:
         self.index.insert(records)

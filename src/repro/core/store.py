@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import threading
 import time
 from typing import Optional, Sequence
 
@@ -32,6 +33,7 @@ from .embedder import CachingEmbedder, Embedder, HashProjectionEmbedder
 from .hash_store import HashStore
 from .hot_tier import HotTier
 from ..obs import REGISTRY, span
+from ..testing.faults import FAULTS
 from .temporal import (CURRENT, COMPARATIVE, HISTORICAL, TemporalEngine,
                        classify_query)
 from .types import (STATUS_DELETED, STATUS_SUPERSEDED, VALID_TO_OPEN,
@@ -90,6 +92,12 @@ class LiveVectorLake:
                                        quantized=self.quantized,
                                        rescore_factor=rescore_factor)
         self._last_ts = 0
+        # One writer at a time per store (DESIGN.md §13): ingest, history
+        # import (rebalance thread) and purge all serialize here — the
+        # WAL txn protocol and cold version allocation assume a single
+        # in-flight writer. Queries do NOT take this lock; they
+        # synchronize on the index/temporal-engine locks only.
+        self._write_lock = threading.RLock()
         if self.cold.latest_version() > 0:
             self.recover()
 
@@ -120,6 +128,11 @@ class LiveVectorLake:
                fail_after: Optional[str] = None) -> CDCSummary:
         """Ingest one document version. ``fail_after`` in {"intent",
         "cold", "hot"} simulates a crash after that stage (tests only)."""
+        with self._write_lock:
+            return self._ingest_locked(doc_id, text, ts, fail_after)
+
+    def _ingest_locked(self, doc_id: str, text: str, ts: Optional[int],
+                       fail_after: Optional[str]) -> CDCSummary:
         ts = self._monotonic_ts(ts)
         chunks = chunk_document(text)
         old_hashes = self.hash_store.get(doc_id)
@@ -155,19 +168,22 @@ class LiveVectorLake:
             "doc_id": doc_id, "ts": ts, "cold_version": expected_version,
             "doc_version": doc_version,
             "hashes": [c.chunk_id for c in chunks]})
-        if fail_after == "intent":
+        if fail_after == "intent":                 # legacy per-call shim
             raise FaultInjected("crash after WAL INTENT")
+        FAULTS.check("store:ingest:intent", exc=FaultInjected)
 
         version = self.cold.commit(records, closures, ts)
         assert version == expected_version
         self.wal.mark(txn, "COLD_OK")
-        if fail_after == "cold":
+        if fail_after == "cold":                   # legacy per-call shim
             raise FaultInjected("crash after cold-tier commit")
+        FAULTS.check("store:ingest:cold", exc=FaultInjected)
 
         self._hot_apply(records, closures)
         self.wal.mark(txn, "HOT_OK")
-        if fail_after == "hot":
+        if fail_after == "hot":                    # legacy per-call shim
             raise FaultInjected("crash after hot-tier apply")
+        FAULTS.check("store:ingest:hot", exc=FaultInjected)
 
         self.hash_store.put(doc_id, [c.chunk_id for c in chunks], doc_version)
         self.wal.mark(txn, "COMMIT")
@@ -263,15 +279,21 @@ class LiveVectorLake:
             return out
 
     def query_batcher(self, k: int = 5, max_batch: int = 32,
-                      max_wait_s: float = 0.0) -> "Batcher":
+                      max_wait_s: float = 0.0,
+                      max_queue: Optional[int] = None,
+                      default_deadline_s: Optional[float] = None
+                      ) -> "Batcher":
         """A serving-layer batcher (serve/batcher.py) over this store:
         concurrent queries queue and coalesce into batched
         ``query_batch`` passes, bucketed by temporal intent so one
         dispatched batch maps to ONE engine group — all concurrent
-        CURRENT queries land in a single hot-tier batch."""
+        CURRENT queries land in a single hot-tier batch. ``max_queue``
+        turns on admission control, ``default_deadline_s`` per-request
+        deadlines (DESIGN.md §13)."""
         from ..serve.batcher import intent_batcher
         return intent_batcher(self.query_batch, k=k, max_batch=max_batch,
-                              max_wait_s=max_wait_s)
+                              max_wait_s=max_wait_s, max_queue=max_queue,
+                              default_deadline_s=default_deadline_s)
 
     # ------------------------------------------------------------------
     # fault tolerance
@@ -392,6 +414,14 @@ class LiveVectorLake:
         shard that served it before) resumes instead of duplicating
         rows. ``fail_after_events`` crashes after N applied events
         (tests only)."""
+        with self._write_lock:
+            return self._import_history_locked(doc_id, rows, doc_version,
+                                               fail_after_events)
+
+    def _import_history_locked(self, doc_id: str,
+                               rows: Sequence[ChunkRecord],
+                               doc_version: int,
+                               fail_after_events: Optional[int]) -> dict:
         from .cdc import history_to_events
         events = history_to_events(list(rows))
         have, _ = self.export_doc_history(doc_id)
@@ -449,10 +479,10 @@ class LiveVectorLake:
         entry go away; the cold history stays on disk — it is immutable
         audit state, and the fabric's ownership filter keeps non-owners'
         copies out of every query result. Returns hot rows removed."""
-        keys = [k for k in self.hot._by_key if k[0] == doc_id]
-        removed = self.hot.delete(keys)
-        self.hash_store.remove(doc_id)
-        return removed
+        with self._write_lock:
+            removed = self.hot.delete(self.hot.doc_keys(doc_id))
+            self.hash_store.remove(doc_id)
+            return removed
 
     def compact_cold(self, min_run: int = 2) -> dict:
         """Cold-tier maintenance: rewrite fully-closed commit runs into

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
+import threading
 from datetime import datetime, timezone
 from typing import Optional
 
@@ -294,6 +295,12 @@ class TemporalEngine:
         self.rescore_factor = int(rescore_factor)
         self._resident: Optional[ResidentHistory] = None
         self._snap_cache: dict[tuple, ColdSnapshot] = {}
+        # serializes resident-history mutation (on_commit from the write
+        # thread, the safety _advance from query threads) and snap-cache
+        # bookkeeping — the fused kernel itself runs on array refs taken
+        # under the lock, which stay consistent after release because
+        # appends land beyond the sliced n (DESIGN.md §13)
+        self._lock = threading.RLock()
         self.snap_hits = 0
         self.snap_misses = 0
         self.resident_builds = 0
@@ -303,8 +310,9 @@ class TemporalEngine:
     def invalidate(self) -> None:
         """Full reset (store recovery / external log mutation): the next
         query re-seeds the resident columns from the checkpointed fold."""
-        self._resident = None
-        self._snap_cache.clear()
+        with self._lock:
+            self._resident = None
+            self._snap_cache.clear()
 
     def on_commit(self, version: Optional[int] = None,
                   records=None, closures=None) -> None:
@@ -314,17 +322,18 @@ class TemporalEngine:
         (version, records, closures) and the resident is exactly one
         version behind, they are applied directly — no segment re-read;
         otherwise fall back to replaying the durable log entries."""
-        self._snap_cache.clear()
-        res = self._resident
-        if res is None:
-            return                            # lazily seeded on first query
-        if (version is not None and records is not None
-                and res.applied_version == version - 1):
-            self.resident_appended_rows += res.apply_records(
-                records, closures or [], version)
-            res.applied_version = version
-            return
-        self._advance(res)
+        with self._lock:
+            self._snap_cache.clear()
+            res = self._resident
+            if res is None:
+                return                        # lazily seeded on first query
+            if (version is not None and records is not None
+                    and res.applied_version == version - 1):
+                self.resident_appended_rows += res.apply_records(
+                    records, closures or [], version)
+                res.applied_version = version
+                return
+            self._advance(res)
 
     def _advance(self, res: ResidentHistory) -> None:
         latest = self.cold.latest_version()
@@ -335,43 +344,47 @@ class TemporalEngine:
         res.applied_version = latest
 
     def _resident_history(self) -> ResidentHistory:
-        if self._resident is None:
-            import os
-            res = ResidentHistory(
-                self.cold.dim, quantized=self.quantized,
-                f32_path=os.path.join(self.cold.root, "resident_f32.bin"))
-            snap = self.cold.snapshot(include_closed=True)
-            latest = self.cold.latest_version()
-            q8_rows = None
-            if self.quantized:
-                # reuse the checkpoint's persisted quantization verbatim
-                # when one exists at exactly the latest version (bit-
-                # deterministic round-trip across restarts)
-                got = self.cold.checkpoint_q8_at(latest, len(snap))
-                if got is not None:
-                    q8_rows = got[0]
-            res.seed(snap, latest, q8_rows=q8_rows)
-            self._resident = res
-            self.resident_builds += 1
-        else:
-            self._advance(self._resident)     # safety: never serve stale
-        return self._resident
+        with self._lock:
+            if self._resident is None:
+                import os
+                res = ResidentHistory(
+                    self.cold.dim, quantized=self.quantized,
+                    f32_path=os.path.join(self.cold.root,
+                                          "resident_f32.bin"))
+                snap = self.cold.snapshot(include_closed=True)
+                latest = self.cold.latest_version()
+                q8_rows = None
+                if self.quantized:
+                    # reuse the checkpoint's persisted quantization
+                    # verbatim when one exists at exactly the latest
+                    # version (bit-deterministic across restarts)
+                    got = self.cold.checkpoint_q8_at(latest, len(snap))
+                    if got is not None:
+                        q8_rows = got[0]
+                res.seed(snap, latest, q8_rows=q8_rows)
+                self._resident = res
+                self.resident_builds += 1
+            else:
+                self._advance(self._resident)  # safety: never serve stale
+            return self._resident
 
     def _snapshot_at(self, ts: Optional[int], include_closed: bool = False
                      ) -> ColdSnapshot:
         """Memoized ``ColdTier.snapshot``; FIFO-bounded. The cold tier is
         append-only, so a (latest version, ts) snapshot is immutable."""
-        key = (self.cold.latest_version(), ts, include_closed)
-        snap = self._snap_cache.get(key)
-        if snap is None:
+        with self._lock:
+            key = (self.cold.latest_version(), ts, include_closed)
+            snap = self._snap_cache.get(key)
+            if snap is not None:
+                self.snap_hits += 1
+                return snap
             self.snap_misses += 1
-            snap = self.cold.snapshot(as_of_ts=ts,
-                                      include_closed=include_closed)
+        snap = self.cold.snapshot(as_of_ts=ts,
+                                  include_closed=include_closed)
+        with self._lock:
             while len(self._snap_cache) >= self.SNAP_CACHE_MAX:
                 self._snap_cache.pop(next(iter(self._snap_cache)))
             self._snap_cache[key] = snap
-        else:
-            self.snap_hits += 1
         return snap
 
     # ------------------------------------------------------------------

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import json
 import os
+import threading
 import time
 from typing import Any, Optional
 
@@ -40,6 +41,10 @@ class WriteAheadLog:
         self._next_txn = 1
         self._state: dict[int, str] = {}
         self._payload: dict[int, dict] = {}
+        # txn allocation + line append must be atomic together: ingest
+        # (serving thread) and seal/merge publishes (maintenance worker)
+        # write the same file (DESIGN.md §13)
+        self._lock = threading.Lock()
         if os.path.exists(path):
             self._replay_file()
 
@@ -52,25 +57,28 @@ class WriteAheadLog:
             os.fsync(f.fileno())
 
     def begin(self, op: str, payload: Optional[dict[str, Any]] = None) -> int:
-        txn = self._next_txn
-        self._next_txn += 1
-        rec = {"txn": txn, "state": INTENT, "op": op,
-               "payload": payload or {}, "ts": time.time_ns() // 1000}
-        self._append(rec)
-        self._state[txn] = INTENT
-        self._payload[txn] = rec["payload"]
-        return txn
+        with self._lock:
+            txn = self._next_txn
+            self._next_txn += 1
+            rec = {"txn": txn, "state": INTENT, "op": op,
+                   "payload": payload or {}, "ts": time.time_ns() // 1000}
+            self._append(rec)
+            self._state[txn] = INTENT
+            self._payload[txn] = rec["payload"]
+            return txn
 
     def mark(self, txn: int, state: str) -> None:
         if state not in _ORDER:
             raise ValueError(f"unknown WAL state {state!r}")
-        cur = self._state.get(txn)
-        if cur is None:
-            raise KeyError(f"unknown txn {txn}")
-        if _ORDER[state] <= _ORDER[cur] and state != cur:
-            raise ValueError(f"txn {txn}: cannot move {cur} -> {state}")
-        self._append({"txn": txn, "state": state, "ts": time.time_ns() // 1000})
-        self._state[txn] = state
+        with self._lock:
+            cur = self._state.get(txn)
+            if cur is None:
+                raise KeyError(f"unknown txn {txn}")
+            if _ORDER[state] <= _ORDER[cur] and state != cur:
+                raise ValueError(f"txn {txn}: cannot move {cur} -> {state}")
+            self._append({"txn": txn, "state": state,
+                          "ts": time.time_ns() // 1000})
+            self._state[txn] = state
 
     # -- recovery ----------------------------------------------------------
     def _replay_file(self) -> None:
@@ -104,6 +112,10 @@ class WriteAheadLog:
     def truncate_committed(self) -> None:
         """Compaction: rewrite the log keeping only non-terminal txns
         (periodic reconciliation housekeeping)."""
+        with self._lock:
+            self._truncate_locked()
+
+    def _truncate_locked(self) -> None:
         keep = {t for t, s in self._state.items() if s not in _TERMINAL}
         tmp = self._path + ".compact"
         with open(tmp, "w") as f:

@@ -39,6 +39,7 @@ restores segments from the manifest and re-inserts only the delta.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Callable, Optional, Sequence
 
 import numpy as np
@@ -46,6 +47,7 @@ import numpy as np
 from .. import obs
 from ..core.types import (ChunkRecord, SearchResult, VALID_TO_OPEN,
                           pad_queries)
+from ..testing.faults import FAULTS
 from .compaction import CompactionStats, SizeTieredCompactor
 from .manifest import Manifest
 from .memtable import Memtable
@@ -151,6 +153,18 @@ class SegmentedIndex:
         self._scan_scanned = 0
         self._scan_denom = 0
         self.fail_at: Optional[str] = None     # e.g. "seal:before_manifest"
+        # Concurrency (DESIGN.md §13): one reentrant lock serializes every
+        # structural mutation AND the read snapshot. Maintenance stays off
+        # the query path by doing the EXPENSIVE work (merged-segment build,
+        # k-means, file writes) outside the lock — only the atomic publish
+        # and the memtable seal hold it.
+        self._lock = threading.RLock()
+        # When True, the inline write path never compacts; it signals the
+        # maintenance hook ("seal"/"compact") and a background worker
+        # drives seal_if_above()/compact_once() instead.
+        self.deferred_compaction = False
+        self.seal_watermark = 0.75             # fill fraction to wish a seal
+        self.maintenance_hook: Optional[Callable[[str], None]] = None
 
     # ------------------------------------------------------------------
     def __len__(self) -> int:
@@ -172,23 +186,38 @@ class SegmentedIndex:
     # writes
     # ------------------------------------------------------------------
     def insert(self, records: Sequence[ChunkRecord]) -> None:
-        for r in records:
-            key = (r.doc_id, r.position)
-            loc = self._by_key.get(key)
-            if isinstance(loc, int):               # live in memtable: in-place
-                self.mem.overwrite(loc, r)
-                self._mirror(loc)
+        wishes: list[str] = []
+        with self._lock:
+            for r in records:
+                key = (r.doc_id, r.position)
+                loc = self._by_key.get(key)
+                if isinstance(loc, int):           # live in memtable: in-place
+                    self.mem.overwrite(loc, r)
+                    self._mirror(loc)
+                else:
+                    if loc is not None:            # live in a segment: shadow
+                        seg_id, row = loc
+                        self.segments[seg_id].kill(row)
+                    if self.mem.full:
+                        self.seal()
+                    slot = self.mem.put(r)
+                    self._by_key[key] = slot
+                    self._mirror(slot)
+                self.cstats.rows_ingested += 1
+            if self.deferred_compaction:
+                if len(self.mem) >= self._watermark_rows():
+                    wishes.append("seal")
+                if self.compactor.pick(list(self.segments.values())):
+                    wishes.append("compact")
+                # every write ticks the hook so cadence-based jobs
+                # (cold checkpoints) can fire without a seal wish
+                wishes.append("tick")
             else:
-                if loc is not None:                # live in a segment: shadow
-                    seg_id, row = loc
-                    self.segments[seg_id].kill(row)
-                if self.mem.full:
-                    self.seal()
-                slot = self.mem.put(r)
-                self._by_key[key] = slot
-                self._mirror(slot)
-            self.cstats.rows_ingested += 1
-        self.maybe_compact()
+                self.maybe_compact()
+        hook = self.maintenance_hook
+        if hook is not None:
+            for w in wishes:
+                hook(w)
 
     def _mirror(self, slot: int) -> None:
         """Keep the fused scan block's memtable rows in sync: the block is
@@ -199,19 +228,27 @@ class SegmentedIndex:
 
     def delete(self, keys: Sequence[tuple[str, int]]) -> int:
         n = 0
-        for key in keys:
-            loc = self._by_key.pop(key, None)
-            if loc is None:
-                continue
-            if isinstance(loc, int):
-                self.mem.remove(loc)
-                self._mirror(loc)
-            else:
-                seg_id, row = loc
-                self.segments[seg_id].kill(row)
-            n += 1
-        if n:
-            self.maybe_compact()     # delete-heavy streams purge too
+        wish = False
+        with self._lock:
+            for key in keys:
+                loc = self._by_key.pop(key, None)
+                if loc is None:
+                    continue
+                if isinstance(loc, int):
+                    self.mem.remove(loc)
+                    self._mirror(loc)
+                else:
+                    seg_id, row = loc
+                    self.segments[seg_id].kill(row)
+                n += 1
+            if n:
+                if self.deferred_compaction:
+                    wish = bool(self.compactor.pick(
+                        list(self.segments.values())))
+                else:
+                    self.maybe_compact()     # delete-heavy streams purge too
+        if wish and self.maintenance_hook is not None:
+            self.maintenance_hook("compact")
         return n
 
     # ------------------------------------------------------------------
@@ -231,53 +268,114 @@ class SegmentedIndex:
 
     def seal(self) -> Optional[Segment]:
         """Freeze the memtable into a new base segment (IVF-partitioned at
-        or above ivf_min_rows), publish it, and reset the memtable."""
-        if len(self.mem) == 0:
-            return None
-        cols = self.mem.extract()
-        seg = self._new_segment(self._next_id(), cols["emb"],
-                                cols["valid_from"], cols["positions"],
-                                cols["chunk_ids"], cols["doc_ids"],
-                                cols["texts"])
-        self._commit_segments("seal", add=[seg], remove=[])
-        self.segments[seg.seg_id] = seg
-        self._cat = None
-        for row, key in enumerate(cols["keys"]):
-            self._by_key[key] = (seg.seg_id, row)
-        self.mem.reset()
-        self.cstats.rows_written += len(seg)
-        self.cstats.seals += 1
-        return seg
+        or above ivf_min_rows), publish it, and reset the memtable. Runs
+        atomically under the index lock — between extract and reset the
+        sealed rows must live in exactly one place."""
+        with self._lock:
+            if len(self.mem) == 0:
+                return None
+            cols = self.mem.extract()
+            seg = self._new_segment(self._next_id(), cols["emb"],
+                                    cols["valid_from"], cols["positions"],
+                                    cols["chunk_ids"], cols["doc_ids"],
+                                    cols["texts"])
+            self._commit_segments("seal", add=[seg], remove=[])
+            self.segments[seg.seg_id] = seg
+            self._cat = None
+            for row, key in enumerate(cols["keys"]):
+                self._by_key[key] = (seg.seg_id, row)
+            self.mem.reset()
+            self.cstats.rows_written += len(seg)
+            self.cstats.seals += 1
+            return seg
+
+    def _watermark_rows(self) -> int:
+        return max(1, int(self.seal_watermark * self.mem.capacity))
+
+    def seal_if_above(self, frac: Optional[float] = None) -> bool:
+        """Background-seal entry point (maintenance worker): seal only if
+        the memtable fill has reached ``frac`` (default: the configured
+        watermark). Returns True iff a segment was published."""
+        frac = self.seal_watermark if frac is None else frac
+        with self._lock:
+            if len(self.mem) < max(1, int(frac * self.mem.capacity)):
+                return False
+            return self.seal() is not None
 
     def maybe_compact(self) -> int:
         """Run the deterministic compactor to a fixed point; returns the
-        number of merges performed."""
+        number of merges performed. A no-op in deferred mode — the
+        maintenance worker drives ``compact_once`` instead."""
+        if self.deferred_compaction:
+            return 0
         n = 0
-        while True:
+        with self._lock:
+            while True:
+                victims = self.compactor.pick(list(self.segments.values()))
+                if not victims:
+                    return n
+                self._merge(victims)
+                n += 1
+
+    def compact_once(self) -> bool:
+        """One background-safe compaction round: victim pick + alive-row
+        snapshot under the lock, the EXPENSIVE merged-segment build
+        (fp32 fetch, re-quantize, k-means, file write) outside it so
+        queries keep serving on the old segment set, then the atomic
+        publish back under the lock. Returns True iff a merge was
+        published — the worker calls it in a loop to reach the
+        compactor's fixed point.
+
+        Rows that die or move while the build runs off-lock are
+        reconciled at publish: ``_publish_merge`` only re-points a key at
+        the merged copy if ``_by_key`` still maps it to the exact victim
+        row the build snapshotted; otherwise the merged copy is killed on
+        arrival, so a concurrent delete/overwrite can never be
+        resurrected by a background merge."""
+        with self._lock:
             victims = self.compactor.pick(list(self.segments.values()))
             if not victims:
-                return n
-            self._merge(victims)
-            n += 1
+                return False
+            keep = [(v, np.nonzero(v.alive)[0]) for v in victims]
+            seg_id = self._next_id()
+        merged = self._build_merged(keep, seg_id)     # heavy, off-lock
+        if merged is not None and self.manifest is not None:
+            # file write off-lock too; _commit_segments skips the re-save
+            self._seg_meta[merged.seg_id] = merged.save(self.root)
+        with self._lock:
+            if any(v.seg_id not in self.segments for v in victims):
+                # the segment set changed under us (reset/rebuild):
+                # abandon — the orphan file is swept at the next publish
+                if merged is not None:
+                    self._seg_meta.pop(merged.seg_id, None)
+                return False
+            self._publish_merge(victims, keep, merged)
+        return True
 
     def _merge(self, victims: list[Segment]) -> None:
         keep = [(v, np.nonzero(v.alive)[0]) for v in victims]
-        purged = sum(len(v) - len(rows) for v, rows in keep)
+        self._publish_merge(victims, keep,
+                            self._build_merged(keep, self._next_id()))
+
+    def _build_merged(self, keep: list, seg_id: str) -> Optional[Segment]:
         total = sum(len(rows) for _, rows in keep)
         if total == 0:
-            merged: Optional[Segment] = None
-        else:
-            # fetch_f32 (not .emb): a quantized victim's fp32 rows live in
-            # its sidecar — the merge re-quantizes the merged row set so
-            # scale tightness never degrades across merge generations
-            merged = self._new_segment(
-                self._next_id(),
-                np.concatenate([v.fetch_f32(rows) for v, rows in keep]),
-                np.concatenate([v.valid_from[rows] for v, rows in keep]),
-                np.concatenate([v.positions[rows] for v, rows in keep]),
-                [v.chunk_ids[i] for v, rows in keep for i in rows],
-                [v.doc_ids[i] for v, rows in keep for i in rows],
-                [v.texts[i] for v, rows in keep for i in rows])
+            return None
+        # fetch_f32 (not .emb): a quantized victim's fp32 rows live in
+        # its sidecar — the merge re-quantizes the merged row set so
+        # scale tightness never degrades across merge generations
+        return self._new_segment(
+            seg_id,
+            np.concatenate([v.fetch_f32(rows) for v, rows in keep]),
+            np.concatenate([v.valid_from[rows] for v, rows in keep]),
+            np.concatenate([v.positions[rows] for v, rows in keep]),
+            [v.chunk_ids[i] for v, rows in keep for i in rows],
+            [v.doc_ids[i] for v, rows in keep for i in rows],
+            [v.texts[i] for v, rows in keep for i in rows])
+
+    def _publish_merge(self, victims: list[Segment], keep: list,
+                       merged: Optional[Segment]) -> None:
+        purged = sum(len(v) - len(rows) for v, rows in keep)
         self._commit_segments("merge", add=[merged] if merged else [],
                               remove=victims)
         self._cat = None
@@ -286,8 +384,17 @@ class SegmentedIndex:
             self._seg_meta.pop(v.seg_id, None)
         if merged is not None:
             self.segments[merged.seg_id] = merged
-            for row in range(len(merged)):
-                self._by_key[merged.key(row)] = (merged.seg_id, row)
+            mrow = 0
+            for v, rows in keep:
+                for r in rows:
+                    key = merged.key(mrow)
+                    if self._by_key.get(key) == (v.seg_id, int(r)):
+                        self._by_key[key] = (merged.seg_id, mrow)
+                    else:
+                        # key moved or died while the merge was built
+                        # off-lock: the merged copy is dead on arrival
+                        merged.kill(mrow)
+                    mrow += 1
             self.cstats.rows_written += len(merged)
         self.cstats.merges += 1
         self.cstats.tombstones_purged += purged
@@ -309,7 +416,8 @@ class SegmentedIndex:
                 "add": [s.filename() for s in add],
                 "remove": [s.filename() for s in remove]})
         for seg in add:
-            self._seg_meta[seg.seg_id] = seg.save(self.root)
+            if seg.seg_id not in self._seg_meta:   # compact_once pre-saves
+                self._seg_meta[seg.seg_id] = seg.save(self.root)
         self._fault(f"{op}:before_manifest")
         removed = {s.seg_id for s in remove}
         # add-segments are not yet registered in self.segments
@@ -327,9 +435,10 @@ class SegmentedIndex:
             self.wal.mark(txn, "COMMIT")
 
     def _fault(self, point: str) -> None:
-        if self.fail_at == point:
+        if self.fail_at == point:                  # legacy per-index shim
             self.fail_at = None
             raise CompactionInterrupted(f"injected crash at {point}")
+        FAULTS.check(f"lsm:{point}", exc=CompactionInterrupted)
 
     # ------------------------------------------------------------------
     # reads (batched, array-native — DESIGN.md §8, §11)
@@ -452,6 +561,14 @@ class SegmentedIndex:
         for both source kinds."""
         q = np.atleast_2d(np.asarray(queries, np.float32))
         nq = q.shape[0]
+        # the whole read runs under the index lock: maintenance keeps its
+        # heavy work OFF the lock (compact_once builds off-lock), so a
+        # query only ever waits on an atomic publish or a memtable seal
+        with self._lock:
+            return self._search_locked(q, nq, k)
+
+    def _search_locked(self, q: np.ndarray, nq: int, k: int
+                       ) -> list[list[SearchResult]]:
         if not self._by_key:
             return [[] for _ in range(nq)]
         cat = self._catalog()
@@ -586,10 +703,12 @@ class SegmentedIndex:
         return out
 
     def active_embeddings(self) -> np.ndarray:
-        parts = [self.mem._emb[self.mem._active]]
-        parts += [s.fetch_f32(np.nonzero(s.alive)[0])
-                  for s in self.segments.values()]
-        return np.concatenate(parts) if parts else np.zeros((0, self.dim))
+        with self._lock:
+            parts = [self.mem._emb[self.mem._active]]
+            parts += [s.fetch_f32(np.nonzero(s.alive)[0])
+                      for s in self.segments.values()]
+            return (np.concatenate(parts) if parts
+                    else np.zeros((0, self.dim)))
 
     # ------------------------------------------------------------------
     # recovery + reset
@@ -600,6 +719,10 @@ class SegmentedIndex:
         (``records``), and insert only the uncovered delta into the
         memtable. Any integrity failure falls back to a full re-insert —
         the cold tier is always the source of truth."""
+        with self._lock:
+            return self._rebuild_locked(records)
+
+    def _rebuild_locked(self, records: Sequence[ChunkRecord]) -> dict:
         self.reset(drop_disk=False)
         auth = {(r.doc_id, r.position): r for r in records}
         claimed: dict[tuple[str, int], tuple[str, int]] = {}
@@ -664,19 +787,24 @@ class SegmentedIndex:
             ivf_state=ivf_state)._with_alive(seg.alive)
 
     def reset(self, drop_disk: bool = True) -> None:
-        self.mem.reset()
-        self.segments.clear()
-        self._by_key.clear()
-        self._seg_meta.clear()
-        self._cat = None
-        self._scan_scanned = self._scan_denom = 0
-        self.cstats = CompactionStats()
-        if drop_disk and self.manifest is not None:
-            self.manifest.commit([], seq=self._seq)
-            self.manifest.cleanup_orphans(set())
+        with self._lock:
+            self.mem.reset()
+            self.segments.clear()
+            self._by_key.clear()
+            self._seg_meta.clear()
+            self._cat = None
+            self._scan_scanned = self._scan_denom = 0
+            self.cstats = CompactionStats()
+            if drop_disk and self.manifest is not None:
+                self.manifest.commit([], seq=self._seq)
+                self.manifest.cleanup_orphans(set())
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:
+        with self._lock:
+            return self._stats_locked()
+
+    def _stats_locked(self) -> dict:
         seg_rows = sum(len(s) for s in self.segments.values())
         seg_alive = sum(s.n_alive for s in self.segments.values())
         return {

@@ -89,12 +89,15 @@ class Memtable:
         self._free.append(slot)
 
     def reset(self) -> None:
-        self._emb[:] = 0.0
+        # swap in FRESH arrays instead of zeroing in place: any reader
+        # holding references from before a (background) seal keeps seeing
+        # the pre-seal rows, never a zeroed-under-it column
+        self._emb = np.zeros((self.capacity, self.dim), np.float32)
         if self._q8 is not None:
-            self._q8[:] = 0
-        self._active[:] = False
-        self._valid_from[:] = 0
-        self._positions[:] = 0
+            self._q8 = np.zeros((self.capacity, self.dim), np.int8)
+        self._active = np.zeros(self.capacity, bool)
+        self._valid_from = np.zeros(self.capacity, np.int64)
+        self._positions = np.zeros(self.capacity, np.int64)
         self._chunk_ids = [None] * self.capacity
         self._doc_ids = [None] * self.capacity
         self._texts = [""] * self.capacity

@@ -16,11 +16,11 @@ from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                       REGISTRY, geometric_bounds)
 from .slowlog import SLOW_QUERIES, SlowQueryLog
 from .trace import (NOOP_SPAN, Span, Trace, add, current_trace, enabled,
-                    scan_row_reads, set_enabled, span, trace)
+                    scan_row_reads, set_enabled, span, subtrace, trace)
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "REGISTRY",
     "geometric_bounds", "SLOW_QUERIES", "SlowQueryLog", "NOOP_SPAN",
     "Span", "Trace", "add", "current_trace", "enabled",
-    "scan_row_reads", "set_enabled", "span", "trace",
+    "scan_row_reads", "set_enabled", "span", "subtrace", "trace",
 ]

@@ -12,10 +12,17 @@ relative), validated against numpy percentiles in tests.
 Everything is plain-Python and allocation-light: ``Counter.inc`` is one
 float add, ``Histogram.observe`` one bisect + three adds — cheap enough
 to stay ALWAYS on (the trace layer is the part that toggles).
+
+Thread safety (DESIGN.md §13): serving threads, the batcher dispatcher,
+and maintenance workers all hit the same series concurrently, so every
+mutation (inc/set/observe) and every read that folds multiple fields
+(quantile/summary/snapshot) holds the instrument's lock — read-modify-
+write sequences like ``self.value += n`` are NOT atomic in CPython.
 """
 from __future__ import annotations
 
 import json
+import threading
 from bisect import bisect_right
 from typing import Optional
 
@@ -32,16 +39,21 @@ _DEFAULT_BOUNDS = tuple(geometric_bounds())
 
 
 class Counter:
-    __slots__ = ("value",)
+    __slots__ = ("value", "_lock")
 
     def __init__(self):
         self.value = 0.0
+        self._lock = threading.Lock()
 
     def inc(self, n: float = 1.0) -> None:
-        self.value += n
+        with self._lock:
+            self.value += n
 
 
 class Gauge:
+    """Last-write-wins; a single attribute store is atomic under the
+    GIL, so no lock is needed."""
+
     __slots__ = ("value",)
 
     def __init__(self):
@@ -55,7 +67,8 @@ class Histogram:
     """Fixed-bucket histogram: bucket i counts observations in
     (bounds[i-1], bounds[i]]; the last slot is the overflow bucket."""
 
-    __slots__ = ("bounds", "counts", "count", "sum", "min", "max")
+    __slots__ = ("bounds", "counts", "count", "sum", "min", "max",
+                 "_lock")
 
     def __init__(self, bounds=None):
         self.bounds = list(bounds) if bounds is not None \
@@ -65,48 +78,54 @@ class Histogram:
         self.sum = 0.0
         self.min = float("inf")
         self.max = float("-inf")
+        # RLock: summary() reads quantile() under the same lock
+        self._lock = threading.RLock()
 
     def observe(self, v: float) -> None:
         v = float(v)
-        self.counts[bisect_right(self.bounds, v)] += 1
-        self.count += 1
-        self.sum += v
-        if v < self.min:
-            self.min = v
-        if v > self.max:
-            self.max = v
+        with self._lock:
+            self.counts[bisect_right(self.bounds, v)] += 1
+            self.count += 1
+            self.sum += v
+            if v < self.min:
+                self.min = v
+            if v > self.max:
+                self.max = v
 
     def quantile(self, q: float) -> Optional[float]:
         """Interpolated quantile from bucket counts (no samples kept)."""
-        if self.count == 0:
-            return None
-        rank = q * self.count
-        cum = 0.0
-        for i, c in enumerate(self.counts):
-            if c == 0:
-                continue
-            if cum + c >= rank:
-                lo = self.bounds[i - 1] if i > 0 else self.min
-                hi = self.bounds[i] if i < len(self.bounds) else self.max
-                frac = (rank - cum) / c
-                v = lo + frac * (hi - lo)
-                return min(max(v, self.min), self.max)
-            cum += c
-        return self.max
+        with self._lock:
+            if self.count == 0:
+                return None
+            rank = q * self.count
+            cum = 0.0
+            for i, c in enumerate(self.counts):
+                if c == 0:
+                    continue
+                if cum + c >= rank:
+                    lo = self.bounds[i - 1] if i > 0 else self.min
+                    hi = self.bounds[i] if i < len(self.bounds) \
+                        else self.max
+                    frac = (rank - cum) / c
+                    v = lo + frac * (hi - lo)
+                    return min(max(v, self.min), self.max)
+                cum += c
+            return self.max
 
     @property
     def mean(self) -> float:
         return self.sum / self.count if self.count else 0.0
 
     def summary(self) -> dict:
-        if self.count == 0:
-            return {"count": 0}
-        return {"count": self.count, "sum": round(self.sum, 6),
-                "mean": round(self.mean, 6),
-                "min": round(self.min, 6), "max": round(self.max, 6),
-                "p50": round(self.quantile(0.5), 6),
-                "p99": round(self.quantile(0.99), 6),
-                "p999": round(self.quantile(0.999), 6)}
+        with self._lock:
+            if self.count == 0:
+                return {"count": 0}
+            return {"count": self.count, "sum": round(self.sum, 6),
+                    "mean": round(self.mean, 6),
+                    "min": round(self.min, 6), "max": round(self.max, 6),
+                    "p50": round(self.quantile(0.5), 6),
+                    "p99": round(self.quantile(0.99), 6),
+                    "p999": round(self.quantile(0.999), 6)}
 
 
 def _series_key(name: str, labels: dict) -> str:
@@ -125,47 +144,53 @@ class MetricsRegistry:
         self._counters: dict[str, Counter] = {}
         self._gauges: dict[str, Gauge] = {}
         self._hists: dict[str, Histogram] = {}
+        self._lock = threading.Lock()
 
     def counter(self, name: str, **labels) -> Counter:
         key = _series_key(name, labels)
         c = self._counters.get(key)
         if c is None:
-            c = self._counters[key] = Counter()
+            with self._lock:
+                c = self._counters.setdefault(key, Counter())
         return c
 
     def gauge(self, name: str, **labels) -> Gauge:
         key = _series_key(name, labels)
         g = self._gauges.get(key)
         if g is None:
-            g = self._gauges[key] = Gauge()
+            with self._lock:
+                g = self._gauges.setdefault(key, Gauge())
         return g
 
     def histogram(self, name: str, bounds=None, **labels) -> Histogram:
         key = _series_key(name, labels)
         h = self._hists.get(key)
         if h is None:
-            h = self._hists[key] = Histogram(bounds)
+            with self._lock:
+                h = self._hists.setdefault(key, Histogram(bounds))
         return h
 
     def snapshot(self) -> dict:
         """One queryable view of every series: counters/gauges by value,
         histograms by count/sum/min/max/p50/p99/p99.9."""
+        with self._lock:
+            counters = sorted(self._counters.items())
+            gauges = sorted(self._gauges.items())
+            hists = sorted(self._hists.items())
         return {
-            "counters": {k: v.value
-                         for k, v in sorted(self._counters.items())},
-            "gauges": {k: v.value
-                       for k, v in sorted(self._gauges.items())},
-            "histograms": {k: h.summary()
-                           for k, h in sorted(self._hists.items())},
+            "counters": {k: v.value for k, v in counters},
+            "gauges": {k: v.value for k, v in gauges},
+            "histograms": {k: h.summary() for k, h in hists},
         }
 
     def to_json(self, indent: Optional[int] = 1) -> str:
         return json.dumps(self.snapshot(), indent=indent)
 
     def reset(self) -> None:
-        self._counters.clear()
-        self._gauges.clear()
-        self._hists.clear()
+        with self._lock:
+            self._counters.clear()
+            self._gauges.clear()
+            self._hists.clear()
 
 
 REGISTRY = MetricsRegistry()

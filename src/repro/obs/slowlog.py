@@ -7,16 +7,22 @@ examples print at exit.
 """
 from __future__ import annotations
 
+import threading
 from collections import deque
 from typing import Optional
 
 
 class SlowQueryLog:
+    """Thread-safe: concurrent serving threads finish traces
+    simultaneously, so observe/configure/summary hold a lock
+    (DESIGN.md §13)."""
+
     def __init__(self, budget_ms: float = 100.0, capacity: int = 32):
         self.budget_ms = float(budget_ms)
         self._ring: deque = deque(maxlen=int(capacity))
         self.slowest = None          # slowest finished Trace ever seen
         self.observed = 0
+        self._lock = threading.Lock()
 
     @property
     def capacity(self) -> int:
@@ -26,40 +32,45 @@ class SlowQueryLog:
                   capacity: Optional[int] = None) -> None:
         """Adjust the SLO budget and/or ring size (keeps the newest
         retained traces when shrinking)."""
-        if budget_ms is not None:
-            self.budget_ms = float(budget_ms)
-        if capacity is not None and capacity != self._ring.maxlen:
-            self._ring = deque(self._ring, maxlen=int(capacity))
+        with self._lock:
+            if budget_ms is not None:
+                self.budget_ms = float(budget_ms)
+            if capacity is not None and capacity != self._ring.maxlen:
+                self._ring = deque(self._ring, maxlen=int(capacity))
 
     def observe(self, tr) -> None:
         """Called by the trace layer for EVERY finished trace."""
-        self.observed += 1
-        if self.slowest is None or tr.wall_ms > self.slowest.wall_ms:
-            self.slowest = tr
-        if tr.wall_ms > self.budget_ms:
-            self._ring.append(tr)
+        with self._lock:
+            self.observed += 1
+            if self.slowest is None or tr.wall_ms > self.slowest.wall_ms:
+                self.slowest = tr
+            if tr.wall_ms > self.budget_ms:
+                self._ring.append(tr)
 
     def traces(self) -> list:
         """Retained over-budget traces, oldest first."""
-        return list(self._ring)
+        with self._lock:
+            return list(self._ring)
 
     def summary(self) -> dict:
-        return {
-            "budget_ms": self.budget_ms,
-            "capacity": self._ring.maxlen,
-            "observed": self.observed,
-            "over_budget_retained": len(self._ring),
-            "slowest_ms": (round(self.slowest.wall_ms, 3)
-                           if self.slowest else None),
-            "recent": [{"name": t.name, "intent": t.intent,
-                        "wall_ms": round(t.wall_ms, 3)}
-                       for t in list(self._ring)[-5:]],
-        }
+        with self._lock:
+            return {
+                "budget_ms": self.budget_ms,
+                "capacity": self._ring.maxlen,
+                "observed": self.observed,
+                "over_budget_retained": len(self._ring),
+                "slowest_ms": (round(self.slowest.wall_ms, 3)
+                               if self.slowest else None),
+                "recent": [{"name": t.name, "intent": t.intent,
+                            "wall_ms": round(t.wall_ms, 3)}
+                           for t in list(self._ring)[-5:]],
+            }
 
     def reset(self) -> None:
-        self._ring.clear()
-        self.slowest = None
-        self.observed = 0
+        with self._lock:
+            self._ring.clear()
+            self.slowest = None
+            self.observed = 0
 
 
 SLOW_QUERIES = SlowQueryLog()

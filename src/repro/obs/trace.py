@@ -203,6 +203,44 @@ class _TraceCtx:
         return False
 
 
+class _SubtraceCtx:
+    """A detached trace for a worker thread: sets the thread's
+    contextvar so every ``span()``/``add()`` underneath attaches here,
+    but does NOT feed the registry/slow-query log — the dispatching
+    thread grafts the finished subtree into its own trace."""
+
+    __slots__ = ("name", "tr", "token", "t0")
+
+    def __init__(self, name: str):
+        self.name = name
+
+    def __enter__(self) -> Span:
+        self.tr = Trace(self.name)
+        self.token = _ACTIVE.set(self.tr)
+        self.t0 = time.perf_counter()
+        return self.tr.root
+
+    def __exit__(self, etype, exc, tb):
+        tr = self.tr
+        tr.wall_ms = tr.root.wall_ms = \
+            (time.perf_counter() - self.t0) * 1e3
+        if etype is not None:
+            tr.root.status = f"error:{etype.__name__}"
+        _ACTIVE.reset(self.token)
+        return False
+
+
+def subtrace(name: str):
+    """Open a detached span tree in a worker thread (context manager
+    yielding the root span). Contextvars do not propagate into
+    ``ThreadPoolExecutor`` workers, so a parallel scatter opens one
+    subtrace per shard and grafts the finished roots into the parent
+    trace's span. Disabled => shared no-op."""
+    if not _ENABLED:
+        return NOOP_SPAN
+    return _SubtraceCtx(name)
+
+
 def current_trace() -> Optional[Trace]:
     return _ACTIVE.get()
 

@@ -1,4 +1,5 @@
-"""Request batching with straggler mitigation.
+"""Request batching with admission control, deadlines, and straggler
+mitigation (DESIGN.md §13).
 
 Continuous-batching-lite: requests queue; the dispatcher assembles fixed-
 size batches (pad to max_batch) grouped into length buckets so positional
@@ -7,10 +8,23 @@ requests: if a batch's execution exceeds `hedge_factor x` the EWMA
 latency, the work is re-issued (in-process simulation of the multi-replica
 hedge; the hook is where a real deployment would target a second replica).
 
+Admission control: with ``max_queue`` set, a submit past the high
+watermark is REJECTED WITH AN ERROR (``AdmissionRejected`` on the
+returned request) instead of growing the queue without bound — load is
+shed explicitly at the front door, never by silently dropping queued
+work. Per-request deadlines (``default_deadline_s`` / per-submit
+``deadline_s``) are absolute instants measured from submission:
+requests that expire while queued complete with ``DeadlineExceeded``
+before wasting execution, and a dispatched batch runs under a
+``deadline_scope`` at the tightest member deadline so the layers below
+(planner scatter) can stop early.
+
 Failure isolation: a batch whose execution raises (e.g. a shard failing
 mid-gather in the fabric planner) completes ONLY its own requests with
 ``error`` set — the rest of the queue, including other intent buckets,
-stays drainable and later submits still work.
+stays drainable and later submits still work. All completion paths go
+through one idempotent ``_complete`` so no path can double-complete or
+double-count a request.
 
 Observability (DESIGN.md §12): the batcher is the TRACE ROOT of the
 serving stack — each dispatched batch opens one ``obs.trace("batch")``
@@ -26,11 +40,19 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 import time
 from collections import deque
 from typing import Any, Callable, Optional
 
 from ..obs import REGISTRY, trace
+from .deadline import DeadlineExceeded, deadline_scope
+
+
+class AdmissionRejected(RuntimeError):
+    """Submit refused: the admission queue is at its high watermark.
+    The caller sees the rejection immediately (request completes with
+    this error) and can back off — nothing was enqueued."""
 
 
 @dataclasses.dataclass
@@ -39,10 +61,12 @@ class Request:
     payload: Any
     bucket: Any = 0            # any equality-comparable bucket key
     enqueued_at: float = 0.0
+    deadline_at: Optional[float] = None  # absolute perf_counter instant
     result: Any = None
     done: bool = False
     hedged: bool = False
-    error: Optional[Exception] = None   # set iff the batch execution failed
+    error: Optional[Exception] = None   # set iff the request failed
+    info: dict = dataclasses.field(default_factory=dict)
 
 
 class Batcher:
@@ -52,13 +76,22 @@ class Batcher:
                  max_batch: int = 8, max_wait_s: float = 0.0,
                  bucket_fn: Optional[Callable[[Any], Any]] = None,
                  hedge_factor: float = 3.0,
-                 label: Optional[str] = None):
+                 label: Optional[str] = None,
+                 max_queue: Optional[int] = None,
+                 default_deadline_s: Optional[float] = None,
+                 annotate: Optional[Callable[[], Optional[dict]]] = None):
         self.run_batch = run_batch
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
         self.bucket_fn = bucket_fn or (lambda p: 0)
         self.hedge_factor = hedge_factor
+        self.max_queue = max_queue
+        self.default_deadline_s = default_deadline_s
+        self.annotate = annotate
         self._queue: deque[Request] = deque()
+        # admission check + append must be atomic: submits may come from
+        # a different thread than the drain loop (DESIGN.md §13)
+        self._qlock = threading.Lock()
         self._next_id = 0
         self._lat_ewma: Optional[float] = None
         # registry-backed stats (one labeled series set per instance)
@@ -68,6 +101,9 @@ class Batcher:
         self._c_requests = REGISTRY.counter("batcher_requests", **lbl)
         self._c_hedges = REGISTRY.counter("batcher_hedges", **lbl)
         self._c_failed = REGISTRY.counter("batcher_failed_batches", **lbl)
+        self._c_rejected = REGISTRY.counter("batcher_rejected", **lbl)
+        self._c_deadline = REGISTRY.counter("batcher_deadline_expired",
+                                            **lbl)
         self._h_batch_ms = REGISTRY.histogram("batcher_batch_ms", **lbl)
         self._h_queue_depth = REGISTRY.histogram("batcher_queue_depth",
                                                  **lbl)
@@ -84,42 +120,92 @@ class Batcher:
         return {"batches": batches, "requests": requests,
                 "hedges": int(self._c_hedges.value),
                 "failed_batches": int(self._c_failed.value),
+                "rejected": int(self._c_rejected.value),
+                "deadline_expired": int(self._c_deadline.value),
                 "mean_batch_size": (requests / batches) if batches else 0.0}
 
-    def submit(self, payload: Any) -> Request:
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    def submit(self, payload: Any,
+               deadline_s: Optional[float] = None) -> Request:
+        now = time.perf_counter()
+        if deadline_s is None:
+            deadline_s = self.default_deadline_s
         req = Request(self._next_id, payload,
                       bucket=self.bucket_fn(payload),
-                      enqueued_at=time.perf_counter())
+                      enqueued_at=now,
+                      deadline_at=(now + deadline_s)
+                      if deadline_s is not None else None)
         self._next_id += 1
-        self._queue.append(req)
+        with self._qlock:
+            if (self.max_queue is not None
+                    and len(self._queue) >= self.max_queue):
+                admitted = False
+            else:
+                self._queue.append(req)
+                admitted = True
+        if not admitted:
+            self._complete([req], error=AdmissionRejected(
+                f"queue at high watermark ({self.max_queue}) — "
+                f"request {req.req_id} shed"))
+            self._c_rejected.inc()
         return req
 
     def _take_batch(self) -> list[Request]:
-        if not self._queue:
-            return []
-        self._h_queue_depth.observe(len(self._queue))
-        bucket = self._queue[0].bucket
-        batch = []
-        rest = deque()
-        while self._queue and len(batch) < self.max_batch:
-            r = self._queue.popleft()
-            (batch if r.bucket == bucket else rest).append(r)
-        self._queue.extendleft(reversed(rest))
-        return batch
+        with self._qlock:
+            if not self._queue:
+                return []
+            self._h_queue_depth.observe(len(self._queue))
+            bucket = self._queue[0].bucket
+            batch = []
+            rest = deque()
+            while self._queue and len(batch) < self.max_batch:
+                r = self._queue.popleft()
+                (batch if r.bucket == bucket else rest).append(r)
+            self._queue.extendleft(reversed(rest))
+            return batch
 
-    def _account(self, batch: list[Request], failed: bool = False) -> None:
-        self._c_batches.inc()
-        self._c_requests.inc(len(batch))
-        if failed:
-            self._c_failed.inc()
+    def _complete(self, reqs: list[Request], results=None,
+                  error: Optional[Exception] = None) -> int:
+        """THE single completion path — idempotent: an already-done
+        request is skipped, so no sequence of batch-failure / hedge /
+        deadline paths can double-complete or double-count one.
+        Returns how many requests this call actually completed."""
+        n = 0
+        for i, r in enumerate(reqs):
+            if r.done:
+                continue
+            r.error = error
+            r.result = results[i] if results is not None else None
+            r.done = True
+            n += 1
+        return n
 
     def _execute(self, batch: list[Request]) -> None:
         t_start = time.perf_counter()
+        live = []
         for r in batch:
             self._h_queue_wait_ms.observe((t_start - r.enqueued_at) * 1e3)
-        with trace("batch", intent=str(batch[0].bucket)) as root:
-            root.add("batch_size", len(batch))
-            self._run(batch)
+            if r.deadline_at is not None and t_start >= r.deadline_at:
+                # expired while queued: explicit error — load shedding
+                # never silently drops a request
+                self._c_deadline.inc(self._complete([r],
+                                     error=DeadlineExceeded(
+                    f"request {r.req_id}: deadline expired in queue")))
+            else:
+                live.append(r)
+        if not live:
+            return
+        dls = [r.deadline_at for r in live if r.deadline_at is not None]
+        with trace("batch", intent=str(live[0].bucket)) as root:
+            root.add("batch_size", len(live))
+            # the batch executes once for everyone, so it runs under the
+            # TIGHTEST member deadline (absolute — queueing time already
+            # counted against it)
+            with deadline_scope(at=min(dls) if dls else None):
+                self._run(live)
         self._h_batch_ms.observe((time.perf_counter() - t_start) * 1e3)
 
     def _run(self, batch: list[Request]) -> None:
@@ -134,13 +220,15 @@ class Batcher:
             # Failure domain = this batch only (e.g. a shard raising
             # mid-gather): its requests complete with error set; other
             # buckets still queued are untouched and keep draining.
-            for r in batch:
-                r.error = e
-                r.result = None
-                r.done = True
-            self._account(batch, failed=True)
+            n = self._complete(batch, error=e)
+            if isinstance(e, DeadlineExceeded):
+                self._c_deadline.inc(n)
+            self._c_requests.inc(n)
+            self._c_batches.inc()
+            self._c_failed.inc()
             return
         elapsed = time.perf_counter() - t0
+        service = elapsed
         # hedged backup request on straggling execution
         if (self._lat_ewma is not None
                 and elapsed > self.hedge_factor * self._lat_ewma):
@@ -150,27 +238,40 @@ class Batcher:
                 retry = self.run_batch([r.payload for r in batch])
             except Exception:    # noqa: BLE001 — hedge is best-effort
                 retry = None     # keep the straggler's (good) results
+            hedge_elapsed = time.perf_counter() - t1
             if retry is not None and len(retry) == len(batch) \
-                    and time.perf_counter() - t1 < elapsed:
+                    and hedge_elapsed < elapsed:
                 results = retry
+                # learn the WINNER's service time: feeding the
+                # straggler's latency back into the EWMA would inflate
+                # the hedge threshold and suppress future hedges
+                service = hedge_elapsed
             for r in batch:
                 r.hedged = True
-        self._lat_ewma = (elapsed if self._lat_ewma is None
-                          else 0.8 * self._lat_ewma + 0.2 * elapsed)
-        for r, res in zip(batch, results):
-            r.result = res
-            r.done = True
-        self._account(batch)
+        self._lat_ewma = (service if self._lat_ewma is None
+                          else 0.8 * self._lat_ewma + 0.2 * service)
+        if self.annotate is not None:
+            extra = self.annotate()
+            if extra:
+                for r in batch:
+                    r.info.update(extra)
+        self._c_requests.inc(self._complete(batch, results=results))
+        self._c_batches.inc()
 
     def drain(self) -> None:
-        while self._queue:
+        while True:
             batch = self._take_batch()
-            if batch:
-                self._execute(batch)
+            if not batch:
+                return
+            self._execute(batch)
 
 
 def intent_batcher(query_batch, k: int = 5, max_batch: int = 32,
-                   max_wait_s: float = 0.0) -> Batcher:
+                   max_wait_s: float = 0.0,
+                   max_queue: Optional[int] = None,
+                   default_deadline_s: Optional[float] = None,
+                   annotate: Optional[Callable[[], Optional[dict]]] = None
+                   ) -> Batcher:
     """A Batcher over any retrieval callable with the engine signature
     ``query_batch(texts, k=..., at=..., window=...)`` — the one factory
     behind both ``LiveVectorLake.query_batcher`` and
@@ -198,4 +299,7 @@ def intent_batcher(query_batch, k: int = 5, max_batch: int = 32,
         return query_batch(texts, k=k, at=it.at, window=it.window)
 
     return Batcher(run_batch=run, max_batch=max_batch,
-                   max_wait_s=max_wait_s, bucket_fn=bucket)
+                   max_wait_s=max_wait_s, bucket_fn=bucket,
+                   max_queue=max_queue,
+                   default_deadline_s=default_deadline_s,
+                   annotate=annotate)

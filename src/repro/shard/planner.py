@@ -36,16 +36,35 @@ Failure: a shard raising mid-gather is tolerated while fewer than R
 shards failed (every record has R distinct owners, so some responding
 owner still serves it); otherwise ``ShardGatherError`` fails just this
 batch — the serving batcher maps that to the affected requests only.
+
+Fault tolerance under SLO (DESIGN.md §13): with ``shard_timeout_s``
+set (or a request deadline active) the scatter runs on a thread pool
+and every shard gets a bounded reply window; per-shard transient
+faults are retried with exponential backoff (``shard_retries``, off by
+default). ANY gather missing >= 1 shard is stamped degraded
+(``last_gather["degraded"]``/``shards_missing``, a ``degraded``
+counter on the plan span, the fabric health report); while fewer than
+R shards are missing the response is additionally ``complete`` —
+replication still covers every record, so this is correct data served
+at reduced redundancy. When >= R shards are missing, ``degraded_ok``
+trades completeness for availability: the gather merges what arrived
+rather than failing the batch. That mode is opt-in precisely because
+it can under-report: a record whose every owner is missing is silently
+absent from the merge.
 """
 from __future__ import annotations
 
+import threading
+import time
 from typing import Optional, Sequence
 
 import numpy as np
 
 from ..core.types import SearchResult
 from ..index.lsm import merge_topk_candidates
-from ..obs import span
+from ..obs import Span, span, subtrace
+from ..serve.deadline import DeadlineExceeded, deadline_at
+from ..testing.faults import FAULTS
 
 
 class ShardGatherError(RuntimeError):
@@ -126,38 +145,150 @@ def results_equivalent(oracle_res, fab_res, oracle_ext=None,
 
 
 class ScatterGatherPlanner:
-    def __init__(self, fabric):
+    def __init__(self, fabric, shard_timeout_s: Optional[float] = None,
+                 shard_retries: int = 0, retry_backoff_s: float = 0.005,
+                 degraded_ok: bool = False, max_workers: int = 8):
         self.fabric = fabric
+        self.shard_timeout_s = shard_timeout_s
+        self.shard_retries = int(shard_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.degraded_ok = bool(degraded_ok)
+        self.max_workers = int(max_workers)
         self.stats = {"gathers": 0, "shard_failures": 0,
+                      "shard_retries": 0, "degraded_gathers": 0,
                       "candidates_merged": 0, "dedup_dropped": 0,
                       "non_owner_dropped": 0}
+        self.last_gather: Optional[dict] = None
+        self._stats_lock = threading.Lock()
+        self._pool = None              # lazy, parallel scatter only
 
     # ------------------------------------------------------------------
+    def _one_shard(self, s: str, texts, k, at, window):
+        """One shard's engine pass with bounded retry: transient faults
+        (the chaos suite arms them at ``shard:<id>:query``) back off
+        exponentially for up to ``shard_retries`` re-attempts before the
+        shard counts as failed for this gather."""
+        last: Optional[Exception] = None
+        for attempt in range(self.shard_retries + 1):
+            if attempt:
+                with self._stats_lock:
+                    self.stats["shard_retries"] += 1
+                time.sleep(self.retry_backoff_s * (2 ** (attempt - 1)))
+            try:
+                # inside the try so an armed transient fault is retryable
+                FAULTS.check(f"shard:{s}:query")
+                return self.fabric.lake(s).query_batch(
+                    texts, k=k, at=at, window=window)
+            except Exception as e:  # noqa: BLE001 — shard fault domain
+                last = e
+        raise last
+
     def query_batch(self, texts: Sequence[str], k: int = 5,
                     at: Optional[int] = None,
-                    window: Optional[tuple[int, int]] = None
+                    window: Optional[tuple[int, int]] = None,
+                    degraded_ok: Optional[bool] = None
                     ) -> list[list[SearchResult]]:
         if not texts:
             return []
+        if degraded_ok is None:
+            degraded_ok = self.degraded_ok
         with span("plan") as plan_sp:
             ring = self.fabric.ring
             per_shard: dict[str, list[list[SearchResult]]] = {}
             failures: dict[str, Exception] = {}
-            for s in ring.shards:      # scatter (shard order = merge order)
-                with span(f"shard:{s}"):
-                    try:
-                        per_shard[s] = self.fabric.lake(s).query_batch(
-                            texts, k=k, at=at, window=window)
-                    except Exception as e:  # noqa: BLE001 — shard fault
-                        failures[s] = e
-            self.stats["gathers"] += 1
-            self.stats["shard_failures"] += len(failures)
+            if self.shard_timeout_s is not None \
+                    or deadline_at() is not None:
+                self._scatter_parallel(ring, texts, k, at, window,
+                                       per_shard, failures, plan_sp)
+            else:
+                # sequential scatter: the default path, span-for-span
+                # identical to the pre-§13 planner
+                for s in ring.shards:
+                    with span(f"shard:{s}"):
+                        try:
+                            per_shard[s] = self._one_shard(
+                                s, texts, k, at, window)
+                        except Exception as e:  # noqa: BLE001
+                            failures[s] = e
+            with self._stats_lock:
+                self.stats["gathers"] += 1
+                self.stats["shard_failures"] += len(failures)
             plan_sp.add("queries", len(texts))
             plan_sp.add("shards", len(ring.shards))
             plan_sp.add("shard_failures", len(failures))
-            if failures and len(failures) >= ring.replicas:
-                raise ShardGatherError(failures)
+            # degraded = the gather is missing >= 1 shard's reply;
+            # complete = replication still guarantees full coverage
+            # (fewer than R shards missing). A complete-but-degraded
+            # response is correct data served at reduced redundancy —
+            # stamped so clients/SLO dashboards see the shrunk fabric.
+            degraded = bool(failures)
+            complete = len(failures) < ring.replicas
+            if failures and not complete:
+                if not (degraded_ok and per_shard):
+                    if not per_shard:
+                        dl = deadline_at()
+                        if dl is not None and time.perf_counter() >= dl:
+                            raise DeadlineExceeded(
+                                "plan: every shard timed out past the "
+                                "request deadline")
+                    raise ShardGatherError(failures)
+            if degraded:
+                with self._stats_lock:
+                    self.stats["degraded_gathers"] += 1
+                plan_sp.add("degraded", 1)
+                plan_sp.add("shards_missing", len(failures))
+            self.last_gather = {
+                "degraded": degraded,
+                "complete": complete,
+                "shards_missing": sorted(failures),
+                "failures": {s: f"{type(e).__name__}: {e}"
+                             for s, e in failures.items()},
+            }
             return self._merge(texts, per_shard, k)
+
+    def _scatter_parallel(self, ring, texts, k, at, window,
+                          per_shard: dict, failures: dict,
+                          plan_sp) -> None:
+        """Thread-pool scatter with a bounded reply window per gather:
+        min(shard_timeout_s from now, the active request deadline). A
+        shard that misses the window counts as failed for THIS gather;
+        its worker thread finishes harmlessly in the background (the
+        result is discarded). Worker threads don't inherit the trace
+        contextvar, so each opens a detached ``subtrace`` whose finished
+        root is grafted under the plan span."""
+        from concurrent.futures import (ThreadPoolExecutor,
+                                        TimeoutError as FutTimeout)
+        t0 = time.perf_counter()
+        limit = (t0 + self.shard_timeout_s
+                 if self.shard_timeout_s is not None else None)
+        dl = deadline_at()
+        if dl is not None and (limit is None or dl < limit):
+            limit = dl
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=max(1, self.max_workers),
+                thread_name_prefix="scatter")
+
+        def one(s: str):
+            with subtrace(f"shard:{s}") as sroot:
+                return self._one_shard(s, texts, k, at, window), sroot
+
+        futs = {s: self._pool.submit(one, s) for s in ring.shards}
+        graft = getattr(plan_sp, "children", None)
+        for s in ring.shards:
+            timeout = (None if limit is None
+                       else max(0.0, limit - time.perf_counter()))
+            try:
+                res, sroot = futs[s].result(timeout=timeout)
+                per_shard[s] = res
+                if graft is not None and isinstance(sroot, Span):
+                    graft.append(sroot)
+            except FutTimeout:
+                futs[s].cancel()
+                failures[s] = TimeoutError(
+                    f"shard {s}: no reply within the gather window")
+            except Exception as e:  # noqa: BLE001 — shard fault domain
+                failures[s] = e
 
     # ------------------------------------------------------------------
     def _merge(self, texts: Sequence[str],
@@ -181,6 +312,7 @@ class ScatterGatherPlanner:
         refs: list[list[Optional[SearchResult]]] = \
             [[None] * width for _ in range(nq)]
         owners_memo: dict[str, tuple[str, ...]] = {}
+        non_owner = dedup = 0          # flushed under the lock once
         for qi in range(nq):
             seen: set[tuple] = set()   # replica dedup, per query
             for si, s in enumerate(shards):
@@ -194,15 +326,18 @@ class ScatterGatherPlanner:
                         owners = ring.owners(r.doc_id)
                         owners_memo[r.doc_id] = owners
                     if s not in owners:
-                        self.stats["non_owner_dropped"] += 1
+                        non_owner += 1
                     else:
                         ident = (r.doc_id, r.position, r.valid_from)
                         if ident in seen:
-                            self.stats["dedup_dropped"] += 1
+                            dedup += 1
                         else:
                             seen.add(ident)
                             auth[qi, col] = True
-        self.stats["candidates_merged"] += int(auth.sum())
+        with self._stats_lock:
+            self.stats["non_owner_dropped"] += non_owner
+            self.stats["dedup_dropped"] += dedup
+            self.stats["candidates_merged"] += int(auth.sum())
         merge_sp.add("candidates", int(auth.sum()))
         top_s, top_g = merge_topk_candidates(scores, gids, auth, k)
         out: list[list[SearchResult]] = []

@@ -33,6 +33,7 @@ import os
 import shutil
 from typing import Optional
 
+from ..testing.faults import FAULTS
 from .ring import HashRing
 
 
@@ -168,6 +169,7 @@ class Rebalancer:
         return report
 
     def _fault(self, point: str) -> None:
-        if self.fail_at == point:
+        if self.fail_at == point:                  # legacy per-run shim
             self.fail_at = None
             raise MigrationInterrupted(f"injected crash at {point}")
+        FAULTS.check(f"rebalance:{point}", exc=MigrationInterrupted)

@@ -28,6 +28,7 @@ serve if the manifest fails its checksum.
 from __future__ import annotations
 
 import os
+import threading
 import time
 from typing import Optional, Sequence
 
@@ -97,7 +98,10 @@ class ShardFabric:
                  cold_checkpoint_interval: int = 8,
                  temporal_fused: Optional[bool] = None,
                  quantized: Optional[bool] = None,
-                 auto_resume_rebalance: bool = True):
+                 auto_resume_rebalance: bool = True,
+                 shard_timeout_s: Optional[float] = None,
+                 shard_retries: int = 0,
+                 degraded_reads: bool = False):
         """Open (or bootstrap) a shard fabric at ``root``.
 
         On a fresh root, shards ``s00..s{n-1}`` are created and epoch 1
@@ -143,9 +147,13 @@ class ShardFabric:
                                   "lake": self._persisted_lake_config()})
         self.ring = HashRing.from_dict(state["ring"])
         self._lakes: dict[str, ShardLake] = {}
+        # parallel scatter workers open lakes lazily from pool threads
+        self._lake_lock = threading.RLock()
         self._last_ts = 0
         self._clock_synced = False
-        self.planner = ScatterGatherPlanner(self)
+        self.planner = ScatterGatherPlanner(
+            self, shard_timeout_s=shard_timeout_s,
+            shard_retries=shard_retries, degraded_ok=degraded_reads)
         self._transition: Optional[dict] = state.get("transition")
         if self._transition is not None and auto_resume_rebalance:
             self.recover()
@@ -179,16 +187,22 @@ class ShardFabric:
         tier recovers itself on open)."""
         lk = self._lakes.get(shard_id)
         if lk is None:
-            embedder = (self.embedder_factory()
-                        if self.embedder_factory else None)
-            lk = ShardLake(shard_id, self.shard_dir(shard_id),
-                           embedder=embedder, **self._lake_kwargs)
-            self._lakes[shard_id] = lk
-            self._last_ts = max(self._last_ts, lk.store._last_ts)
+            with self._lake_lock:
+                lk = self._lakes.get(shard_id)
+                if lk is None:
+                    embedder = (self.embedder_factory()
+                                if self.embedder_factory else None)
+                    lk = ShardLake(shard_id, self.shard_dir(shard_id),
+                                   embedder=embedder,
+                                   **self._lake_kwargs)
+                    self._lakes[shard_id] = lk
+                    self._last_ts = max(self._last_ts,
+                                        lk.store._last_ts)
         return lk
 
     def drop_lake(self, shard_id: str) -> None:
-        self._lakes.pop(shard_id, None)
+        with self._lake_lock:
+            self._lakes.pop(shard_id, None)
 
     # ------------------------------------------------------------------
     # ingest fan-out
@@ -264,21 +278,37 @@ class ShardFabric:
 
     def query_batch(self, texts: Sequence[str], k: int = 5,
                     at: Optional[int] = None,
-                    window: Optional[tuple[int, int]] = None
+                    window: Optional[tuple[int, int]] = None,
+                    degraded_ok: Optional[bool] = None
                     ) -> list[list[SearchResult]]:
-        return self.planner.query_batch(texts, k=k, at=at, window=window)
+        return self.planner.query_batch(texts, k=k, at=at, window=window,
+                                        degraded_ok=degraded_ok)
 
     def query_batcher(self, k: int = 5, max_batch: int = 32,
-                      max_wait_s: float = 0.0):
+                      max_wait_s: float = 0.0,
+                      max_queue: Optional[int] = None,
+                      default_deadline_s: Optional[float] = None):
         """Serving-layer coalescing over the fabric, same contract (and
         same factory) as ``LiveVectorLake.query_batcher``: requests
         bucket by temporal intent, one dispatched batch == one
         scatter-gather pass. A shard failing mid-gather fails only that
-        batch's requests; other buckets keep draining
-        (serve/batcher.py)."""
+        batch's requests; other buckets keep draining. With degraded
+        reads enabled, a served-degraded batch stamps every member
+        request's ``info`` with the gather's degradation markers
+        (serve/batcher.py, DESIGN.md §13)."""
         from ..serve.batcher import intent_batcher
+
+        def annotate() -> Optional[dict]:
+            lg = self.planner.last_gather
+            if lg and lg.get("degraded"):
+                return {"degraded": True,
+                        "shards_missing": lg["shards_missing"]}
+            return None
+
         return intent_batcher(self.query_batch, k=k, max_batch=max_batch,
-                              max_wait_s=max_wait_s)
+                              max_wait_s=max_wait_s, max_queue=max_queue,
+                              default_deadline_s=default_deadline_s,
+                              annotate=annotate)
 
     # ------------------------------------------------------------------
     # membership / recovery
@@ -332,6 +362,7 @@ class ShardFabric:
         return {
             "fabric": self.stats(),
             "planner": dict(self.planner.stats),
+            "last_gather": self.planner.last_gather,
             "metrics": REGISTRY.snapshot(),
             "slow_queries": SLOW_QUERIES.summary(),
         }

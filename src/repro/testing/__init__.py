@@ -1,0 +1,9 @@
+"""Test/chaos support utilities shipped with the library.
+
+``repro.testing.faults`` is imported by production modules (the fault
+check is a no-op two-instruction fast path when nothing is armed), so
+this package must stay dependency-free and cheap to import.
+"""
+from .faults import FAULTS, FaultError, FaultRegistry, FaultRule
+
+__all__ = ["FAULTS", "FaultError", "FaultRegistry", "FaultRule"]

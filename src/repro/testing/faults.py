@@ -1,0 +1,148 @@
+"""Central fault-injection registry (DESIGN.md §13).
+
+Before this existed every crash-recovery test threaded an ad-hoc
+``fail_at``/``fail_after`` string through whichever class it wanted to
+crash.  That worked for single-layer drills but cannot express "crash
+the SECOND cold-tier checkpoint while a rebalance is copying docs and
+queries are in flight" — chaos drills need one switchboard that any
+layer consults at its hazard points.
+
+Production code calls ``FAULTS.check("layer:op:point")`` at each
+injection point.  The fast path — nothing armed anywhere — is a single
+attribute load and truthiness test, no locks, no allocation, so the
+checks are free in real serving.
+
+Tests arm rules::
+
+    FAULTS.arm("cold:checkpoint:data")             # crash 1st call
+    FAULTS.arm("lsm:merge:before_manifest", nth=2) # crash 2nd call
+    FAULTS.arm("shard:s01:query", times=10**9)     # shard hard-down
+    FAULTS.arm("rebalance:copy:*", prob=0.5)       # coin-flip per doc
+    ...
+    FAULTS.reset()                                 # always in teardown
+
+Trigger semantics: a rule starts firing at its ``nth`` matching call
+(or each call with probability ``prob``; the registry RNG is seeded so
+probabilistic drills replay deterministically) and keeps firing until
+it has fired ``times`` times, after which it disarms itself.  ``times=1``
+models a transient fault (retry succeeds); a large ``times`` models a
+hard-down component.  A trailing ``*`` matches any point with that
+prefix.  The exception raised is the rule's ``exc`` if set, else the
+call site's ``exc`` (each layer passes its native crash type so
+existing recovery handlers catch exactly what they always caught).
+"""
+from __future__ import annotations
+
+import random
+import threading
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+class FaultError(RuntimeError):
+    """Default exception raised at an armed fault point."""
+
+
+@dataclass
+class FaultRule:
+    """One armed injection point (see module docstring for semantics)."""
+    point: str
+    exc: Optional[type] = None
+    nth: Optional[int] = None
+    prob: Optional[float] = None
+    times: int = 1
+    message: Optional[str] = None
+    calls: int = 0
+    fired: int = 0
+    _tripped: bool = field(default=False, repr=False)
+
+    def should_fire(self, rng: random.Random) -> bool:
+        self.calls += 1
+        if self.fired >= self.times:
+            return False
+        if self.prob is not None:
+            return rng.random() < self.prob
+        if self._tripped:                 # nth reached earlier: keep firing
+            return True
+        if self.calls >= (self.nth or 1):
+            self._tripped = True
+            return True
+        return False
+
+
+class FaultRegistry:
+    """Thread-safe switchboard of armed fault rules, keyed by point name."""
+
+    def __init__(self, seed: int = 0):
+        self._lock = threading.Lock()
+        self._rules: dict[str, FaultRule] = {}
+        self._prefixes: list[FaultRule] = []    # rules armed with 'xyz:*'
+        self._rng = random.Random(seed)
+        self.history: list[str] = []            # fired points, in order
+
+    # -- arming ---------------------------------------------------------
+    def arm(self, point: str, exc: Optional[type] = None,
+            nth: Optional[int] = None, prob: Optional[float] = None,
+            times: int = 1, message: Optional[str] = None) -> FaultRule:
+        rule = FaultRule(point=point, exc=exc, nth=nth, prob=prob,
+                         times=int(times), message=message)
+        with self._lock:
+            if point.endswith("*"):
+                self._prefixes = [r for r in self._prefixes
+                                  if r.point != point] + [rule]
+            else:
+                self._rules[point] = rule
+        return rule
+
+    def disarm(self, point: str) -> None:
+        with self._lock:
+            self._rules.pop(point, None)
+            self._prefixes = [r for r in self._prefixes if r.point != point]
+
+    def reset(self, seed: int = 0) -> None:
+        with self._lock:
+            self._rules.clear()
+            self._prefixes.clear()
+            self._rng = random.Random(seed)
+            self.history.clear()
+
+    # -- introspection --------------------------------------------------
+    def armed(self) -> list[str]:
+        with self._lock:
+            return sorted(self._rules) + sorted(r.point
+                                                for r in self._prefixes)
+
+    def fired(self, point: Optional[str] = None) -> int:
+        with self._lock:
+            if point is None:
+                return len(self.history)
+            return sum(1 for p in self.history if p == point)
+
+    # -- the hot-path check ---------------------------------------------
+    def check(self, point: str, exc: type = FaultError) -> None:
+        """Raise if a rule matching ``point`` decides to fire.
+
+        Fast path (nothing armed): one attribute load + truthiness test
+        per collection, no lock.  A momentarily stale read is fine —
+        arming happens in test setup, not concurrently with the call
+        under test.
+        """
+        if not self._rules and not self._prefixes:
+            return
+        with self._lock:
+            rule = self._rules.get(point)
+            if rule is None:
+                for r in self._prefixes:
+                    if point.startswith(r.point[:-1]):
+                        rule = r
+                        break
+            if rule is None or not rule.should_fire(self._rng):
+                return
+            rule.fired += 1
+            self.history.append(point)
+            etype = rule.exc or exc
+            msg = rule.message or f"injected fault at {point}"
+        raise etype(msg)
+
+
+FAULTS = FaultRegistry()

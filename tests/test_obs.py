@@ -266,7 +266,8 @@ class TestBatcherMetrics:
             b.submit(i)
         b.drain()
         assert b.stats == {"batches": 2, "requests": 6, "hedges": 0,
-                           "failed_batches": 0, "mean_batch_size": 3.0}
+                           "failed_batches": 0, "rejected": 0,
+                           "deadline_expired": 0, "mean_batch_size": 3.0}
         snap = obs.REGISTRY.snapshot()
         key = f"batcher_requests{{batcher={b.label}}}"
         assert snap["counters"][key] == 6
@@ -402,3 +403,129 @@ class TestFabricEndToEnd:
             # tracing never changes results
             assert [[x.chunk_id for x in row] for row in r_noop] == \
                 [[x.chunk_id for x in row] for row in r_traced]
+
+
+class TestThreadSafety:
+    """Serving threads + maintenance workers hammer the same series
+    concurrently; totals must be exact (DESIGN.md §13)."""
+
+    def test_counter_hammer_exact_total(self):
+        import threading
+        reg = MetricsRegistry()
+        c = reg.counter("hits")
+        N, M = 8, 2000
+
+        def inc():
+            for _ in range(M):
+                c.inc()
+
+        ts = [threading.Thread(target=inc) for _ in range(N)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert c.value == N * M
+
+    def test_histogram_hammer_exact_count_and_sum(self):
+        import threading
+        h = Histogram()
+        N, M = 8, 1000
+
+        def observe():
+            for i in range(M):
+                h.observe(1.0)
+
+        ts = [threading.Thread(target=observe) for _ in range(N)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert h.count == N * M
+        assert abs(h.sum - N * M) < 1e-6
+        assert h.summary()["p50"] is not None
+
+    def test_registry_get_or_create_single_instance_under_race(self):
+        import threading
+        reg = MetricsRegistry()
+        got = []
+        barrier = threading.Barrier(8)
+
+        def get():
+            barrier.wait()
+            got.append(reg.counter("one", tier="hot"))
+
+        ts = [threading.Thread(target=get) for _ in range(8)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert all(g is got[0] for g in got)
+
+    def test_slowlog_hammer_observed_exact(self):
+        import threading
+        log = SlowQueryLog(budget_ms=0.0, capacity=16)
+
+        class T:
+            name = "t"
+            intent = None
+            wall_ms = 1.0
+
+        def observe():
+            for _ in range(500):
+                log.observe(T())
+
+        ts = [threading.Thread(target=observe) for _ in range(6)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert log.observed == 3000
+        assert len(log.traces()) == 16
+
+
+class TestSubtrace:
+    def test_worker_thread_spans_graft_into_parent(self):
+        import threading
+        roots = {}
+
+        def worker(name):
+            with obs.subtrace(name) as sroot:
+                with obs.span("inner"):
+                    obs.add("rows", 7)
+            roots[name] = sroot
+
+        with obs.trace("parent") as proot:
+            with obs.span("plan") as plan_sp:
+                ts = [threading.Thread(target=worker, args=(f"shard:s{i}",))
+                      for i in range(3)]
+                for t in ts:
+                    t.start()
+                for t in ts:
+                    t.join()
+                for name in sorted(roots):
+                    plan_sp.children.append(roots[name])
+        plan = proot.find("plan")[0]
+        assert len(plan.children) == 3
+        for child in plan.children:
+            assert child.name.startswith("shard:")
+            assert child.wall_ms >= 0.0
+            assert child.total("rows") == 7
+
+    def test_subtrace_does_not_feed_registry_or_slowlog(self):
+        obs.REGISTRY.reset()
+        obs.SLOW_QUERIES.reset()
+        with obs.subtrace("detached"):
+            with obs.span("x"):
+                pass
+        assert obs.SLOW_QUERIES.observed == 0
+        snap = obs.REGISTRY.snapshot()
+        assert not any(k.startswith("trace_ms") for k in snap["counters"])
+        assert not any(k.startswith("trace_ms")
+                       for k in snap["histograms"])
+
+    def test_subtrace_noop_when_disabled(self):
+        obs.set_enabled(False)
+        try:
+            assert obs.subtrace("x") is obs.NOOP_SPAN
+        finally:
+            obs.set_enabled(True)

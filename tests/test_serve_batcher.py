@@ -114,3 +114,114 @@ class TestBatcherFailureIsolation:
         b.drain()
         assert r.done and r.error is None and r.result == "y"
         assert np.isfinite(b._lat_ewma)
+
+
+class TestAdmissionControl:
+    def test_reject_past_high_watermark_with_error(self):
+        from repro.serve.batcher import AdmissionRejected
+        b = Batcher(lambda ps: list(ps), max_batch=4, max_queue=3)
+        admitted = [b.submit(i) for i in range(3)]
+        shed = b.submit(99)
+        # explicit rejection, not a silent drop: completed-with-error
+        assert shed.done and isinstance(shed.error, AdmissionRejected)
+        assert b.stats["rejected"] == 1
+        b.drain()
+        for r in admitted:
+            assert r.done and r.error is None
+        # queue drained => admission reopens
+        again = b.submit(7)
+        b.drain()
+        assert again.error is None and again.result == 7
+
+    def test_rejected_requests_never_counted_as_served(self):
+        b = Batcher(lambda ps: list(ps), max_batch=4, max_queue=1)
+        b.submit(1)
+        b.submit(2)                       # shed
+        b.drain()
+        assert b.stats["requests"] == 1
+        assert b.stats["rejected"] == 1
+
+
+class TestDeadlines:
+    def test_expired_in_queue_completes_with_deadline_error(self):
+        import time
+        from repro.serve.deadline import DeadlineExceeded
+        b = Batcher(lambda ps: list(ps), max_batch=4)
+        r_dead = b.submit("x", deadline_s=0.001)
+        r_live = b.submit("y")
+        time.sleep(0.01)                  # deadline passes while queued
+        b.drain()
+        assert r_dead.done and isinstance(r_dead.error, DeadlineExceeded)
+        assert r_live.done and r_live.error is None
+        assert b.stats["deadline_expired"] == 1
+
+    def test_batch_runs_under_tightest_member_deadline(self):
+        from repro.serve.deadline import deadline_at, remaining
+        seen = {}
+
+        def run(ps):
+            seen["at"] = deadline_at()
+            seen["remaining"] = remaining()
+            return list(ps)
+
+        b = Batcher(run, max_batch=4, default_deadline_s=10.0)
+        b.submit("a")
+        b.submit("b", deadline_s=0.5)     # the tight one
+        b.drain()
+        assert seen["at"] is not None
+        assert seen["remaining"] < 1.0    # 0.5s member bounds the batch
+
+    def test_run_raising_deadline_counts_and_isolates(self):
+        from repro.serve.deadline import DeadlineExceeded
+
+        def run(ps):
+            raise DeadlineExceeded("downstream gave up")
+
+        b = Batcher(run, max_batch=4)
+        r = b.submit("x")
+        b.drain()
+        assert isinstance(r.error, DeadlineExceeded)
+        assert b.stats["deadline_expired"] == 1
+        assert b.stats["failed_batches"] == 1
+
+
+class TestHedgeAccounting:
+    def test_no_double_completion_or_double_count_when_hedge_wins(self):
+        import time
+        state = {"calls": 0}
+
+        def run(payloads):
+            state["calls"] += 1
+            if state["calls"] == 2:       # straggler on the 2nd batch
+                time.sleep(0.002)
+            return [p * 10 for p in payloads]
+
+        b = Batcher(run, max_batch=2, hedge_factor=0.0)  # always hedge
+        b.submit(1)
+        b.drain()                         # establish EWMA (no hedge yet)
+        r = b.submit(2)
+        b.drain()
+        assert r.done and r.hedged and r.result == 20
+        # 2 requests total, each counted exactly once
+        assert b.stats["requests"] == 2
+        assert b.stats["batches"] == 2
+
+    def test_ewma_learns_winner_not_straggler(self):
+        import time
+        state = {"calls": 0}
+        SLOW, FAST = 0.02, 0.0
+
+        def run(payloads):
+            state["calls"] += 1
+            time.sleep(SLOW if state["calls"] == 2 else FAST)
+            return list(payloads)
+
+        b = Batcher(run, max_batch=1, hedge_factor=0.0)  # always hedge
+        b.submit("a")
+        b.drain()
+        ewma_before = b._lat_ewma
+        b.submit("b")                     # straggles; hedge wins
+        b.drain()
+        # EWMA moved toward the hedge's fast service time, not the
+        # straggler's SLOW time (0.2 * SLOW would exceed this bound)
+        assert b._lat_ewma < ewma_before + 0.2 * SLOW / 2
