@@ -20,7 +20,10 @@ Latencies flow through the PR 6 metrics registry
 (``load_slo_latency_ms{phase=...}``) and are reported as p50/p99/p99.9.
 
 Gates (asserted in ``main`` and in CI bench-smoke):
-  - storm p99 within ``max_p99_ratio`` of quiescent p99;
+  - storm p99 within ``max_p99_ratio`` of quiescent p99 (tightened
+    25x -> 15x once segment seals moved off the writer lock: the PR 7
+    baseline measured 12.6x with seal/compact builds holding the lock,
+    and the off-lock two-phase publish removes the dominant stall);
   - degraded recall@10 ≥ 0.95 with explicit degraded/shards_missing
     markers on the gather;
   - exact request accounting: completed == submitted, zero dropped,
@@ -122,7 +125,7 @@ def _recall(deg_hits, full_hits) -> float:
 
 
 # ----------------------------------------------------------------------
-def run(smoke: bool = False, max_p99_ratio: float = 25.0,
+def run(smoke: bool = False, max_p99_ratio: float = 15.0,
         seed: int = 0) -> dict:
     n_docs = 20 if smoke else 64
     n_versions = 2 if smoke else 3

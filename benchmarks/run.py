@@ -14,6 +14,7 @@ Prints ``name,value,derived`` CSV rows:
   DESIGN §11-> quantized_scan
   DESIGN §12-> obs_overhead (trend diffing: ``python -m benchmarks.trend``)
   DESIGN §13-> load_slo
+  DESIGN §14-> tenant_isolation
 
 ``--smoke`` shrinks every suite to CI sizes (each suite's ``main``
 honors the flag); ``--only`` runs a comma-separated subset. ``--json
@@ -49,7 +50,7 @@ def main() -> None:
                    query_latency, query_throughput, quantized_scan,
                    search_scaling, shard_scaling, storage_efficiency,
                    streaming_churn, temporal_accuracy, temporal_scaling,
-                   update_performance)
+                   tenant_isolation, update_performance)
     suites = [
         ("update_performance", update_performance),
         ("query_latency", query_latency),
@@ -64,6 +65,7 @@ def main() -> None:
         ("quantized_scan", quantized_scan),
         ("obs_overhead", obs_overhead),
         ("load_slo", load_slo),
+        ("tenant_isolation", tenant_isolation),
     ]
     if args.only:
         keep = {s.strip() for s in args.only.split(",")}

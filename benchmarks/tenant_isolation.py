@@ -1,0 +1,267 @@
+"""Multi-tenant isolation: noisy-neighbor p99 + cross-tenant leakage
+(DESIGN.md §14 gate).
+
+Two measurements over one multi-tenant ``LiveVectorLake``:
+
+  leakage   sweep every query path (current / point-in-time / window)
+            under every single-tenant scope, a multi-tenant scope, and
+            an unknown-tenant scope, counting result rows owned by a
+            tenant OUTSIDE the scope. The kernels enforce visibility
+            pre-ranking, so the count must be exactly zero (and the
+            unknown scope must return nothing — fail closed).
+  noisy     a quiet tenant submits the SAME open-loop request schedule
+            twice through a tenant-gated batcher (``tenant_quota``):
+            once alone, once while a noisy tenant floods the same
+            queue from competing threads. The quota caps the noisy
+            tenant's queue share, so the quiet tenant's p99 may not
+            move beyond ``max_quiet_p99_ratio`` — and the flood must
+            show up as counted ``AdmissionRejected``s, never as
+            silent queue growth.
+
+Gates (asserted in ``main`` and in CI bench-smoke): zero leakage,
+quiet-tenant p99 ratio, rejections counted, exact quiet-request
+accounting.
+
+  PYTHONPATH=src python -m benchmarks.tenant_isolation [--smoke] [--json out]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.core.store import LiveVectorLake
+from repro.obs import REGISTRY
+
+DIM = 64
+K = 10
+TENANTS = ["acme", "globex", "initech"]
+VOCAB = np.array(["alpha", "beta", "gamma", "delta", "epsilon", "zeta",
+                  "eta", "theta", "iota", "kappa", "lam", "mu"])
+
+
+def _build(root: str, rng, n_docs: int) -> tuple[LiveVectorLake, dict]:
+    store = LiveVectorLake(root, dim=DIM, hot_capacity=128,
+                           cold_checkpoint_interval=8)
+    store.hot.index.ivf_min_rows = 32      # IVF segments at bench sizes
+    owner, ts = {}, 1_000_000
+    for v in range(2):
+        for tenant in TENANTS:
+            for d in range(n_docs):
+                doc = f"{tenant}-d{d}"
+                owner[doc] = tenant
+                words = " ".join(rng.choice(VOCAB, 6))
+                store.ingest(doc, f"{doc} v{v}: {words}.\n\n"
+                             f"second paragraph {words}.",
+                             ts=ts, tenant=tenant)
+                ts += 100
+    return store, owner
+
+
+# ----------------------------------------------------------------------
+def _leakage_sweep(store, owner, rng, n_queries: int) -> dict:
+    texts = [" ".join(rng.choice(VOCAB, 3)) for _ in range(n_queries)]
+    t_lo, t_hi = 1_000_000, 1_000_000 + 100 * len(owner) * 2
+    mid = (t_lo + t_hi) // 2
+    scopes = ([(t,) for t in TENANTS]
+              + [tuple(TENANTS[:2])])       # multi-tenant union scope
+    total = foreign = 0
+    for scope in scopes:
+        vis = scope[0] if len(scope) == 1 else scope
+        for kw in ({}, {"at": mid}, {"window": (t_lo, t_hi)}):
+            for row in store.query_batch(texts, k=K, visibility=vis,
+                                         **kw):
+                for r in row:
+                    total += 1
+                    if owner[r.doc_id] not in scope:
+                        foreign += 1
+    ghost_rows = sum(
+        len(row)
+        for kw in ({}, {"at": mid}, {"window": (t_lo, t_hi)})
+        for row in store.query_batch(texts, k=K, visibility="ghost",
+                                     **kw))
+    return {"results_checked": total, "foreign_rows": foreign,
+            "ghost_rows": ghost_rows,
+            "leakage": (foreign / total) if total else 0.0}
+
+
+# ----------------------------------------------------------------------
+def _quiet_phase(batcher, texts, rate_hz: float, n_requests: int,
+                 noisy_stop=None) -> dict:
+    """Open-loop quiet-tenant schedule (latency from *scheduled*
+    arrival, so queue wait behind the flood counts against us). A
+    submit bounced off the quiet tenant's OWN quota (its slots can
+    momentarily fill while the dispatcher runs a batch) retries with
+    backoff — the retry wait counts against the scheduled arrival."""
+    from repro.serve.batcher import AdmissionRejected
+    lat_ms: list[float] = []
+    errors = retries = 0
+    pending: list[tuple[object, float]] = []
+    t0 = time.perf_counter() + 0.02
+    for i in range(n_requests):
+        sched = t0 + i / rate_hz
+        now = time.perf_counter()
+        if sched > now:
+            time.sleep(sched - now)
+        while True:
+            req = batcher.submit(texts[i % len(texts)], tenant="quiet")
+            if not (req.done and isinstance(req.error,
+                                            AdmissionRejected)):
+                break
+            retries += 1
+            time.sleep(1e-3)
+        pending.append((req, sched))
+    deadline = time.perf_counter() + 30.0
+    for req, sched in pending:
+        while not req.done and time.perf_counter() < deadline:
+            time.sleep(2e-4)
+        if req.done and req.error is None:
+            # the batcher's annotate hook stamped the completion
+            # instant — polling here must not inflate the latency
+            done_at = req.info.get("done_at", time.perf_counter())
+            lat_ms.append((done_at - sched) * 1e3)
+        else:
+            errors += 1
+    if noisy_stop is not None:
+        noisy_stop.set()
+    lat = np.sort(np.asarray(lat_ms, np.float64))
+    pct = (lambda q: float(lat[min(len(lat) - 1,
+                                   int(q * len(lat)))]) if len(lat)
+           else float("nan"))
+    return {"submitted": n_requests, "completed": len(lat_ms),
+            "errors": errors, "admission_retries": retries,
+            "p50_ms": pct(0.50), "p99_ms": pct(0.99)}
+
+
+def run(smoke: bool = False, max_quiet_p99_ratio: float = 8.0,
+        seed: int = 0) -> dict:
+    n_docs = 6 if smoke else 16
+    n_queries = 8 if smoke else 16
+    rate_hz = 120.0 if smoke else 200.0
+    n_requests = 72 if smoke else 240
+    n_noisy_threads = 3
+
+    REGISTRY.reset()
+    rng = np.random.default_rng(seed)
+    with tempfile.TemporaryDirectory() as root:
+        store, owner = _build(root, rng, n_docs)
+        leak = _leakage_sweep(store, owner, rng, n_queries)
+
+        texts = [" ".join(rng.choice(VOCAB, 3)) for _ in range(n_queries)]
+        from repro.serve.batcher import intent_batcher
+        batcher = intent_batcher(
+            store.query_batch, k=K, max_batch=16, max_queue=512,
+            tenant_quota=4,
+            annotate=lambda: {"done_at": time.perf_counter()})
+        stop = threading.Event()
+
+        def dispatch():
+            while not stop.is_set():
+                if batcher.queue_depth:
+                    batcher.drain()
+                else:
+                    time.sleep(1e-4)
+
+        dispatcher = threading.Thread(target=dispatch, daemon=True)
+        dispatcher.start()
+        # warm every padded batch shape once so first-dispatch kernel
+        # compilation does not land in the measured percentiles
+        for n in range(1, 17):
+            store.query_batch((texts * 4)[:n], k=K)
+
+        solo = _quiet_phase(batcher, texts, rate_hz, n_requests)
+
+        noisy_stop = threading.Event()
+        noisy_sent = [0]
+
+        def flood():
+            # throttled hot loop (~2k/s/thread): saturates the quota
+            # continuously without starving the dispatcher of the GIL
+            i = 0
+            while not noisy_stop.is_set():
+                batcher.submit(texts[i % len(texts)], tenant="noisy")
+                noisy_sent[0] += 1
+                i += 1
+                time.sleep(5e-4)
+
+        flooders = [threading.Thread(target=flood, daemon=True)
+                    for _ in range(n_noisy_threads)]
+        for t in flooders:
+            t.start()
+        under_noise = _quiet_phase(batcher, texts, rate_hz, n_requests,
+                                   noisy_stop=noisy_stop)
+        for t in flooders:
+            t.join(10.0)
+        stop.set()
+        dispatcher.join(10.0)
+        noisy_rejected = int(REGISTRY.counter(
+            "batcher_tenant_rejected", batcher=batcher.label,
+            tenant="noisy").value)
+
+    ratio = under_noise["p99_ms"] / max(solo["p99_ms"], 1e-9)
+    gate = {
+        "leakage_ok": (leak["foreign_rows"] == 0
+                       and leak["ghost_rows"] == 0),
+        "quiet_p99_ratio": ratio,
+        "max_quiet_p99_ratio": max_quiet_p99_ratio,
+        "p99_ok": ratio <= max_quiet_p99_ratio,
+        "shed_ok": noisy_rejected > 0,
+        "accounting_ok": all(p["completed"] == p["submitted"]
+                             and p["errors"] == 0
+                             for p in (solo, under_noise)),
+    }
+    gate["pass"] = (gate["leakage_ok"] and gate["p99_ok"]
+                    and gate["shed_ok"] and gate["accounting_ok"])
+    return {"smoke": smoke, "leak": leak, "solo": solo,
+            "under_noise": under_noise,
+            "noisy_submitted": noisy_sent[0],
+            "noisy_rejected": noisy_rejected,
+            "gate": gate, "timestamp": time.time()}
+
+
+def rows_from(result: dict) -> list[tuple]:
+    leak, g = result["leak"], result["gate"]
+    note = (f"{leak['results_checked']} rows x scopes/paths, "
+            f"ghost_rows={leak['ghost_rows']}")
+    rows = [("tenant_isolation/leakage", float(leak["leakage"]), note)]
+    for phase in ("solo", "under_noise"):
+        p = result[phase]
+        rows.append((f"tenant_isolation/quiet_{phase}/p99_ms",
+                     p["p99_ms"],
+                     f"{p['completed']}/{p['submitted']} ok"))
+    rows.append(("tenant_isolation/noisy_rejected",
+                 float(result["noisy_rejected"]),
+                 f"{result['noisy_submitted']} flooded, quota=4"))
+    rows.append(("tenant_isolation/gate_pass",
+                 1.0 if g["pass"] else 0.0,
+                 f"quiet p99 {g['quiet_p99_ratio']:.1f}x "
+                 f"(max {g['max_quiet_p99_ratio']:.0f}x), "
+                 f"leakage={'0' if g['leakage_ok'] else 'NONZERO'}"))
+    return rows
+
+
+def main(smoke: bool = False) -> list[tuple]:
+    result = run(smoke=smoke)
+    rows = rows_from(result)
+    assert result["gate"]["pass"], result["gate"]
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small sizes for CI")
+    ap.add_argument("--json", type=str, default=None,
+                    help="write the full result record to PATH")
+    args = ap.parse_args()
+    result = run(smoke=args.smoke)
+    for name, val, note in rows_from(result):
+        print(f"{name},{val:.4f},{note}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=1)
+    if not result["gate"]["pass"]:
+        raise SystemExit(f"tenant_isolation gate FAILED: {result['gate']}")

@@ -64,7 +64,7 @@ _ARC_DIR = "_archive"
 _ZONE_KEYS_CAP = 64      # zone maps above this key count store no key list
 
 _COLS = ("embeddings", "valid_from", "valid_to", "version", "position",
-         "chunk_ids", "doc_ids", "texts")
+         "chunk_ids", "doc_ids", "texts", "tenant_ids")
 
 
 class FaultPoint(RuntimeError):
@@ -86,9 +86,19 @@ class ColdSnapshot:
     doc_ids: list[str]
     texts: list[str]
     as_of: int
+    # per-row tenant ids (registry-scoped); defaulted LAST so historical
+    # positional construction stays valid — None only for hand-built
+    # snapshots in tests, the tier always fills it
+    tenant_ids: Optional[np.ndarray] = None
 
     def __len__(self) -> int:
         return len(self.chunk_ids)
+
+    def tenants(self) -> np.ndarray:
+        """tenant_ids, never None (zeros for pre-tenancy snapshots)."""
+        if self.tenant_ids is None:
+            return np.zeros(len(self.chunk_ids), np.int32)
+        return self.tenant_ids
 
 
 def _atomic_write(path: str, data: bytes) -> None:
@@ -116,6 +126,7 @@ class _Fold:
         self.vf: list[np.ndarray] = []
         self.ver: list[np.ndarray] = []
         self.pos: list[np.ndarray] = []
+        self.tids: list[np.ndarray] = []
         self.chunk_ids: list[str] = []
         self.doc_ids: list[str] = []
         self.texts: list[str] = []
@@ -131,7 +142,7 @@ class _Fold:
             self.vt[row] = int(closed_at)
 
     def append_rows(self, emb, vf, vt, ver, pos, chunk_ids, doc_ids, texts,
-                    track_open: bool = True) -> None:
+                    track_open: bool = True, tenant_ids=None) -> None:
         m = len(pos)
         if m == 0:
             return
@@ -139,6 +150,10 @@ class _Fold:
         self.vf.append(np.asarray(vf, np.int64))
         self.ver.append(np.asarray(ver, np.int32))
         self.pos.append(np.asarray(pos, np.int64))
+        # absent tenant column (pre-tenancy segment/checkpoint/archive)
+        # means default tenant 0 for every row
+        self.tids.append(np.zeros(m, np.int32) if tenant_ids is None
+                         else np.asarray(tenant_ids, np.int32))
         self.chunk_ids.extend(chunk_ids)
         self.doc_ids.extend(doc_ids)
         self.texts.extend(texts)
@@ -162,12 +177,14 @@ class _Fold:
             return {"embeddings": z((0, self.dim), np.float32),
                     "valid_from": z(0, np.int64), "valid_to": z(0, np.int64),
                     "version": z(0, np.int32), "position": z(0, np.int64),
+                    "tenant_ids": z(0, np.int32),
                     "chunk_ids": [], "doc_ids": [], "texts": []}
         return {"embeddings": np.concatenate(self.embs, axis=0),
                 "valid_from": np.concatenate(self.vf),
                 "valid_to": np.array(self.vt, np.int64),
                 "version": np.concatenate(self.ver),
                 "position": np.concatenate(self.pos),
+                "tenant_ids": np.concatenate(self.tids),
                 "chunk_ids": self.chunk_ids, "doc_ids": self.doc_ids,
                 "texts": self.texts}
 
@@ -262,6 +279,8 @@ class ColdTier:
                 doc_ids=np.array([r.doc_id for r in records]),
                 texts=np.array([r.text for r in records]),
                 parent_hash=np.array([r.parent_hash or "" for r in records]),
+                tenant_ids=np.array([r.tenant_id for r in records],
+                                    np.int32),
             )
             data = buf.getvalue()
             checksum = blob_checksum(data)
@@ -366,7 +385,7 @@ class ColdTier:
         ckpt_cols = dict(
             embeddings=cols["embeddings"], valid_from=cols["valid_from"],
             valid_to=cols["valid_to"], version=cols["version"],
-            position=cols["position"],
+            position=cols["position"], tenant_ids=cols["tenant_ids"],
             chunk_ids=np.array(cols["chunk_ids"]),
             doc_ids=np.array(cols["doc_ids"]),
             texts=np.array(cols["texts"]))
@@ -576,6 +595,7 @@ class ColdTier:
             cols["doc_ids"], "tolist") else list(cols["doc_ids"])
         texts = cols["texts"].tolist() if hasattr(
             cols["texts"], "tolist") else list(cols["texts"])
+        tids = cols.get("tenant_ids")
         if sel is not None:
             idx = np.nonzero(sel)[0]
             fold.append_rows(cols["embeddings"][idx], cols["valid_from"][idx],
@@ -583,11 +603,14 @@ class ColdTier:
                              cols["position"][idx],
                              [chunk_ids[i] for i in idx],
                              [doc_ids[i] for i in idx],
-                             [texts[i] for i in idx])
+                             [texts[i] for i in idx],
+                             tenant_ids=(None if tids is None
+                                         else tids[idx]))
         else:
             fold.append_rows(cols["embeddings"], cols["valid_from"],
                              cols["valid_to"], cols["version"],
-                             cols["position"], chunk_ids, doc_ids, texts)
+                             cols["position"], chunk_ids, doc_ids, texts,
+                             tenant_ids=tids)
 
     def _fold_segment(self, fold: _Fold, e: dict,
                       as_of_prune: Optional[int],
@@ -608,6 +631,7 @@ class ColdTier:
             return
         seg = self.load_segment(e["segment"], e.get("checksum"))
         doc_ids = seg["doc_ids"].tolist()
+        tids = seg.get("tenant_ids")
         if only_doc is not None:
             sel = np.asarray([d == only_doc for d in doc_ids])
             if not sel.any():
@@ -619,12 +643,14 @@ class ColdTier:
                 seg["position"][idx],
                 [seg["chunk_ids"][i] for i in idx],
                 [doc_ids[i] for i in idx],
-                [seg["texts"][i] for i in idx])
+                [seg["texts"][i] for i in idx],
+                tenant_ids=(None if tids is None else tids[idx]))
         else:
             fold.append_rows(seg["embeddings"], seg["valid_from"],
                              seg["valid_to"], seg["version"],
                              seg["position"], seg["chunk_ids"].tolist(),
-                             doc_ids, seg["texts"].tolist())
+                             doc_ids, seg["texts"].tolist(),
+                             tenant_ids=tids)
 
     def _fold_archive(self, fold: _Fold, a: dict,
                       as_of_prune: Optional[int],
@@ -668,6 +694,8 @@ class ColdTier:
                     ("embeddings", "valid_from", "valid_to", "version",
                      "position", "chunk_ids", "doc_ids", "texts",
                      "closed_by_version", "closed_by_ts")}
+        if "tenant_ids" in cols:             # pre-tenancy archives lack it
+            restored["tenant_ids"] = cols["tenant_ids"][order]
         # rows whose CLOSING entry lies beyond this fold's cut are still
         # open as of the target: reset valid_to and let them re-enter the
         # open-record index (a snapshot must not leak future closures).
@@ -719,7 +747,8 @@ class ColdTier:
         if n == 0:
             return ColdSnapshot(cols["embeddings"], cols["valid_from"],
                                 cols["valid_to"], cols["version"],
-                                cols["position"], [], [], [], as_of_ts)
+                                cols["position"], [], [], [], as_of_ts,
+                                tenant_ids=cols["tenant_ids"])
         if include_closed:
             mask = np.ones(n, bool)
         else:
@@ -736,6 +765,7 @@ class ColdTier:
             doc_ids=[cols["doc_ids"][i] for i in sel],
             texts=[cols["texts"][i] for i in sel],
             as_of=as_of_ts,
+            tenant_ids=cols["tenant_ids"][sel],
         )
 
     def history(self, doc_id: str) -> list[dict]:
@@ -872,7 +902,7 @@ class ColdTier:
     def _build_archive(self, a: int, b: int, entries, rows_of, seg_cache,
                        row_vt, row_version, closed_by,
                        closure_target) -> dict:
-        embs, vf, vt, ver, pos = [], [], [], [], []
+        embs, vf, vt, ver, pos, tids = [], [], [], [], [], []
         chunk_ids, doc_ids, texts = [], [], []
         closed_ver, closed_ts = [], []
         for v in range(a, b + 1):
@@ -889,6 +919,8 @@ class ColdTier:
                 closed_ts.append(entries[cv]["ts"])
             ver.append(seg["version"])
             pos.append(seg["position"])
+            tids.append(seg["tenant_ids"] if "tenant_ids" in seg
+                        else np.zeros(len(seg["valid_from"]), np.int32))
             chunk_ids.extend(seg["chunk_ids"].tolist())
             doc_ids.extend(seg["doc_ids"].tolist())
             texts.extend(seg["texts"].tolist())
@@ -897,6 +929,7 @@ class ColdTier:
         vt = np.array(vt, np.int64)
         ver = np.concatenate(ver)
         pos = np.concatenate(pos)
+        tids = np.concatenate(tids).astype(np.int32)
         closed_ver = np.array(closed_ver, np.int32)
         closed_ts = np.array(closed_ts, np.int64)
         m = len(vt)
@@ -934,7 +967,8 @@ class ColdTier:
             doc_ids=np.array(doc_ids)[order],
             texts=np.array(texts)[order], orig_order=orig_order,
             closed_by_version=closed_ver[order],
-            closed_by_ts=closed_ts[order])
+            closed_by_ts=closed_ts[order],
+            tenant_ids=tids[order])
         data = buf.getvalue()
         fname = f"arc-{a:08d}-{b:08d}.npz"
         _atomic_write(os.path.join(self.root, _ARC_DIR, fname), data)

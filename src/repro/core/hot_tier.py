@@ -84,12 +84,15 @@ class HotTier:
         self.index.reset(drop_disk=True)
 
     # -- reads ------------------------------------------------------------
-    def search(self, queries: np.ndarray, k: int = 5
+    def search(self, queries: np.ndarray, k: int = 5,
+               visible: Optional[np.ndarray] = None
                ) -> list[list[SearchResult]]:
         """Top-k cosine search over active chunks (queries and corpus are
         expected L2-normalized => dot == cosine). Exact over the memtable,
-        nprobe-routed over base segments, merged."""
-        return self.index.search(queries, k=k)
+        nprobe-routed over base segments, merged. ``visible`` is the
+        resolved visible-tenant-id array (None = unscoped), enforced
+        pre-ranking inside the index's scan kernels."""
+        return self.index.search(queries, k=k, visible=visible)
 
     # -- recovery ----------------------------------------------------------
     def rebuild(self, records: Sequence[ChunkRecord]) -> dict:

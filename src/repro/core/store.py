@@ -34,6 +34,7 @@ from .hash_store import HashStore
 from .hot_tier import HotTier
 from ..obs import REGISTRY, span
 from ..testing.faults import FAULTS
+from .tenancy import TenantRegistry, Visibility
 from .temporal import (CURRENT, COMPARATIVE, HISTORICAL, TemporalEngine,
                        classify_query)
 from .types import (STATUS_DELETED, STATUS_SUPERSEDED, VALID_TO_OPEN,
@@ -50,7 +51,8 @@ class LiveVectorLake:
                  device_resident_history: bool = True,
                  cold_checkpoint_interval: int = 8,
                  temporal_fused: Optional[bool] = None,
-                 quantized: Optional[bool] = None, rescore_factor: int = 4):
+                 quantized: Optional[bool] = None, rescore_factor: int = 4,
+                 max_pending_ingest: Optional[int] = None):
         """``temporal_fused`` selects the cold read path: True (default)
         routes temporal queries through the fused validity-masked kernel
         over the engine's resident full-history arrays; False uses the
@@ -67,9 +69,19 @@ class LiveVectorLake:
         The flag is PERSISTED (STORE.json): reopening with the default
         ``quantized=None`` adopts the stored value, so a restart cannot
         silently materialize every quantized segment back to resident
-        fp32; pass an explicit bool to switch formats."""
+        fp32; pass an explicit bool to switch formats.
+
+        ``max_pending_ingest`` bounds the WRITE-side admission queue
+        (DESIGN.md §14): an ``ingest`` that would leave more than this
+        many writers convoying on the single-writer lock is rejected
+        with ``AdmissionRejected`` — counted, never silent — mirroring
+        the query batcher's ``max_queue``. None (default) = unbounded
+        (the historical behavior)."""
         self.root = root
         os.makedirs(root, exist_ok=True)
+        # tenant namespace registry (TENANTS.json): name -> dense int32
+        # id, persisted BEFORE any row carries a new id (DESIGN.md §14)
+        self.tenants = TenantRegistry(root)
         inner = embedder or HashProjectionEmbedder(dim=dim)
         if inner.dim != dim:
             dim = inner.dim
@@ -91,6 +103,15 @@ class LiveVectorLake:
         self.temporal = TemporalEngine(self.cold, fused=fused,
                                        quantized=self.quantized,
                                        rescore_factor=rescore_factor)
+        # results carry tenant NAMES; ids are a store-local encoding
+        self.hot.index.tenant_namer = self.tenants.name_of
+        self.temporal.tenant_namer = self.tenants.name_of
+        # write-side admission state (bounded, counted — satellite of
+        # ROADMAP item 2: query admission was bounded, ingest was not)
+        self.max_pending_ingest = max_pending_ingest
+        self._ingest_pending = 0
+        self._ingest_gate = threading.Lock()
+        self._c_ingest_rejected = REGISTRY.counter("ingest_rejected")
         self._last_ts = 0
         # One writer at a time per store (DESIGN.md §13): ingest, history
         # import (rebalance thread) and purge all serialize here — the
@@ -113,26 +134,64 @@ class LiveVectorLake:
                     cfg = json.load(f)
             except (json.JSONDecodeError, OSError):
                 cfg = {}
-        if quantized is None:
-            return bool(cfg.get("quantized", False))
-        if cfg.get("quantized") != bool(quantized):
-            cfg["quantized"] = bool(quantized)
+        out = (bool(cfg.get("quantized", False)) if quantized is None
+               else bool(quantized))
+        # the store manifest names its tenancy sidecar so tools can
+        # find the registry without hard-coding the layout
+        changed = cfg.get("tenants_file") != TenantRegistry.FILENAME
+        cfg["tenants_file"] = TenantRegistry.FILENAME
+        if quantized is not None and cfg.get("quantized") != out:
+            cfg["quantized"] = out
+            changed = True
+        if changed:
             with open(path, "w") as f:
                 json.dump(cfg, f, indent=1)
-        return bool(quantized)
+        return out
 
     # ------------------------------------------------------------------
     # ingestion
     # ------------------------------------------------------------------
     def ingest(self, doc_id: str, text: str, ts: Optional[int] = None,
-               fail_after: Optional[str] = None) -> CDCSummary:
-        """Ingest one document version. ``fail_after`` in {"intent",
-        "cold", "hot"} simulates a crash after that stage (tests only)."""
-        with self._write_lock:
-            return self._ingest_locked(doc_id, text, ts, fail_after)
+               fail_after: Optional[str] = None,
+               tenant: str = "") -> CDCSummary:
+        """Ingest one document version into ``tenant``'s namespace
+        ("" = the default namespace; legacy calls are unchanged).
+        ``fail_after`` in {"intent", "cold", "hot"} simulates a crash
+        after that stage (tests only)."""
+        self._admit_ingest()
+        try:
+            with self._write_lock:
+                return self._ingest_locked(doc_id, text, ts, fail_after,
+                                           tenant)
+        finally:
+            with self._ingest_gate:
+                self._ingest_pending -= 1
+
+    def _admit_ingest(self) -> None:
+        """Bounded, counted write admission (mirrors the query
+        batcher's ``max_queue``): with ``max_pending_ingest`` set, an
+        ingest arriving while that many writers are already pending on
+        the single-writer lock is REJECTED WITH AN ERROR — the caller
+        sees ``AdmissionRejected`` immediately and can back off, and
+        the rejection is counted (``ingest_rejected``). Nothing is
+        ever silently queued without bound or silently dropped."""
+        with self._ingest_gate:
+            if (self.max_pending_ingest is not None
+                    and self._ingest_pending >= self.max_pending_ingest):
+                self._c_ingest_rejected.inc()
+                from ..serve.batcher import AdmissionRejected
+                raise AdmissionRejected(
+                    f"ingest admission: {self._ingest_pending} writers "
+                    f"already pending "
+                    f"(max_pending_ingest={self.max_pending_ingest})")
+            self._ingest_pending += 1
 
     def _ingest_locked(self, doc_id: str, text: str, ts: Optional[int],
-                       fail_after: Optional[str]) -> CDCSummary:
+                       fail_after: Optional[str],
+                       tenant: str = "") -> CDCSummary:
+        tenant_id = self.tenants.resolve(tenant)
+        REGISTRY.counter("ingest_docs",
+                         tenant=tenant or "default").inc()
         ts = self._monotonic_ts(ts)
         chunks = chunk_document(text)
         old_hashes = self.hash_store.get(doc_id)
@@ -155,7 +214,8 @@ class LiveVectorLake:
             parent = old_hashes[c.position] if c.position < len(old_hashes) else None
             records.append(ChunkRecord(
                 chunk_id=c.chunk_id, doc_id=doc_id, position=c.position,
-                valid_from=ts, parent_hash=parent, text=c.text, embedding=e))
+                valid_from=ts, parent_hash=parent, text=c.text, embedding=e,
+                tenant=tenant, tenant_id=tenant_id))
         n_new_chunks = len(chunks)
         closures = [{"doc_id": doc_id, "position": p, "closed_at": ts,
                      "status": (STATUS_SUPERSEDED if p < n_new_chunks
@@ -200,9 +260,11 @@ class LiveVectorLake:
             n_dedup_hits=n_dedup, reprocess_fraction=cs.reprocess_fraction)
 
     def ingest_batch(self, docs: Sequence[tuple[str, str]],
-                     ts: Optional[int] = None) -> list[CDCSummary]:
+                     ts: Optional[int] = None,
+                     tenant: str = "") -> list[CDCSummary]:
         ts = self._monotonic_ts(ts)
-        return [self.ingest(doc_id, text, ts) for doc_id, text in docs]
+        return [self.ingest(doc_id, text, ts, tenant=tenant)
+                for doc_id, text in docs]
 
     def _hot_apply(self, records: list[ChunkRecord],
                    closures: list[dict]) -> None:
@@ -224,12 +286,15 @@ class LiveVectorLake:
     # queries (paper §III-D; batched engine DESIGN.md §8)
     # ------------------------------------------------------------------
     def query(self, text: str, k: int = 5, at: Optional[int] = None,
-              window: Optional[tuple[int, int]] = None) -> list[SearchResult]:
-        return self.query_batch([text], k=k, at=at, window=window)[0]
+              window: Optional[tuple[int, int]] = None,
+              visibility: Visibility = None) -> list[SearchResult]:
+        return self.query_batch([text], k=k, at=at, window=window,
+                                visibility=visibility)[0]
 
     def query_batch(self, texts: Sequence[str], k: int = 5,
                     at: Optional[int] = None,
-                    window: Optional[tuple[int, int]] = None
+                    window: Optional[tuple[int, int]] = None,
+                    visibility: Visibility = None
                     ) -> list[list[SearchResult]]:
         """Batched retrieval: embed ALL queries in one embedder call,
         group them by temporal intent ((mode, at, window) — explicit
@@ -237,11 +302,18 @@ class LiveVectorLake:
         group as ONE batched pass over its tier. Results come back in
         input order and are bit-identical to ``[query(t) for t in
         texts]`` — the engine guarantees a query scores the same alone or
-        inside a batch."""
+        inside a batch.
+
+        ``visibility`` scopes the whole batch to a tenant name (or
+        sequence of names): the resolved visible-tenant-id set is
+        AND-ed into the scan validity masks PRE-ranking on every path
+        (DESIGN.md §14). None = unscoped (legacy behavior, bit-
+        identical results). Unknown names fail CLOSED (empty set)."""
         if not texts:
             return []
         with span("store:query_batch") as sp:
             t_store = time.perf_counter()
+            visible = self.tenants.visible_tids(visibility)
             intents = [classify_query(t, at=at, window=window)
                        for t in texts]
             with span("embed"):
@@ -255,19 +327,22 @@ class LiveVectorLake:
                 t_group = time.perf_counter()
                 with span(f"intent:{mode}") as isp:
                     isp.add("queries", len(idxs))
+                    if visible is not None:
+                        isp.add("visible_tenants", len(visible))
                     if mode == CURRENT:
                         tier = "hot"
-                        res = self.hot.search(q, k=k)
+                        res = self.hot.search(q, k=k, visible=visible)
                     elif mode == HISTORICAL:
                         tier = "cold"
-                        res = self.temporal.query_at_batch(q, g_at, k=k)
+                        res = self.temporal.query_at_batch(
+                            q, g_at, k=k, visible=visible)
                         for r in res:
                             self.temporal.assert_no_leakage(r, g_at)
                     else:
                         assert mode == COMPARATIVE
                         tier = "cold"
                         res = self.temporal.query_window_batch(
-                            q, *g_window, k=k)
+                            q, *g_window, k=k, visible=visible)
                 REGISTRY.histogram("query_latency_ms", tier=tier,
                                    intent=mode).observe(
                     (time.perf_counter() - t_group) * 1e3)
@@ -281,19 +356,26 @@ class LiveVectorLake:
     def query_batcher(self, k: int = 5, max_batch: int = 32,
                       max_wait_s: float = 0.0,
                       max_queue: Optional[int] = None,
-                      default_deadline_s: Optional[float] = None
-                      ) -> "Batcher":
+                      default_deadline_s: Optional[float] = None,
+                      tenant_quota: Optional[int] = None,
+                      tenant_rate: Optional[float] = None,
+                      tenant_burst: Optional[int] = None) -> "Batcher":
         """A serving-layer batcher (serve/batcher.py) over this store:
         concurrent queries queue and coalesce into batched
-        ``query_batch`` passes, bucketed by temporal intent so one
-        dispatched batch maps to ONE engine group — all concurrent
-        CURRENT queries land in a single hot-tier batch. ``max_queue``
-        turns on admission control, ``default_deadline_s`` per-request
-        deadlines (DESIGN.md §13)."""
+        ``query_batch`` passes, bucketed by temporal intent AND
+        visibility scope so one dispatched batch maps to ONE engine
+        group — all concurrent CURRENT queries of one tenant scope land
+        in a single hot-tier batch. ``max_queue`` turns on admission
+        control, ``default_deadline_s`` per-request deadlines
+        (DESIGN.md §13); ``tenant_quota``/``tenant_rate`` add the
+        per-tenant fairness gates (DESIGN.md §14)."""
         from ..serve.batcher import intent_batcher
         return intent_batcher(self.query_batch, k=k, max_batch=max_batch,
                               max_wait_s=max_wait_s, max_queue=max_queue,
-                              default_deadline_s=default_deadline_s)
+                              default_deadline_s=default_deadline_s,
+                              tenant_quota=tenant_quota,
+                              tenant_rate=tenant_rate,
+                              tenant_burst=tenant_burst)
 
     # ------------------------------------------------------------------
     # fault tolerance
@@ -306,6 +388,7 @@ class LiveVectorLake:
         hash store, warm the embedding cache."""
         report = self.reconcile()
         snap = self.cold.snapshot()
+        snap_tids = snap.tenants()
         by_doc: dict[str, list[tuple[int, str]]] = {}
         records = []
         for i in range(len(snap)):
@@ -314,7 +397,9 @@ class LiveVectorLake:
                 position=int(snap.position[i]),
                 valid_from=int(snap.valid_from[i]),
                 version=int(snap.version[i]), text=snap.texts[i],
-                embedding=snap.embeddings[i]))
+                embedding=snap.embeddings[i],
+                tenant=self.tenants.name_of(int(snap_tids[i])),
+                tenant_id=int(snap_tids[i])))
             by_doc.setdefault(snap.doc_ids[i], []).append(
                 (int(snap.position[i]), snap.chunk_ids[i]))
         hot_report = self.hot.rebuild(records)
@@ -389,13 +474,17 @@ class LiveVectorLake:
         queries survive the move."""
         fold = self.cold._fold(only_doc=doc_id)
         cols = fold.columns()
+        # rows travel with tenant NAMES, never ids: the tid encoding is
+        # store-local (each lake's TENANTS.json allocates independently),
+        # so the importing lake re-resolves names into its own registry
         rows = [ChunkRecord(
             chunk_id=cols["chunk_ids"][i], doc_id=doc_id,
             position=int(cols["position"][i]),
             valid_from=int(cols["valid_from"][i]),
             valid_to=int(cols["valid_to"][i]),
             version=int(cols["version"][i]), text=cols["texts"][i],
-            embedding=cols["embeddings"][i])
+            embedding=cols["embeddings"][i],
+            tenant=self.tenants.name_of(int(cols["tenant_ids"][i])))
             for i in range(fold.n)]
         return rows, self.hash_store.version(doc_id)
 
@@ -438,7 +527,9 @@ class LiveVectorLake:
                 raise FaultInjected(
                     f"crash after importing {applied} events")
             records = [dataclasses.replace(
-                r, valid_to=VALID_TO_OPEN, version=0) for r in ev.records]
+                r, valid_to=VALID_TO_OPEN, version=0,
+                tenant_id=self.tenants.resolve(r.tenant))
+                for r in ev.records]
             expected_version = self.cold.latest_version() + 1
             txn = self.wal.begin("ingest", {
                 "doc_id": doc_id, "ts": ev.ts,
@@ -459,8 +550,9 @@ class LiveVectorLake:
         # A doc can return to a lake that previously handed it off (hot
         # rows purged, cold history retained): every event replays as a
         # no-op, so re-seat its open rows and hash entry explicitly.
-        open_rows = [dataclasses.replace(r, version=0) for r in rows
-                     if r.valid_to == VALID_TO_OPEN]
+        open_rows = [dataclasses.replace(
+            r, version=0, tenant_id=self.tenants.resolve(r.tenant))
+            for r in rows if r.valid_to == VALID_TO_OPEN]
         self._hot_apply(open_rows, [])
         final_hashes = [r.chunk_id for r in
                         sorted(open_rows, key=lambda r: r.position)]

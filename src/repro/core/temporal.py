@@ -40,6 +40,7 @@ import numpy as np
 
 from .. import obs
 from .cold_tier import ColdSnapshot, ColdTier
+from .tenancy import visible_rows
 from .types import SearchResult, VALID_TO_OPEN, pad_queries
 
 CURRENT = "current"
@@ -117,6 +118,7 @@ class ResidentHistory:
         self.vt = np.zeros(cap, np.int64)
         self.ver = np.zeros(cap, np.int32)
         self.pos = np.zeros(cap, np.int64)
+        self.tids = np.zeros(cap, np.int32)
         self.chunk_ids: list[str] = []
         self.doc_ids: list[str] = []
         self.texts: list[str] = []
@@ -130,7 +132,7 @@ class ResidentHistory:
             return
         while cap < need:
             cap *= 2
-        for name in ("emb", "vf", "vt", "ver", "pos"):
+        for name in ("emb", "vf", "vt", "ver", "pos", "tids"):
             old = getattr(self, name)
             shape = (cap,) + old.shape[1:]
             new = np.zeros(shape, old.dtype)
@@ -179,6 +181,7 @@ class ResidentHistory:
         self.vt[:m] = snap.valid_to
         self.ver[:m] = snap.version
         self.pos[:m] = snap.position
+        self.tids[:m] = snap.tenants()
         self.chunk_ids = list(snap.chunk_ids)
         self.doc_ids = list(snap.doc_ids)
         self.texts = list(snap.texts)
@@ -211,6 +214,7 @@ class ResidentHistory:
             self.vt[j] = r.valid_to
             self.ver[j] = version
             self.pos[j] = r.position
+            self.tids[j] = r.tenant_id
             self.chunk_ids.append(r.chunk_id)
             self.doc_ids.append(r.doc_id)
             self.texts.append(r.text)
@@ -238,6 +242,8 @@ class ResidentHistory:
         self.vt[s] = seg["valid_to"]
         self.ver[s] = seg["version"]
         self.pos[s] = seg["position"]
+        self.tids[s] = seg.get("tenant_ids",
+                               np.zeros(m, np.int32))
         doc_ids = seg["doc_ids"].tolist()
         self.chunk_ids.extend(seg["chunk_ids"].tolist())
         self.doc_ids.extend(doc_ids)
@@ -257,8 +263,10 @@ class ResidentHistory:
 
 
 def _snapshot_results(snap: ColdSnapshot, scores: np.ndarray,
-                      idx: np.ndarray, k: int) -> list[SearchResult]:
+                      idx: np.ndarray, k: int,
+                      namer=None) -> list[SearchResult]:
     out = []
+    tids = snap.tenant_ids if namer is not None else None
     for j in range(min(k, idx.shape[0])):
         i, s = int(idx[j]), float(scores[j])
         if not np.isfinite(s):
@@ -267,7 +275,9 @@ def _snapshot_results(snap: ColdSnapshot, scores: np.ndarray,
             chunk_id=snap.chunk_ids[i], doc_id=snap.doc_ids[i],
             position=int(snap.position[i]), score=s, text=snap.texts[i],
             valid_from=int(snap.valid_from[i]), valid_to=int(snap.valid_to[i]),
-            version=int(snap.version[i]), tier="cold"))
+            version=int(snap.version[i]), tier="cold",
+            tenant=(namer(int(tids[i]))
+                    if namer is not None and tids is not None else "")))
     return out
 
 
@@ -293,6 +303,9 @@ class TemporalEngine:
         self.fused = fused
         self.quantized = bool(quantized)
         self.rescore_factor = int(rescore_factor)
+        # tenant-id -> name resolver for result labeling (wired by the
+        # owning store; None leaves SearchResult.tenant = "")
+        self.tenant_namer = None
         self._resident: Optional[ResidentHistory] = None
         self._snap_cache: dict[tuple, ColdSnapshot] = {}
         # serializes resident-history mutation (on_commit from the write
@@ -390,30 +403,36 @@ class TemporalEngine:
     # ------------------------------------------------------------------
     # point-in-time
     # ------------------------------------------------------------------
-    def query_at(self, q_vec: np.ndarray, ts: int, k: int = 5
+    def query_at(self, q_vec: np.ndarray, ts: int, k: int = 5,
+                 visible: Optional[np.ndarray] = None
                  ) -> list[SearchResult]:
         return self.query_at_batch(
-            np.asarray(q_vec, np.float32).reshape(1, -1), ts, k=k)[0]
+            np.asarray(q_vec, np.float32).reshape(1, -1), ts, k=k,
+            visible=visible)[0]
 
-    def query_at_batch(self, queries: np.ndarray, ts: int, k: int = 5
+    def query_at_batch(self, queries: np.ndarray, ts: int, k: int = 5,
+                       visible: Optional[np.ndarray] = None
                        ) -> list[list[SearchResult]]:
         """Point-in-time retrieval for a whole (Q, d) query block: ONE
         fused validity-masked score+top-k dispatch over the resident
-        full-history arrays (no per-ts materialized copy)."""
+        full-history arrays (no per-ts materialized copy). ``visible``
+        is the resolved visible-tenant-id array (None = unscoped),
+        enforced pre-ranking (see ``_fused_topk``)."""
         if not self.fused:
-            return self._oracle_at_batch(queries, ts, k=k)
+            return self._oracle_at_batch(queries, ts, k=k, visible=visible)
         qp, nq = pad_queries(queries)
         res = self._resident_history()
         if res.n == 0:
             return [[] for _ in range(nq)]
         bounds = np.full(qp.shape[0], int(ts), np.int64)
         scores, idx = self._fused_topk(qp, nq, res, bounds, bounds + 1,
-                                       min(k, res.n))
+                                       min(k, res.n), visible=visible)
         return [self._resident_results(res, scores[qi], idx[qi], k)
                 for qi in range(nq)]
 
     def _fused_topk(self, qp: np.ndarray, nq: int, res: ResidentHistory,
-                    t0s: np.ndarray, t1s: np.ndarray, k: int
+                    t0s: np.ndarray, t1s: np.ndarray, k: int,
+                    visible: Optional[np.ndarray] = None
                     ) -> tuple[np.ndarray, np.ndarray]:
         """One fused validity-masked dispatch over the resident history.
         Quantized mode scans the int8 column (4x less traffic), then
@@ -421,9 +440,19 @@ class TemporalEngine:
         file — the pool can only contain in-window rows (the kernel's
         idx=-1 contract), so the leakage guarantee is untouched and the
         returned scores are fp32-exact. Padding query rows are sliced
-        off before the rescore (no spill reads for discarded rows)."""
+        off before the rescore (no spill reads for discarded rows).
+
+        Tenant visibility pushdown (DESIGN.md §14): rows outside the
+        visible tenant set get ``valid_from = VALID_TO_OPEN`` — an
+        always-empty validity interval — so the UNCHANGED fused kernel
+        masks them to -inf/-1 BEFORE ranking, exactly like a temporally
+        invalid row. The rescore pool can therefore never contain a
+        cross-tenant row (same idx=-1 contract as the leakage guard)."""
         with obs.span("fused_temporal") as sp:
             emb, vf, vt = res.views()
+            if visible is not None:
+                vis = visible_rows(res.tids[:res.n], visible)
+                vf = np.where(vis, vf, VALID_TO_OPEN)
             if res.quantized:
                 from ..index.quant import pool_k, rescore_topk
                 from ..kernels.temporal_mask_score.ops import (
@@ -446,37 +475,50 @@ class TemporalEngine:
             self.fused_dispatches += 1
             return np.asarray(scores), np.asarray(idx)
 
-    def _oracle_at_batch(self, queries: np.ndarray, ts: int, k: int = 5
+    def _oracle_at_batch(self, queries: np.ndarray, ts: int, k: int = 5,
+                         visible: Optional[np.ndarray] = None
                          ) -> list[list[SearchResult]]:
         """Paper-faithful reference: materialize the snapshot at ts via
-        the log fold, score with the pure-NumPy oracle kernel."""
+        the log fold, score with the pure-NumPy oracle kernel. Tenant
+        scoping uses the same empty-interval trick as the fused path so
+        both paths stay result-identical."""
         from ..kernels.temporal_mask_score.ops import temporal_topk
 
         qp, nq = pad_queries(queries)
         snap = self._snapshot_at(ts)
         if len(snap) == 0:
             return [[] for _ in range(nq)]
-        scores, idx = temporal_topk(qp, snap.embeddings, snap.valid_from,
+        vf = snap.valid_from
+        if visible is not None:
+            vis = visible_rows(snap.tenants(), visible)
+            vf = np.where(vis, vf, VALID_TO_OPEN)
+        scores, idx = temporal_topk(qp, snap.embeddings, vf,
                                     snap.valid_to, ts, min(k, len(snap)),
                                     mode="ref")
-        return [_snapshot_results(snap, scores[qi], idx[qi], k)
+        return [_snapshot_results(snap, scores[qi], idx[qi], k,
+                                  namer=self.tenant_namer)
                 for qi in range(nq)]
 
     # ------------------------------------------------------------------
     # windows
     # ------------------------------------------------------------------
     def query_window(self, q_vec: np.ndarray, t0: int, t1: int,
-                     k: int = 5) -> list[SearchResult]:
+                     k: int = 5, visible: Optional[np.ndarray] = None
+                     ) -> list[SearchResult]:
         return self.query_window_batch(
-            np.asarray(q_vec, np.float32).reshape(1, -1), t0, t1, k=k)[0]
+            np.asarray(q_vec, np.float32).reshape(1, -1), t0, t1, k=k,
+            visible=visible)[0]
 
     def query_window_batch(self, queries: np.ndarray, t0: int, t1: int,
-                           k: int = 5) -> list[list[SearchResult]]:
+                           k: int = 5,
+                           visible: Optional[np.ndarray] = None
+                           ) -> list[list[SearchResult]]:
         """Records valid at ANY instant of [t0, t1): interval overlap
         (valid_from < t1) and (valid_to > t0), fused into the same kernel
         as the point path (a point query is the window [ts, ts+1))."""
         if not self.fused:
-            return self._oracle_window_batch(queries, t0, t1, k=k)
+            return self._oracle_window_batch(queries, t0, t1, k=k,
+                                             visible=visible)
         qp, nq = pad_queries(queries)
         res = self._resident_history()
         if res.n == 0:
@@ -484,24 +526,29 @@ class TemporalEngine:
         t0s = np.full(qp.shape[0], int(t0), np.int64)
         t1s = np.full(qp.shape[0], int(t1), np.int64)
         scores, idx = self._fused_topk(qp, nq, res, t0s, t1s,
-                                       min(k, res.n))
+                                       min(k, res.n), visible=visible)
         return [self._resident_results(res, scores[qi], idx[qi], k)
                 for qi in range(nq)]
 
     def _oracle_window_batch(self, queries: np.ndarray, t0: int, t1: int,
-                             k: int = 5) -> list[list[SearchResult]]:
+                             k: int = 5,
+                             visible: Optional[np.ndarray] = None
+                             ) -> list[list[SearchResult]]:
         """NumPy reference over the materialized full-history fold."""
         qp, nq = pad_queries(queries)
         snap = self._full_history_snapshot()
         if len(snap) == 0:
             return [[] for _ in range(nq)]
         overlap = (snap.valid_from < t1) & (snap.valid_to > t0)
+        if visible is not None:
+            overlap &= visible_rows(snap.tenants(), visible)
         if not overlap.any():
             return [[] for _ in range(nq)]
         scores = (snap.embeddings @ qp.T).T[:nq]     # (Q, N)
         scores = np.where(overlap[None, :], scores, -np.inf)
         idx = np.argsort(-scores, axis=1, kind="stable")[:, :k]
-        return [_snapshot_results(snap, scores[qi, idx[qi]], idx[qi], k)
+        return [_snapshot_results(snap, scores[qi, idx[qi]], idx[qi], k,
+                                  namer=self.tenant_namer)
                 for qi in range(nq)]
 
     def _full_history_snapshot(self) -> ColdSnapshot:
@@ -515,11 +562,14 @@ class TemporalEngine:
             i, s = int(idx[j]), float(scores[j])
             if not np.isfinite(s):
                 continue
+            namer = self.tenant_namer
             out.append(SearchResult(
                 chunk_id=res.chunk_ids[i], doc_id=res.doc_ids[i],
                 position=int(res.pos[i]), score=s, text=res.texts[i],
                 valid_from=int(res.vf[i]), valid_to=int(res.vt[i]),
-                version=int(res.ver[i]), tier="cold"))
+                version=int(res.ver[i]), tier="cold",
+                tenant=(namer(int(res.tids[i])) if namer is not None
+                        else "")))
         return out
 
     # ------------------------------------------------------------------

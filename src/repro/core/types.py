@@ -65,6 +65,11 @@ class ChunkRecord:
     status: str = STATUS_ACTIVE
     text: str = ""
     embedding: Optional[np.ndarray] = None
+    tenant: str = ""                     # tenant namespace ("" = default)
+    # dense registry id for ``tenant``, resolved by the owning store's
+    # TenantRegistry before the record reaches any tier; persisted
+    # columns carry this id, cross-shard transfers carry the name
+    tenant_id: int = 0
 
     @property
     def key(self) -> str:
@@ -139,3 +144,4 @@ class SearchResult:
     valid_to: int = VALID_TO_OPEN
     version: int = 0
     tier: str = "hot"         # which tier answered (hot | cold)
+    tenant: str = ""          # tenant namespace of the returned row

@@ -45,6 +45,7 @@ from typing import Callable, Optional, Sequence
 import numpy as np
 
 from .. import obs
+from ..core.tenancy import visible_rows
 from ..core.types import (ChunkRecord, SearchResult, VALID_TO_OPEN,
                           pad_queries)
 from ..testing.faults import FAULTS
@@ -79,10 +80,22 @@ def merge_topk_candidates(scores: np.ndarray, gids: np.ndarray,
     Ordering matches the old stable tuple sort exactly: descending score,
     ties broken by candidate column (i.e. source order, then the
     source's own rank order).
+
+    INVARIANT (audited, regression-tested in tests/test_tenant_isolation
+    .py): ``gids >= 0`` is folded into ``valid`` BEFORE any authority
+    gather. The ``np.clip(gids, 0, None)`` below aliases every padding
+    row (gid -1) onto global row 0, so a padding candidate reads row 0's
+    authority — and, now that authority carries tenant visibility bits,
+    row 0's tenant bit. The pre-applied ``gids >= 0`` term guarantees
+    those aliased reads can never validate a padding slot; any new mask
+    gather added to this function must keep that ordering.
     """
     valid = np.isfinite(scores) & (gids >= 0)
     authority = np.asarray(authority, bool)
     if authority.ndim == 2:
+        # 2-D explicit per-candidate mask: no gather happens, but the
+        # (gids >= 0) term above still rejects padding rows even when a
+        # caller hands an all-True column for them
         valid &= authority
     else:
         valid &= authority[np.clip(gids, 0, None)]
@@ -165,6 +178,10 @@ class SegmentedIndex:
         self.deferred_compaction = False
         self.seal_watermark = 0.75             # fill fraction to wish a seal
         self.maintenance_hook: Optional[Callable[[str], None]] = None
+        # optional tid -> tenant-name resolver (set by the owning store's
+        # TenantRegistry) so results carry the tenant NAME; bare indexes
+        # leave results on the default tenant ""
+        self.tenant_namer: Optional[Callable[[int], str]] = None
 
     # ------------------------------------------------------------------
     def __len__(self) -> int:
@@ -259,18 +276,22 @@ class SegmentedIndex:
         return f"{self._seq:08d}"
 
     def _new_segment(self, seg_id: str, emb, valid_from, positions,
-                     chunk_ids, doc_ids, texts, ivf_state=None) -> Segment:
+                     chunk_ids, doc_ids, texts, ivf_state=None,
+                     tenant_ids=None) -> Segment:
         return Segment(seg_id, emb, valid_from, positions, chunk_ids,
                        doc_ids, texts, ivf_min_rows=self.ivf_min_rows,
                        seed=self.seed, quantized=self.quantized,
                        rescore_factor=self.rescore_factor,
-                       ivf_state=ivf_state)
+                       ivf_state=ivf_state, tenant_ids=tenant_ids)
 
     def seal(self) -> Optional[Segment]:
         """Freeze the memtable into a new base segment (IVF-partitioned at
         or above ivf_min_rows), publish it, and reset the memtable. Runs
-        atomically under the index lock — between extract and reset the
-        sealed rows must live in exactly one place."""
+        atomically under the index lock — the INLINE path for a full
+        memtable mid-insert, where the caller already holds the lock and
+        needs the slot free before it can continue. The background path
+        is ``seal_if_above`` below, which keeps the expensive build off
+        the lock entirely."""
         with self._lock:
             if len(self.mem) == 0:
                 return None
@@ -278,7 +299,8 @@ class SegmentedIndex:
             seg = self._new_segment(self._next_id(), cols["emb"],
                                     cols["valid_from"], cols["positions"],
                                     cols["chunk_ids"], cols["doc_ids"],
-                                    cols["texts"])
+                                    cols["texts"],
+                                    tenant_ids=cols["tenant_ids"])
             self._commit_segments("seal", add=[seg], remove=[])
             self.segments[seg.seg_id] = seg
             self._cat = None
@@ -295,12 +317,64 @@ class SegmentedIndex:
     def seal_if_above(self, frac: Optional[float] = None) -> bool:
         """Background-seal entry point (maintenance worker): seal only if
         the memtable fill has reached ``frac`` (default: the configured
-        watermark). Returns True iff a segment was published."""
+        watermark). Returns True iff a segment was published.
+
+        TWO-PHASE (the PR 7 storm-p99 fix): the expensive part of a seal
+        — k-means partitioning, quantization, the fsync'd file write —
+        used to run inside ``seal()`` under the index lock, stalling
+        every query behind it during churn. Here the lock is held only
+        to (1) snapshot the live rows with their (slot, generation)
+        pairs and (2) publish: the segment build + save run off-lock
+        while queries keep serving from the memtable. At publish, a row
+        survives only if its slot's generation is unchanged AND
+        ``_by_key`` still maps its key to that slot — a row overwritten,
+        deleted, or inline-sealed during the build is killed on arrival
+        (same dead-on-arrival reconciliation as ``compact_once``), so
+        the background seal can never resurrect stale data. Sealed slots
+        are then freed individually (no blanket reset), keeping rows
+        ingested mid-build live."""
         frac = self.seal_watermark if frac is None else frac
         with self._lock:
             if len(self.mem) < max(1, int(frac * self.mem.capacity)):
                 return False
-            return self.seal() is not None
+            cols = self.mem.extract()
+            if not len(cols["slots"]):
+                return False
+            seg_id = self._next_id()
+        # heavy build (quantize + k-means) and fsync'd save, OFF the lock
+        seg = self._new_segment(seg_id, cols["emb"], cols["valid_from"],
+                                cols["positions"], cols["chunk_ids"],
+                                cols["doc_ids"], cols["texts"],
+                                tenant_ids=cols["tenant_ids"])
+        if self.manifest is not None:
+            # pre-save: _commit_segments skips re-saving registered ids
+            self._seg_meta[seg.seg_id] = seg.save(self.root)
+        with self._lock:
+            fresh = np.zeros(len(seg), bool)
+            for row, (key, slot, gen) in enumerate(
+                    zip(cols["keys"], cols["slots"], cols["gens"])):
+                slot = int(slot)
+                if (self.mem._gen[slot] == gen
+                        and self._by_key.get(key) == slot):
+                    fresh[row] = True
+                else:
+                    seg.kill(row)
+            if not fresh.any():
+                # every snapshotted row changed under us (e.g. an inline
+                # seal already published them): abandon — the orphan
+                # file is swept at the next manifest publish
+                self._seg_meta.pop(seg.seg_id, None)
+                return False
+            self._commit_segments("seal", add=[seg], remove=[])
+            self.segments[seg.seg_id] = seg
+            self._cat = None
+            for row in np.nonzero(fresh)[0]:
+                key, slot = cols["keys"][row], int(cols["slots"][row])
+                self._by_key[key] = (seg.seg_id, int(row))
+                self.mem.remove(slot)
+            self.cstats.rows_written += len(seg)
+            self.cstats.seals += 1
+            return True
 
     def maybe_compact(self) -> int:
         """Run the deterministic compactor to a fixed point; returns the
@@ -371,7 +445,9 @@ class SegmentedIndex:
             np.concatenate([v.positions[rows] for v, rows in keep]),
             [v.chunk_ids[i] for v, rows in keep for i in rows],
             [v.doc_ids[i] for v, rows in keep for i in rows],
-            [v.texts[i] for v, rows in keep for i in rows])
+            [v.texts[i] for v, rows in keep for i in rows],
+            tenant_ids=np.concatenate(
+                [v.tenant_ids[rows] for v, rows in keep]))
 
     def _publish_merge(self, victims: list[Segment], keep: list,
                        merged: Optional[Segment]) -> None:
@@ -529,6 +605,14 @@ class SegmentedIndex:
         parts = [self.mem._active] + [s.alive for s in cat.segs]
         return np.concatenate(parts) if cat.segs else self.mem._active
 
+    def _tenant_rows(self, cat: _Catalog) -> np.ndarray:
+        """Per-row tenant ids over the same global row-id space as
+        ``_authority_rows`` — memtable slots first, then each segment's
+        immutable tenant column in seal order. Built per search (like the
+        authority concat) because memtable tenants mutate in place."""
+        parts = [self.mem._tenants] + [s.tenant_ids for s in cat.segs]
+        return np.concatenate(parts) if cat.segs else self.mem._tenants
+
     def validate_authority(self) -> bool:
         """Invariant check (tests): the vectorized authority arrays agree
         with ``_by_key`` exactly."""
@@ -544,13 +628,21 @@ class SegmentedIndex:
                 expect[cat.seg_starts[i] + loc[1]] = True
         return bool(np.array_equal(auth, expect))
 
-    def search(self, queries: np.ndarray, k: int = 5
+    def search(self, queries: np.ndarray, k: int = 5,
+               visible: Optional[np.ndarray] = None
                ) -> list[list[SearchResult]]:
         """Batched top-k: ONE fused kernel dispatch over the memtable plus
         every small segment, one batched nprobe-routed pass per IVF
         segment, then one array-native merge over the concatenated
         (Q, n_sources*k) candidate matrix. A query's results are
         bit-identical whether it runs alone or inside a batch.
+
+        ``visible``: optional sorted int32 array of visible tenant ids
+        (None = no scoping). Visibility is enforced PRE-RANKING: the
+        per-row tenant mask is AND-ed into the validity masks every
+        kernel already honors (fused/solo/IVF alike), so a foreign-
+        tenant row returns idx -1 and the fp32 rescore can never
+        resurrect it — the same contract as the deletion vector.
 
         Scan accounting: ``_scan_scanned`` counts ROW-READS. The fused
         block reads each row ONCE for the whole batch (that is the point
@@ -562,22 +654,33 @@ class SegmentedIndex:
         q = np.atleast_2d(np.asarray(queries, np.float32))
         nq = q.shape[0]
         # the whole read runs under the index lock: maintenance keeps its
-        # heavy work OFF the lock (compact_once builds off-lock), so a
-        # query only ever waits on an atomic publish or a memtable seal
+        # heavy work OFF the lock (seal_if_above/compact_once build
+        # off-lock), so a query only ever waits on an atomic publish or
+        # an inline memtable-full seal
         with self._lock:
-            return self._search_locked(q, nq, k)
+            return self._search_locked(q, nq, k, visible)
 
-    def _search_locked(self, q: np.ndarray, nq: int, k: int
+    def _search_locked(self, q: np.ndarray, nq: int, k: int,
+                       visible: Optional[np.ndarray] = None
                        ) -> list[list[SearchResult]]:
         if not self._by_key:
             return [[] for _ in range(nq)]
         cat = self._catalog()
         auth = self._authority_rows(cat)
+        vis = (None if visible is None
+               else visible_rows(self._tenant_rows(cat), visible))
+        if vis is not None:
+            # defense in depth: visibility joins the authority array used
+            # by the final merge, in addition to the per-source kernel
+            # masks below — a row missed by a source mask still cannot
+            # survive the merge
+            auth = auth & vis
         blocks_s: list[np.ndarray] = []
         blocks_g: list[np.ndarray] = []
         scanned = 0
         # fused block: memtable + small segments, one kernel dispatch;
-        # its alive mask is the authority array gathered by fused row.
+        # its alive mask is the authority array gathered by fused row
+        # (which now carries the tenant visibility bits).
         fmask = auth[cat.fused_gids]
         if fmask.any():
             with obs.span("fused_scan") as fsp:
@@ -609,11 +712,14 @@ class SegmentedIndex:
         # solo segments (scale-incompatible with the fused block): one
         # exact scan each, whole batch per dispatch — like fused.
         for seg, sbase in cat.solo:
-            if seg.n_alive == 0:
+            svis = (None if vis is None
+                    else vis[sbase:sbase + len(seg)])
+            if seg.n_alive == 0 or (svis is not None and not svis.any()):
                 continue
             with obs.span(f"solo_scan:{seg.seg_id}"):
                 s, rows, seg_scanned = seg.search(q, k,
-                                                  nprobe=self.nprobe)
+                                                  nprobe=self.nprobe,
+                                                  visible=svis)
                 s = np.asarray(s, np.float32)
                 rows = np.asarray(rows)
                 g = np.where(rows >= 0, sbase + np.clip(rows, 0, None),
@@ -626,11 +732,14 @@ class SegmentedIndex:
                                               source="solo")
         # IVF segments: batched centroid routing + per-query member scan.
         for seg, sbase in cat.ivf:
-            if seg.n_alive == 0:
+            svis = (None if vis is None
+                    else vis[sbase:sbase + len(seg)])
+            if seg.n_alive == 0 or (svis is not None and not svis.any()):
                 continue
             with obs.span(f"ivf_scan:{seg.seg_id}") as isp:
                 s, rows, seg_scanned = seg.search(q, k,
-                                                  nprobe=self.nprobe)
+                                                  nprobe=self.nprobe,
+                                                  visible=svis)
                 s = np.asarray(s, np.float32)
                 rows = np.asarray(rows)
                 g = np.where(rows >= 0, sbase + np.clip(rows, 0, None),
@@ -671,6 +780,7 @@ class SegmentedIndex:
         texts = np.empty(g.shape, object)
         positions = np.zeros(g.shape, np.int64)
         valid_from = np.zeros(g.shape, np.int64)
+        tenants = np.zeros(g.shape, np.int64)
         if in_seg.any():
             rows = g[in_seg] - cap
             cols = cat.seg_cols
@@ -679,6 +789,7 @@ class SegmentedIndex:
             texts[in_seg] = cols["texts"][rows]
             positions[in_seg] = cols["positions"][rows]
             valid_from[in_seg] = cols["valid_from"][rows]
+            tenants[in_seg] = cols["tenant_ids"][rows]
         in_mem = valid & (g < cap)
         mem = self.mem
         for j in np.nonzero(in_mem)[0]:          # few winners, mutable lists
@@ -688,6 +799,8 @@ class SegmentedIndex:
             texts[j] = mem._texts[row]
             positions[j] = mem._positions[row]
             valid_from[j] = mem._valid_from[row]
+            tenants[j] = mem._tenants[row]
+        namer = self.tenant_namer
         out: list[list[SearchResult]] = []
         for qi in range(nq):
             res: list[SearchResult] = []
@@ -698,7 +811,9 @@ class SegmentedIndex:
                     chunk_id=chunk_ids[j], doc_id=doc_ids[j],
                     position=int(positions[j]), score=float(s[j]),
                     text=texts[j], valid_from=int(valid_from[j]),
-                    valid_to=VALID_TO_OPEN, tier="hot"))
+                    valid_to=VALID_TO_OPEN, tier="hot",
+                    tenant=(namer(int(tenants[j])) if namer is not None
+                            else "")))
             out.append(res)
         return out
 
@@ -784,7 +899,8 @@ class SegmentedIndex:
         return self._new_segment(
             seg.seg_id, emb, seg.valid_from, seg.positions,
             seg.chunk_ids, seg.doc_ids, seg.texts,
-            ivf_state=ivf_state)._with_alive(seg.alive)
+            ivf_state=ivf_state,
+            tenant_ids=seg.tenant_ids)._with_alive(seg.alive)
 
     def reset(self, drop_disk: bool = True) -> None:
         with self._lock:

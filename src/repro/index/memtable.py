@@ -40,10 +40,17 @@ class Memtable:
         self._active = np.zeros(capacity, bool)
         self._valid_from = np.zeros(capacity, np.int64)
         self._positions = np.zeros(capacity, np.int64)
+        self._tenants = np.zeros(capacity, np.int32)
         self._chunk_ids: list[Optional[str]] = [None] * capacity
         self._doc_ids: list[Optional[str]] = [None] * capacity
         self._texts: list[str] = [""] * capacity
         self._free: list[int] = list(range(capacity - 1, -1, -1))
+        # per-slot write generation: bumped on EVERY content change
+        # (put/overwrite/remove). The off-lock seal snapshots (slot, gen)
+        # pairs so its publish step can tell "slot still holds the row I
+        # sealed" from "slot was rewritten while I built" — even when the
+        # rewrite re-used the same key (DESIGN.md §14 two-phase seal).
+        self._gen = np.zeros(capacity, np.int64)
 
     def __len__(self) -> int:
         return self.capacity - len(self._free)
@@ -74,19 +81,23 @@ class Memtable:
         self._active[slot] = True
         self._valid_from[slot] = r.valid_from
         self._positions[slot] = r.position
+        self._tenants[slot] = r.tenant_id
         self._chunk_ids[slot] = r.chunk_id
         self._doc_ids[slot] = r.doc_id
         self._texts[slot] = r.text
+        self._gen[slot] += 1
 
     def remove(self, slot: int) -> None:
         self._active[slot] = False
         self._emb[slot] = 0.0
         if self._q8 is not None:
             self._q8[slot] = 0
+        self._tenants[slot] = 0
         self._chunk_ids[slot] = None
         self._doc_ids[slot] = None
         self._texts[slot] = ""
         self._free.append(slot)
+        self._gen[slot] += 1
 
     def reset(self) -> None:
         # swap in FRESH arrays instead of zeroing in place: any reader
@@ -98,27 +109,36 @@ class Memtable:
         self._active = np.zeros(self.capacity, bool)
         self._valid_from = np.zeros(self.capacity, np.int64)
         self._positions = np.zeros(self.capacity, np.int64)
+        self._tenants = np.zeros(self.capacity, np.int32)
         self._chunk_ids = [None] * self.capacity
         self._doc_ids = [None] * self.capacity
         self._texts = [""] * self.capacity
         self._free = list(range(self.capacity - 1, -1, -1))
+        # generations survive reset monotonically: a snapshot taken
+        # before the reset must not see a recycled slot as "unchanged"
+        self._gen = self._gen + 1
 
     # -- reads ------------------------------------------------------------
     # (Queries never hit the memtable directly: SegmentedIndex.search
     # scans the slot array through its fused small-source block.)
     def extract(self) -> dict:
         """Columnar copy of the live rows (seal input), in slot order, plus
-        their (doc_id, position) keys."""
+        their (doc_id, position) keys. Non-destructive: also carries each
+        row's (slot, generation) so the two-phase seal can detect
+        concurrent rewrites at publish time."""
         sel = np.nonzero(self._active)[0]
         return {
             "emb": self._emb[sel].copy(),
             "valid_from": self._valid_from[sel].copy(),
             "positions": self._positions[sel].copy(),
+            "tenant_ids": self._tenants[sel].copy(),
             "chunk_ids": [self._chunk_ids[i] or "" for i in sel],
             "doc_ids": [self._doc_ids[i] or "" for i in sel],
             "texts": [self._texts[i] for i in sel],
             "keys": [(self._doc_ids[i] or "", int(self._positions[i]))
                      for i in sel],
+            "slots": sel.copy(),
+            "gens": self._gen[sel].copy(),
         }
 
     def nbytes(self) -> int:

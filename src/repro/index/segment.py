@@ -51,7 +51,8 @@ class Segment:
                  ivf_state: tuple[np.ndarray, np.ndarray] | None = None,
                  quantized: bool = False,
                  quant_state: tuple[np.ndarray, np.ndarray] | None = None,
-                 f32_fetch=None, rescore_factor: int = 4):
+                 f32_fetch=None, rescore_factor: int = 4,
+                 tenant_ids: np.ndarray | None = None):
         self.seg_id = seg_id
         self.valid_from = np.asarray(valid_from, np.int64)
         self.positions = np.asarray(positions, np.int64)
@@ -75,6 +76,10 @@ class Segment:
         self.dim = dim
         self.alive = (np.ones(n, bool) if alive is None
                       else np.asarray(alive, bool).copy())
+        # per-row tenant ids, persisted next to the authority (alive)
+        # vector; absent (pre-tenancy artifacts) means default tenant 0
+        self.tenant_ids = (np.zeros(n, np.int32) if tenant_ids is None
+                           else np.asarray(tenant_ids, np.int32))
         self.ivf_min_rows = ivf_min_rows
         if self.quantized:
             if quant_state is not None:
@@ -146,6 +151,7 @@ class Segment:
                 "texts": np.asarray(self.texts, object),
                 "positions": self.positions,
                 "valid_from": self.valid_from,
+                "tenant_ids": self.tenant_ids,
             }
         return self._result_cols
 
@@ -183,32 +189,40 @@ class Segment:
         return n
 
     # -- search -----------------------------------------------------------
-    def search(self, queries: np.ndarray, k: int, nprobe: int = 8
+    def search(self, queries: np.ndarray, k: int, nprobe: int = 8,
+               visible: np.ndarray | None = None
                ) -> tuple[np.ndarray, np.ndarray, int]:
         """Top-k over alive rows. Returns (scores (Q, k), rows (Q, k),
         avg rows scanned per query). IVF routing when partitioned, exact
         scan otherwise; either way tombstoned rows are masked before
         ranking. Quantized segments scan int8 and exactly rescore the
-        over-fetched pool in fp32, so returned scores are fp32-exact."""
+        over-fetched pool in fp32, so returned scores are fp32-exact.
+
+        ``visible`` (N,) bool, optional: the per-query tenant/ACL mask.
+        It is AND-ed into the deletion vector BEFORE the kernel ranks —
+        the same pre-ranking contract as ``alive``, so a masked row
+        yields idx -1 and the fp32 rescore can never resurrect it."""
         q = np.atleast_2d(np.asarray(queries, np.float32))
         nq = q.shape[0]
         k_eff = min(k, len(self))
+        mask = self.alive if visible is None else (self.alive & visible)
+        n_mask = int(mask.sum())
         if self.ivf is not None:
             s, i, stats = self.ivf.search(q, k=k_eff, nprobe=nprobe,
-                                          mask=self.alive)
+                                          mask=mask)
             return s, i, int(round(stats.fraction_scanned * len(self)))
         from ..core.types import pad_queries
         qp, _ = pad_queries(q)
         if self.quantized:
             from ..kernels.topk_search.ops import topk_search_q8
             kp = pool_k(k_eff, len(self), self.rescore_factor)
-            _, pool = topk_search_q8(qp, self.q8, self.scale, self.alive, kp)
+            _, pool = topk_search_q8(qp, self.q8, self.scale, mask, kp)
             s, i = rescore_topk(q, np.asarray(pool)[:nq], self.fetch_f32,
                                 k_eff)
-            return s, i, self.n_alive
+            return s, i, n_mask
         from ..kernels.topk_search.ops import topk_search
-        s, i = topk_search(qp, self.emb, self.alive, k_eff)
-        return np.asarray(s)[:nq], np.asarray(i)[:nq], self.n_alive
+        s, i = topk_search(qp, self.emb, mask, k_eff)
+        return np.asarray(s)[:nq], np.asarray(i)[:nq], n_mask
 
     # -- persistence -------------------------------------------------------
     def filename(self) -> str:
@@ -226,6 +240,7 @@ class Segment:
         cols = dict(
             valid_from=self.valid_from,
             positions=self.positions, alive=self.alive,
+            tenant_ids=self.tenant_ids,
             chunk_ids=np.asarray(self.chunk_ids, dtype=np.str_),
             doc_ids=np.asarray(self.doc_ids, dtype=np.str_),
             texts=np.asarray(self.texts, dtype=np.str_))
@@ -281,7 +296,11 @@ class Segment:
         ivf_state = ((z["ivf_centroids"], z["ivf_assign"])
                      if "ivf_centroids" in z.files else None)
         common = dict(alive=z["alive"], ivf_min_rows=ivf_min_rows, seed=seed,
-                      rescore_factor=rescore_factor)
+                      rescore_factor=rescore_factor,
+                      # pre-tenancy segments have no tenant column: all
+                      # rows belong to the default tenant (id 0)
+                      tenant_ids=(z["tenant_ids"]
+                                  if "tenant_ids" in z.files else None))
         if "q8" in z.files:                    # quantized on-disk format
             f32_path = os.path.join(root, f"seg-{seg_id}.f32.npy")
             want = str(z["f32_checksum"])

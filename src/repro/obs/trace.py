@@ -108,24 +108,31 @@ class Trace:
     is only touched by the context managers below, which pop in
     ``__exit__`` so an exception anywhere unwinds it correctly."""
 
-    __slots__ = ("name", "intent", "root", "stack", "wall_ms")
+    __slots__ = ("name", "intent", "attrs", "root", "stack", "wall_ms")
 
-    def __init__(self, name: str, intent: Optional[str] = None):
+    def __init__(self, name: str, intent: Optional[str] = None,
+                 attrs: Optional[dict] = None):
         self.name = name
         self.intent = intent
+        self.attrs = attrs or {}       # e.g. tenant= (DESIGN.md §14)
         self.root = Span(name)
         self.stack = [self.root]
         self.wall_ms = 0.0
 
     def to_dict(self) -> dict:
-        return {"name": self.name, "intent": self.intent,
-                "wall_ms": round(self.wall_ms, 3),
-                "spans": self.root.to_dict()}
+        d = {"name": self.name, "intent": self.intent,
+             "wall_ms": round(self.wall_ms, 3),
+             "spans": self.root.to_dict()}
+        if self.attrs:
+            d["attrs"] = dict(self.attrs)
+        return d
 
     def render(self) -> str:
         head = f"trace {self.name}"
         if self.intent:
             head += f" [{self.intent}]"
+        for k, v in self.attrs.items():
+            head += f" {k}={v}"
         return head + "\n" + self.root.render(indent=1)
 
 
@@ -176,14 +183,16 @@ class _SpanCtx:
 
 
 class _TraceCtx:
-    __slots__ = ("name", "intent", "tr", "token", "t0")
+    __slots__ = ("name", "intent", "attrs", "tr", "token", "t0")
 
-    def __init__(self, name: str, intent: Optional[str]):
+    def __init__(self, name: str, intent: Optional[str],
+                 attrs: Optional[dict] = None):
         self.name = name
         self.intent = intent
+        self.attrs = attrs
 
     def __enter__(self) -> Span:
-        self.tr = Trace(self.name, self.intent)
+        self.tr = Trace(self.name, self.intent, attrs=self.attrs)
         self.token = _ACTIVE.set(self.tr)
         self.t0 = time.perf_counter()
         return self.tr.root
@@ -245,17 +254,19 @@ def current_trace() -> Optional[Trace]:
     return _ACTIVE.get()
 
 
-def trace(name: str, intent: Optional[str] = None):
+def trace(name: str, intent: Optional[str] = None, **attrs):
     """Open a root trace (context manager yielding the root span). A
     nested ``trace()`` call while one is already active degrades to a
     plain span, so layers can defensively open traces without
-    fragmenting the tree. Disabled => shared no-op."""
+    fragmenting the tree. Extra keyword args become trace ATTRIBUTES
+    (e.g. ``tenant=``) carried on the finished trace's dict/render —
+    dropped when degrading to a span. Disabled => shared no-op."""
     if not _ENABLED:
         return NOOP_SPAN
     tr = _ACTIVE.get()
     if tr is not None:
         return _SpanCtx(tr, name)
-    return _TraceCtx(name, intent)
+    return _TraceCtx(name, intent, attrs=attrs or None)
 
 
 def span(name: str):

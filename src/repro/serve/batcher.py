@@ -12,7 +12,13 @@ Admission control: with ``max_queue`` set, a submit past the high
 watermark is REJECTED WITH AN ERROR (``AdmissionRejected`` on the
 returned request) instead of growing the queue without bound — load is
 shed explicitly at the front door, never by silently dropping queued
-work. Per-request deadlines (``default_deadline_s`` / per-submit
+work. Multi-tenant fairness (DESIGN.md §14) adds two PER-TENANT gates
+evaluated under the same admission lock: ``tenant_quota`` caps how many
+of one tenant's requests may occupy the queue at once (a noisy tenant
+fills its own slice, never the whole queue), and ``tenant_rate`` is a
+per-tenant token bucket (requests/s, burst ``tenant_burst``) shedding
+sustained overload before it queues at all. Both rejections carry the
+tenant in the error and in ``tenant=``-labeled rejection counters. Per-request deadlines (``default_deadline_s`` / per-submit
 ``deadline_s``) are absolute instants measured from submission:
 requests that expire while queued complete with ``DeadlineExceeded``
 before wasting execution, and a dispatched batch runs under a
@@ -60,6 +66,7 @@ class Request:
     req_id: int
     payload: Any
     bucket: Any = 0            # any equality-comparable bucket key
+    tenant: str = ""           # submitting tenant ("" = default)
     enqueued_at: float = 0.0
     deadline_at: Optional[float] = None  # absolute perf_counter instant
     result: Any = None
@@ -79,7 +86,10 @@ class Batcher:
                  label: Optional[str] = None,
                  max_queue: Optional[int] = None,
                  default_deadline_s: Optional[float] = None,
-                 annotate: Optional[Callable[[], Optional[dict]]] = None):
+                 annotate: Optional[Callable[[], Optional[dict]]] = None,
+                 tenant_quota: Optional[int] = None,
+                 tenant_rate: Optional[float] = None,
+                 tenant_burst: Optional[int] = None):
         self.run_batch = run_batch
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
@@ -88,6 +98,14 @@ class Batcher:
         self.max_queue = max_queue
         self.default_deadline_s = default_deadline_s
         self.annotate = annotate
+        self.tenant_quota = tenant_quota
+        self.tenant_rate = tenant_rate
+        self.tenant_burst = (tenant_burst if tenant_burst is not None
+                             else (max(1, int(tenant_rate))
+                                   if tenant_rate is not None else None))
+        self._tenant_queued: dict[str, int] = {}
+        # tenant -> [tokens, last_refill_instant]
+        self._tenant_tokens: dict[str, list[float]] = {}
         self._queue: deque[Request] = deque()
         # admission check + append must be atomic: submits may come from
         # a different thread than the drain loop (DESIGN.md §13)
@@ -128,29 +146,63 @@ class Batcher:
     def queue_depth(self) -> int:
         return len(self._queue)
 
+    def _tenant_admit_locked(self, tenant: str, now: float
+                             ) -> Optional[str]:
+        """Per-tenant admission gates (caller holds ``_qlock``). Returns
+        a rejection reason, or None and CHARGES the tenant (queue slot
+        + one rate token)."""
+        if (self.tenant_quota is not None
+                and self._tenant_queued.get(tenant, 0)
+                >= self.tenant_quota):
+            return (f"tenant {tenant or 'default'!r} at queue quota "
+                    f"({self.tenant_quota})")
+        if self.tenant_rate is not None:
+            bucket = self._tenant_tokens.get(tenant)
+            if bucket is None:
+                bucket = [float(self.tenant_burst), now]
+                self._tenant_tokens[tenant] = bucket
+            tokens = min(float(self.tenant_burst),
+                         bucket[0] + (now - bucket[1]) * self.tenant_rate)
+            bucket[1] = now
+            if tokens < 1.0:
+                bucket[0] = tokens
+                return (f"tenant {tenant or 'default'!r} over rate "
+                        f"limit ({self.tenant_rate}/s)")
+            bucket[0] = tokens - 1.0
+        if self.tenant_quota is not None:
+            self._tenant_queued[tenant] = \
+                self._tenant_queued.get(tenant, 0) + 1
+        return None
+
     def submit(self, payload: Any,
-               deadline_s: Optional[float] = None) -> Request:
+               deadline_s: Optional[float] = None,
+               tenant: str = "") -> Request:
         now = time.perf_counter()
         if deadline_s is None:
             deadline_s = self.default_deadline_s
         req = Request(self._next_id, payload,
                       bucket=self.bucket_fn(payload),
+                      tenant=tenant,
                       enqueued_at=now,
                       deadline_at=(now + deadline_s)
                       if deadline_s is not None else None)
         self._next_id += 1
+        reason: Optional[str] = None
         with self._qlock:
             if (self.max_queue is not None
                     and len(self._queue) >= self.max_queue):
-                admitted = False
+                reason = (f"queue at high watermark ({self.max_queue}) "
+                          f"— request {req.req_id} shed")
             else:
-                self._queue.append(req)
-                admitted = True
-        if not admitted:
-            self._complete([req], error=AdmissionRejected(
-                f"queue at high watermark ({self.max_queue}) — "
-                f"request {req.req_id} shed"))
+                reason = self._tenant_admit_locked(tenant, now)
+                if reason is None:
+                    self._queue.append(req)
+        if reason is not None:
+            self._complete([req], error=AdmissionRejected(reason))
             self._c_rejected.inc()
+            REGISTRY.counter("batcher_tenant_rejected",
+                             batcher=self.label,
+                             tenant=tenant or "default").inc()
         return req
 
     def _take_batch(self) -> list[Request]:
@@ -165,6 +217,13 @@ class Batcher:
                 r = self._queue.popleft()
                 (batch if r.bucket == bucket else rest).append(r)
             self._queue.extendleft(reversed(rest))
+            if self.tenant_quota is not None:
+                for r in batch:    # release each tenant's queue slot
+                    left = self._tenant_queued.get(r.tenant, 0) - 1
+                    if left > 0:
+                        self._tenant_queued[r.tenant] = left
+                    else:
+                        self._tenant_queued.pop(r.tenant, None)
             return batch
 
     def _complete(self, reqs: list[Request], results=None,
@@ -199,7 +258,10 @@ class Batcher:
         if not live:
             return
         dls = [r.deadline_at for r in live if r.deadline_at is not None]
-        with trace("batch", intent=str(live[0].bucket)) as root:
+        tenants = sorted({r.tenant for r in live})
+        with trace("batch", intent=str(live[0].bucket),
+                   tenant=(tenants[0] or "default"
+                           if len(tenants) == 1 else "mixed")) as root:
             root.add("batch_size", len(live))
             # the batch executes once for everyone, so it runs under the
             # TIGHTEST member deadline (absolute — queueing time already
@@ -270,36 +332,48 @@ def intent_batcher(query_batch, k: int = 5, max_batch: int = 32,
                    max_wait_s: float = 0.0,
                    max_queue: Optional[int] = None,
                    default_deadline_s: Optional[float] = None,
-                   annotate: Optional[Callable[[], Optional[dict]]] = None
-                   ) -> Batcher:
+                   annotate: Optional[Callable[[], Optional[dict]]] = None,
+                   tenant_quota: Optional[int] = None,
+                   tenant_rate: Optional[float] = None,
+                   tenant_burst: Optional[int] = None) -> Batcher:
     """A Batcher over any retrieval callable with the engine signature
-    ``query_batch(texts, k=..., at=..., window=...)`` — the one factory
-    behind both ``LiveVectorLake.query_batcher`` and
+    ``query_batch(texts, k=..., at=..., window=..., visibility=...)`` —
+    the one factory behind both ``LiveVectorLake.query_batcher`` and
     ``ShardFabric.query_batcher``.
 
-    Payloads are query strings or ``(text, at, window)`` tuples;
-    requests bucket by their RESOLVED temporal intent (frozen
-    dataclass), so one dispatched batch maps to exactly one engine
-    group whether the intent came from explicit args or the query
-    text."""
+    Payloads are query strings or ``(text, at, window)`` /
+    ``(text, at, window, visibility)`` tuples; requests bucket by their
+    RESOLVED temporal intent (frozen dataclass) AND visibility scope,
+    so one dispatched batch maps to exactly one engine group — same
+    intent, same tenant scope — whether the intent came from explicit
+    args or the query text. Per-tenant admission (``tenant_quota`` /
+    ``tenant_rate``) applies at ``submit(..., tenant=)``."""
     from ..core.temporal import classify_query
+    from ..core.tenancy import visibility_key
 
     def norm(payload):
         if isinstance(payload, str):
-            return payload, None, None
+            return payload, None, None, None
+        if len(payload) == 3:
+            return (*payload, None)
         return payload
 
     def bucket(payload):
-        text, p_at, p_window = norm(payload)
-        return classify_query(text, at=p_at, window=p_window)
+        text, p_at, p_window, p_vis = norm(payload)
+        return (classify_query(text, at=p_at, window=p_window),
+                visibility_key(p_vis))
 
     def run(payloads: list) -> list:
         texts = [norm(p)[0] for p in payloads]
-        it = bucket(payloads[0])      # whole batch shares this intent
-        return query_batch(texts, k=k, at=it.at, window=it.window)
+        # whole batch shares this intent AND visibility scope
+        it, _ = bucket(payloads[0])
+        vis = norm(payloads[0])[3]
+        return query_batch(texts, k=k, at=it.at, window=it.window,
+                           visibility=vis)
 
     return Batcher(run_batch=run, max_batch=max_batch,
                    max_wait_s=max_wait_s, bucket_fn=bucket,
                    max_queue=max_queue,
                    default_deadline_s=default_deadline_s,
-                   annotate=annotate)
+                   annotate=annotate, tenant_quota=tenant_quota,
+                   tenant_rate=tenant_rate, tenant_burst=tenant_burst)

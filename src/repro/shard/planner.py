@@ -163,11 +163,13 @@ class ScatterGatherPlanner:
         self._pool = None              # lazy, parallel scatter only
 
     # ------------------------------------------------------------------
-    def _one_shard(self, s: str, texts, k, at, window):
+    def _one_shard(self, s: str, texts, k, at, window, visibility=None):
         """One shard's engine pass with bounded retry: transient faults
         (the chaos suite arms them at ``shard:<id>:query``) back off
         exponentially for up to ``shard_retries`` re-attempts before the
-        shard counts as failed for this gather."""
+        shard counts as failed for this gather. ``visibility`` travels
+        as tenant NAMES — each shard lake resolves them against its own
+        registry (tid encodings are lake-local, DESIGN.md §14)."""
         last: Optional[Exception] = None
         for attempt in range(self.shard_retries + 1):
             if attempt:
@@ -178,7 +180,8 @@ class ScatterGatherPlanner:
                 # inside the try so an armed transient fault is retryable
                 FAULTS.check(f"shard:{s}:query")
                 return self.fabric.lake(s).query_batch(
-                    texts, k=k, at=at, window=window)
+                    texts, k=k, at=at, window=window,
+                    visibility=visibility)
             except Exception as e:  # noqa: BLE001 — shard fault domain
                 last = e
         raise last
@@ -186,7 +189,8 @@ class ScatterGatherPlanner:
     def query_batch(self, texts: Sequence[str], k: int = 5,
                     at: Optional[int] = None,
                     window: Optional[tuple[int, int]] = None,
-                    degraded_ok: Optional[bool] = None
+                    degraded_ok: Optional[bool] = None,
+                    visibility=None
                     ) -> list[list[SearchResult]]:
         if not texts:
             return []
@@ -199,7 +203,8 @@ class ScatterGatherPlanner:
             if self.shard_timeout_s is not None \
                     or deadline_at() is not None:
                 self._scatter_parallel(ring, texts, k, at, window,
-                                       per_shard, failures, plan_sp)
+                                       per_shard, failures, plan_sp,
+                                       visibility=visibility)
             else:
                 # sequential scatter: the default path, span-for-span
                 # identical to the pre-§13 planner
@@ -207,7 +212,8 @@ class ScatterGatherPlanner:
                     with span(f"shard:{s}"):
                         try:
                             per_shard[s] = self._one_shard(
-                                s, texts, k, at, window)
+                                s, texts, k, at, window,
+                                visibility=visibility)
                         except Exception as e:  # noqa: BLE001
                             failures[s] = e
             with self._stats_lock:
@@ -248,7 +254,7 @@ class ScatterGatherPlanner:
 
     def _scatter_parallel(self, ring, texts, k, at, window,
                           per_shard: dict, failures: dict,
-                          plan_sp) -> None:
+                          plan_sp, visibility=None) -> None:
         """Thread-pool scatter with a bounded reply window per gather:
         min(shard_timeout_s from now, the active request deadline). A
         shard that misses the window counts as failed for THIS gather;
@@ -271,7 +277,8 @@ class ScatterGatherPlanner:
 
         def one(s: str):
             with subtrace(f"shard:{s}") as sroot:
-                return self._one_shard(s, texts, k, at, window), sroot
+                return self._one_shard(s, texts, k, at, window,
+                                       visibility=visibility), sroot
 
         futs = {s: self._pool.submit(one, s) for s in ring.shards}
         graft = getattr(plan_sp, "children", None)

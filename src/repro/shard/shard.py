@@ -56,9 +56,9 @@ class ShardLake:
         self.store = LiveVectorLake(root, embedder=embedder, **kw)
 
     # -- ingest / migration -------------------------------------------
-    def ingest(self, doc_id: str, text: str, ts: Optional[int] = None
-               ) -> CDCSummary:
-        return self.store.ingest(doc_id, text, ts=ts)
+    def ingest(self, doc_id: str, text: str, ts: Optional[int] = None,
+               tenant: str = "") -> CDCSummary:
+        return self.store.ingest(doc_id, text, ts=ts, tenant=tenant)
 
     def export_doc_history(self, doc_id: str):
         return self.store.export_doc_history(doc_id)
@@ -75,9 +75,10 @@ class ShardLake:
     # -- queries -------------------------------------------------------
     def query_batch(self, texts: Sequence[str], k: int = 5,
                     at: Optional[int] = None,
-                    window: Optional[tuple[int, int]] = None
-                    ) -> list[list[SearchResult]]:
-        return self.store.query_batch(texts, k=k, at=at, window=window)
+                    window: Optional[tuple[int, int]] = None,
+                    visibility=None) -> list[list[SearchResult]]:
+        return self.store.query_batch(texts, k=k, at=at, window=window,
+                                      visibility=visibility)
 
     # -- introspection -------------------------------------------------
     @property
@@ -130,7 +131,8 @@ class ShardFabric:
             self.ring = HashRing(shards, vnodes=vnodes, replicas=replicas)
             self.manifest.commit({"ring": self.ring.to_dict(),
                                   "transition": None,
-                                  "lake": self._persisted_lake_config()})
+                                  "lake": self._persisted_lake_config(),
+                                  "tenancy": "names-v1"})
             state = self.manifest.load()
         # the manifest is the root of trust: adopt the persisted lake
         # geometry so a bare ShardFabric(root) reopens correctly; an
@@ -171,10 +173,13 @@ class ShardFabric:
     def commit_state(self, ring: dict, transition: Optional[dict]) -> int:
         """Commit a new fabric epoch, carrying the persistent lake
         config forward (the manifest payload is whole-state, not a
-        patch)."""
+        patch). ``tenancy`` stamps the cross-shard tenant identity
+        scheme: visibility and migrations carry tenant NAMES (tid
+        encodings are lake-local, DESIGN.md §14)."""
         return self.manifest.commit({
             "ring": ring, "transition": transition,
-            "lake": self._persisted_lake_config()})
+            "lake": self._persisted_lake_config(),
+            "tenancy": "names-v1"})
 
     # ------------------------------------------------------------------
     # shard lakes
@@ -252,42 +257,52 @@ class ShardFabric:
                            if s not in owners]
         return tuple(owners)
 
-    def ingest(self, doc_id: str, text: str, ts: Optional[int] = None
-               ) -> CDCSummary:
+    def ingest(self, doc_id: str, text: str, ts: Optional[int] = None,
+               tenant: str = "") -> CDCSummary:
         """Route one CDC delta by ring position: chunk/diff/embed/commit
         runs on each owner lake (embedding is deterministic, so replicas
-        store identical records). Returns the primary owner's summary."""
+        store identical records). Returns the primary owner's summary.
+        ``tenant`` names the owning namespace — each owner lake resolves
+        the name against its own registry (DESIGN.md §14)."""
         owners = self.ingest_owners(doc_id)
         ts = self._monotonic_ts(ts)   # syncs every shard's clock first
-        summaries = [self.lake(s).ingest(doc_id, text, ts=ts)
+        summaries = [self.lake(s).ingest(doc_id, text, ts=ts,
+                                         tenant=tenant)
                      for s in owners]
         return summaries[0]
 
     def ingest_batch(self, docs: Sequence[tuple[str, str]],
-                     ts: Optional[int] = None) -> list[CDCSummary]:
+                     ts: Optional[int] = None,
+                     tenant: str = "") -> list[CDCSummary]:
         ts = self._monotonic_ts(ts)
-        return [self.ingest(doc_id, text, ts) for doc_id, text in docs]
+        return [self.ingest(doc_id, text, ts, tenant=tenant)
+                for doc_id, text in docs]
 
     # ------------------------------------------------------------------
     # queries (scatter-gather, planner.py)
     # ------------------------------------------------------------------
     def query(self, text: str, k: int = 5, at: Optional[int] = None,
-              window: Optional[tuple[int, int]] = None
-              ) -> list[SearchResult]:
-        return self.query_batch([text], k=k, at=at, window=window)[0]
+              window: Optional[tuple[int, int]] = None,
+              visibility=None) -> list[SearchResult]:
+        return self.query_batch([text], k=k, at=at, window=window,
+                                visibility=visibility)[0]
 
     def query_batch(self, texts: Sequence[str], k: int = 5,
                     at: Optional[int] = None,
                     window: Optional[tuple[int, int]] = None,
-                    degraded_ok: Optional[bool] = None
-                    ) -> list[list[SearchResult]]:
+                    degraded_ok: Optional[bool] = None,
+                    visibility=None) -> list[list[SearchResult]]:
         return self.planner.query_batch(texts, k=k, at=at, window=window,
-                                        degraded_ok=degraded_ok)
+                                        degraded_ok=degraded_ok,
+                                        visibility=visibility)
 
     def query_batcher(self, k: int = 5, max_batch: int = 32,
                       max_wait_s: float = 0.0,
                       max_queue: Optional[int] = None,
-                      default_deadline_s: Optional[float] = None):
+                      default_deadline_s: Optional[float] = None,
+                      tenant_quota: Optional[int] = None,
+                      tenant_rate: Optional[float] = None,
+                      tenant_burst: Optional[int] = None):
         """Serving-layer coalescing over the fabric, same contract (and
         same factory) as ``LiveVectorLake.query_batcher``: requests
         bucket by temporal intent, one dispatched batch == one
@@ -308,7 +323,10 @@ class ShardFabric:
         return intent_batcher(self.query_batch, k=k, max_batch=max_batch,
                               max_wait_s=max_wait_s, max_queue=max_queue,
                               default_deadline_s=default_deadline_s,
-                              annotate=annotate)
+                              annotate=annotate,
+                              tenant_quota=tenant_quota,
+                              tenant_rate=tenant_rate,
+                              tenant_burst=tenant_burst)
 
     # ------------------------------------------------------------------
     # membership / recovery
