@@ -1,21 +1,25 @@
-"""Tracing overhead on the fused-scan hot path (DESIGN.md §12 gate —
-ISSUE 6).
+"""Tracing overhead on the fused-scan hot path (DESIGN.md §12/§15 gates
+— ISSUE 6, ISSUE 9).
 
 The observability layer's design center is the no-op fast path: when no
 trace is active, every ``span()``/``add()`` call in the instrumented
 scan code returns a shared singleton without allocating or reading the
 clock. This suite measures the fused exact top-k scan (the memtable
-fused-block dispatch, the hottest instrumented path) in two modes:
+fused-block dispatch, the hottest instrumented path) in three modes:
 
-  - noop:   no trace active — the production default; instrumented
-            code exercises only the no-op guards;
-  - traced: every search runs under an active trace, so each dispatch
-            records real spans (fused_scan + kernel:topk_search).
+  - noop:     no trace active — the production default; instrumented
+              code exercises only the no-op guards;
+  - traced:   every search runs under an active trace, so each dispatch
+              records real spans (fused_scan + kernel:topk_search);
+  - recorded: traced AND the full §15 judgment layer is on — a tenant
+              SLO declared (every finished trace feeds burn-rate
+              accounting) and the flight recorder enabled (every
+              finished trace is classified and possibly retained).
 
 Samples ALTERNATE between the modes (cancels thermal/clock drift) and
 each mode takes the median, so the reported overhead is the marginal
-cost of span recording, not run-to-run noise. Gate: traced mode within
-2% of no-op mode — asserted here and in CI bench-smoke.
+cost of span recording, not run-to-run noise. Gates: traced within 2%
+of no-op, recorded within 3% — asserted here and in CI bench-smoke.
 
   PYTHONPATH=src python -m benchmarks.obs_overhead [--smoke] [--json out.json]
 """
@@ -54,18 +58,37 @@ def overhead_point(n: int, dim: int, nq: int, k: int,
             for _ in range(inner):
                 idx.search(q, k=k)
 
+    def search_recorded():
+        # same work as traced; the SLO engine + recorder are enabled
+        # around the sampling loop, so the marginal cost here is the
+        # §15 trace-exit hook (classification + burn accounting)
+        with obs.trace("obs_overhead", intent="current", tenant="bench"):
+            for _ in range(inner):
+                idx.search(q, k=k)
+
     # warm-up: jit compile + catalog build happen before any timing
     search_traced()
     search_noop()
     time.sleep(0.25)
-    xs: dict[str, list[float]] = {"noop": [], "traced": []}
+    modes = (("noop", search_noop, False),
+             ("traced", search_traced, False),
+             ("recorded", search_recorded, True))
+    xs: dict[str, list[float]] = {tag: [] for tag, _, _ in modes}
     for _ in range(samples):       # alternate modes to cancel drift
-        for tag, fn in (("noop", search_noop), ("traced", search_traced)):
+        for tag, fn, judged in modes:
+            if judged:
+                obs.SLO_ENGINE.declare("bench", "current",
+                                       latency_ms=1e6, target=0.999)
+                obs.FLIGHT_RECORDER.enable(capacity=32, sample_rate=0.05)
             with Timer() as t:
                 fn()
+            if judged:
+                obs.FLIGHT_RECORDER.disable()
+                obs.SLO_ENGINE.reset()
             xs[tag].append(t.elapsed * 1e3 / inner)
     noop_ms = float(np.median(xs["noop"]))
     traced_ms = float(np.median(xs["traced"]))
+    recorded_ms = float(np.median(xs["recorded"]))
     # spans recorded per traced search: fused_scan + kernel dispatch
     tr = obs.SLOW_QUERIES.slowest
     spans = 0
@@ -75,7 +98,10 @@ def overhead_point(n: int, dim: int, nq: int, k: int,
         "n": n, "dim": dim, "nq": nq, "k": k,
         "inner": inner, "samples": samples,
         "noop_ms": noop_ms, "traced_ms": traced_ms,
+        "recorded_ms": recorded_ms,
         "overhead_pct": (traced_ms / max(noop_ms, 1e-9) - 1.0) * 100.0,
+        "recorded_overhead_pct":
+            (recorded_ms / max(noop_ms, 1e-9) - 1.0) * 100.0,
         "spans_per_sample": spans,
     }
 
@@ -89,7 +115,10 @@ def run(smoke: bool = False, seed: int = 0) -> dict:
     gate = {
         "overhead_pct": point["overhead_pct"],
         "max_overhead_pct": 2.0,
-        "pass": point["overhead_pct"] < 2.0,
+        "recorded_overhead_pct": point["recorded_overhead_pct"],
+        "max_recorded_overhead_pct": 3.0,
+        "pass": (point["overhead_pct"] < 2.0
+                 and point["recorded_overhead_pct"] < 3.0),
     }
     return {"point": point, "gate": gate, "smoke": smoke,
             "timestamp": time.time()}
@@ -104,10 +133,16 @@ def rows_from(result: dict) -> list[tuple]:
          "fused scan, no trace active (production default)"),
         (f"{tag}/traced_ms", p["traced_ms"],
          f"{p['spans_per_sample']} spans recorded per sample"),
+        (f"{tag}/recorded_ms", p["recorded_ms"],
+         "traced + SLO declared + flight recorder on"),
         (f"{tag}/overhead_pct", p["overhead_pct"], "gate <2%"),
+        (f"{tag}/recorded_overhead_pct", p["recorded_overhead_pct"],
+         "gate <3%"),
         ("obs_overhead/gate_pass", float(g["pass"]),
-         f"traced vs noop {p['overhead_pct']:+.2f}% "
-         f"(max {g['max_overhead_pct']}%)"),
+         f"traced {p['overhead_pct']:+.2f}% (max "
+         f"{g['max_overhead_pct']}%), recorded "
+         f"{p['recorded_overhead_pct']:+.2f}% "
+         f"(max {g['max_recorded_overhead_pct']}%)"),
     ]
 
 

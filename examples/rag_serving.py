@@ -9,6 +9,7 @@ decode with a KV cache -> batched through the request batcher.
 """
 import tempfile
 
+from repro import obs
 from repro.core.store import LiveVectorLake
 from repro.data.corpus import generate_corpus
 from repro.models.transformer import TransformerConfig
@@ -43,12 +44,26 @@ with tempfile.TemporaryDirectory() as root:
         ("database backup schedule", None),
     ]
 
+    # SLOs per (tenant, intent) — DESIGN.md §15: current-tier lookups
+    # get a tight latency objective, as-of history a looser one; every
+    # finished batch trace below feeds burn-rate accounting
+    obs.SLO_ENGINE.declare("live", "current", latency_ms=500.0,
+                           target=0.99)
+    obs.SLO_ENGINE.declare("archive", "at", latency_ms=2000.0,
+                           target=0.99)
+
     def run_batch(payloads):
         return [engine.answer(q, k=2, at=at, max_new_tokens=6)
                 for q, at in payloads]
 
-    batcher = Batcher(run_batch, max_batch=2)
-    reqs = [batcher.submit(p) for p in requests]
+    # bucket by temporal intent so batches stay tenant-homogeneous and
+    # the batch traces carry real (tenant, intent) pairs for the SLOs
+    batcher = Batcher(run_batch, max_batch=2,
+                      bucket_fn=lambda p: "current" if p[1] is None
+                      else "at")
+    reqs = [batcher.submit(p,
+                           tenant="live" if p[1] is None else "archive")
+            for p in requests]
     batcher.drain()
 
     for r in reqs:
@@ -70,7 +85,6 @@ with tempfile.TemporaryDirectory() as root:
 
     # observability (DESIGN.md §12): every batch above ran under a
     # trace; print the metrics snapshot and the slowest span tree
-    from repro import obs
     snap = obs.REGISTRY.snapshot()
     print("\n-- metrics snapshot (query latency histograms) --")
     for key, h in snap["histograms"].items():
@@ -80,6 +94,13 @@ with tempfile.TemporaryDirectory() as root:
     print(f"   scan row-reads: "
           f"{ {k: int(v) for k, v in snap['counters'].items() if k.startswith('scan_row_reads')} }")
     print(f"\n-- slow-query log: {obs.SLOW_QUERIES.summary()}")
+    print("\n-- per-tenant SLO burn rates (DESIGN.md §15) --")
+    for s in obs.SLO_ENGINE.summary()["slos"]:
+        burns = " ".join(f"burn[{w}]={b:.2f}"
+                         for w, b in sorted(s["burn"].items()))
+        print(f"   {s['tenant']}/{s['intent']}: state={s['state']} "
+              f"{burns} ({s['requests']} reqs, "
+              f"{s['latency_ms']:.0f}ms @ {s['target']})")
     if obs.SLOW_QUERIES.slowest is not None:
         print("\n-- slowest trace --")
         print(obs.SLOW_QUERIES.slowest.render())

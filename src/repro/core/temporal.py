@@ -470,8 +470,10 @@ class TemporalEngine:
                                                    t0s, t1s, k)
             # the fused temporal block reads the whole resident history
             # once per BATCH, same convention as the hot fused scan
-            obs.scan_row_reads(res.n, nq, per_query=False,
-                               source="fused_temporal")
+            obs.scan_row_reads(
+                res.n, nq, per_query=False, source="fused_temporal",
+                row_bytes=(emb.shape[1] if res.quantized
+                           else emb.shape[1] * 4))
             self.fused_dispatches += 1
             return np.asarray(scores), np.asarray(idx)
 

@@ -706,9 +706,9 @@ class SegmentedIndex:
                 blocks_s.append(np.asarray(s, np.float32))
                 blocks_g.append(g)
                 # once per BATCH (fused)
-                scanned += obs.scan_row_reads(int(fmask.sum()), nq,
-                                              per_query=False,
-                                              source="fused")
+                scanned += obs.scan_row_reads(
+                    int(fmask.sum()), nq, per_query=False, source="fused",
+                    row_bytes=self.dim * (1 if self.quantized else 4))
         # solo segments (scale-incompatible with the fused block): one
         # exact scan each, whole batch per dispatch — like fused.
         for seg, sbase in cat.solo:
@@ -727,9 +727,9 @@ class SegmentedIndex:
                 blocks_s.append(s)
                 blocks_g.append(g)
                 # once per BATCH (exact)
-                scanned += obs.scan_row_reads(seg_scanned, nq,
-                                              per_query=False,
-                                              source="solo")
+                scanned += obs.scan_row_reads(
+                    seg_scanned, nq, per_query=False, source="solo",
+                    row_bytes=self.dim * (1 if self.quantized else 4))
         # IVF segments: batched centroid routing + per-query member scan.
         for seg, sbase in cat.ivf:
             svis = (None if vis is None
@@ -748,8 +748,9 @@ class SegmentedIndex:
                 blocks_g.append(g)
                 # per-query avg x queries (host-side member gathers, so
                 # bytes are accounted here — no kernel span underneath)
-                reads = obs.scan_row_reads(seg_scanned, nq,
-                                           per_query=True, source="ivf")
+                reads = obs.scan_row_reads(
+                    seg_scanned, nq, per_query=True, source="ivf",
+                    row_bytes=self.dim * (1 if self.quantized else 4))
                 isp.add("bytes_streamed",
                         reads * self.dim * (1 if self.quantized else 4))
                 scanned += reads

@@ -18,13 +18,22 @@ and maintenance workers all hit the same series concurrently, so every
 mutation (inc/set/observe) and every read that folds multiple fields
 (quantile/summary/snapshot) holds the instrument's lock — read-modify-
 write sequences like ``self.value += n`` are NOT atomic in CPython.
+That includes ``Gauge`` (DESIGN.md §15): it was documented lock-free
+when it only had last-write-wins ``set``, but ``inc()`` is a
+read-modify-write and the batcher's threads would drop updates.
+
+Windowed accounting (DESIGN.md §15): ``Histogram.snapshot_at()`` takes
+an immutable point-in-time copy of the bucket state and
+``Histogram.delta(prev)`` subtracts one, so the SLO engine computes
+"what happened in the last W seconds" from two snapshots — still no
+samples stored anywhere.
 """
 from __future__ import annotations
 
 import json
 import threading
 from bisect import bisect_right
-from typing import Optional
+from typing import NamedTuple, Optional
 
 
 def geometric_bounds(lo: float = 1e-3, hi: float = 1e5,
@@ -51,16 +60,58 @@ class Counter:
 
 
 class Gauge:
-    """Last-write-wins; a single attribute store is atomic under the
-    GIL, so no lock is needed."""
+    """Current-value instrument. ``set`` is last-write-wins but ``inc``
+    is a read-modify-write, so both hold the lock — concurrent
+    ``inc()`` calls from the batcher's threads must never drop updates
+    (hammer-tested)."""
 
-    __slots__ = ("value",)
+    __slots__ = ("value", "_lock")
 
     def __init__(self):
         self.value = 0.0
+        self._lock = threading.Lock()
 
     def set(self, v: float) -> None:
-        self.value = float(v)
+        with self._lock:
+            self.value = float(v)
+
+    def inc(self, n: float = 1.0) -> None:
+        with self._lock:
+            self.value += n
+
+
+class HistSnapshot(NamedTuple):
+    """Immutable point-in-time copy of a Histogram's state. Two
+    snapshots subtract (``Histogram.delta``) into the traffic that
+    arrived between them — the primitive the SLO engine's rolling
+    windows are built on (DESIGN.md §15)."""
+
+    bounds: tuple
+    counts: tuple
+    count: int
+    sum: float
+
+    def count_le(self, threshold: float) -> float:
+        """Observations <= ``threshold``, linearly interpolated inside
+        the crossing bucket (same accuracy bound as ``quantile``:
+        the geometric bucket width, <~7.5% relative)."""
+        if self.count == 0:
+            return 0.0
+        i = bisect_right(self.bounds, threshold)
+        total = float(sum(self.counts[:i]))
+        if i < len(self.bounds):       # crossing bucket [lo, hi): the
+            c = self.counts[i]         # overflow bucket never interpolates
+            if c:
+                lo = self.bounds[i - 1] if i > 0 else 0.0
+                hi = self.bounds[i]
+                total += c * (threshold - lo) / (hi - lo)
+        return min(total, float(self.count))
+
+    def fraction_over(self, threshold: float) -> float:
+        """Fraction of observations strictly over ``threshold``."""
+        if self.count == 0:
+            return 0.0
+        return max(0.0, 1.0 - self.count_le(threshold) / self.count)
 
 
 class Histogram:
@@ -116,6 +167,30 @@ class Histogram:
     def mean(self) -> float:
         return self.sum / self.count if self.count else 0.0
 
+    def snapshot_at(self) -> HistSnapshot:
+        """Immutable copy of the bucket state right now (DESIGN.md §15):
+        the SLO engine keeps a short ring of these and never any
+        samples."""
+        with self._lock:
+            return HistSnapshot(tuple(self.bounds), tuple(self.counts),
+                                self.count, self.sum)
+
+    def delta(self, prev: Optional[HistSnapshot]) -> HistSnapshot:
+        """The traffic observed since ``prev`` (a ``snapshot_at`` taken
+        earlier on THIS histogram) as a snapshot of its own —
+        quantile-free windowed accounting for burn rates. ``prev=None``
+        means "since forever" (delta == current state). A prev with
+        MORE observations than now (the registry was reset underneath)
+        degrades to the current state instead of going negative."""
+        cur = self.snapshot_at()
+        if prev is None or prev.count > cur.count \
+                or prev.bounds != cur.bounds:
+            return cur
+        return HistSnapshot(
+            cur.bounds,
+            tuple(c - p for c, p in zip(cur.counts, prev.counts)),
+            cur.count - prev.count, cur.sum - prev.sum)
+
     def summary(self) -> dict:
         with self._lock:
             if self.count == 0:
@@ -133,6 +208,20 @@ def _series_key(name: str, labels: dict) -> str:
         return name
     inner = ",".join(f"{k}={labels[k]}" for k in sorted(labels))
     return f"{name}{{{inner}}}"
+
+
+def parse_series_key(key: str) -> tuple[str, dict]:
+    """Invert ``_series_key``: ``name{k=v,...}`` -> (name, labels). The
+    export layer uses this to re-attach labels to Prometheus series."""
+    if not key.endswith("}") or "{" not in key:
+        return key, {}
+    name, _, inner = key[:-1].partition("{")
+    labels = {}
+    for pair in inner.split(","):
+        if pair:
+            k, _, v = pair.partition("=")
+            labels[k] = v
+    return name, labels
 
 
 class MetricsRegistry:
@@ -169,6 +258,16 @@ class MetricsRegistry:
             with self._lock:
                 h = self._hists.setdefault(key, Histogram(bounds))
         return h
+
+    def export_state(self) -> tuple[list, list, list]:
+        """Stable-ordered (key, instrument) lists for the three series
+        kinds — the export layer's raw feed (obs/export.py). The lists
+        are copies; the instruments are live (read them under their own
+        locks)."""
+        with self._lock:
+            return (sorted(self._counters.items()),
+                    sorted(self._gauges.items()),
+                    sorted(self._hists.items()))
 
     def snapshot(self) -> dict:
         """One queryable view of every series: counters/gauges by value,

@@ -204,11 +204,20 @@ class _TraceCtx:
         if etype is not None:
             tr.root.status = f"error:{etype.__name__}"
         _ACTIVE.reset(self.token)
-        # registry + slow-query log get every finished trace
+        # registry + slow-query log get every finished trace; the SLO
+        # engine and flight recorder (DESIGN.md §15) only when switched
+        # on — their guards are plain attribute loads so a store with no
+        # declared SLO pays nothing beyond them
         from .metrics import REGISTRY
+        from .recorder import FLIGHT_RECORDER
+        from .slo import SLO_ENGINE
         from .slowlog import SLOW_QUERIES
         REGISTRY.histogram("trace_ms", trace=tr.name).observe(tr.wall_ms)
         SLOW_QUERIES.observe(tr)
+        if SLO_ENGINE.active:
+            SLO_ENGINE.observe_trace(tr)
+        if FLIGHT_RECORDER.enabled:
+            FLIGHT_RECORDER.observe_trace(tr)
         return False
 
 
@@ -288,7 +297,7 @@ def add(name: str, value) -> None:
 
 
 def scan_row_reads(rows: int, nq: int, per_query: bool,
-                   source: str = "scan") -> int:
+                   source: str = "scan", row_bytes: int = 0) -> int:
     """THE scan-accounting convention, centralized (ISSUE 6 satellite —
     asserted by a PR 5 test): a FUSED/exact block reads each row once
     per BATCH (that is what the fused dispatch buys), so it contributes
@@ -298,9 +307,24 @@ def scan_row_reads(rows: int, nq: int, per_query: bool,
 
     Returns the row-read increment (callers fold it into their own
     accounting); also lands on the current span's ``rows_scanned`` and
-    the process-wide ``scan_row_reads{source=...}`` counter."""
+    the process-wide ``scan_row_reads{source=...}`` counter.
+
+    Per-tenant resource metering (DESIGN.md §15): when the active trace
+    carries a ``tenant`` attribute, the same reads (and, with
+    ``row_bytes`` — the per-row footprint the scan actually streamed —
+    the bytes) are additionally billed to
+    ``scan_row_reads{tenant=...}`` / ``scan_bytes_streamed{tenant=...}``
+    so a tenant's scan footprint is answerable without trace archaeology."""
     reads = int(rows) * int(nq) if per_query else int(rows)
     add("rows_scanned", reads)
     from .metrics import REGISTRY
     REGISTRY.counter("scan_row_reads", source=source).inc(reads)
+    tr = _ACTIVE.get()
+    if tr is not None:
+        tenant = tr.attrs.get("tenant")
+        if tenant:
+            REGISTRY.counter("scan_row_reads", tenant=tenant).inc(reads)
+            if row_bytes:
+                REGISTRY.counter("scan_bytes_streamed",
+                                 tenant=tenant).inc(reads * int(row_bytes))
     return reads

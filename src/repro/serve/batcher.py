@@ -51,7 +51,7 @@ import time
 from collections import deque
 from typing import Any, Callable, Optional
 
-from ..obs import REGISTRY, trace
+from ..obs import FLIGHT_RECORDER, REGISTRY, SLO_ENGINE, trace
 from .deadline import DeadlineExceeded, deadline_scope
 
 
@@ -203,6 +203,18 @@ class Batcher:
             REGISTRY.counter("batcher_tenant_rejected",
                              batcher=self.label,
                              tenant=tenant or "default").inc()
+            # a shed request never gets a trace, so the SLO engine and
+            # flight recorder hear about it HERE (DESIGN.md §15) — an
+            # admission rejection is always a bad event and always an
+            # interesting record
+            if SLO_ENGINE.active:
+                SLO_ENGINE.observe(tenant or "default", str(req.bucket),
+                                   None, ok=False)
+            if FLIGHT_RECORDER.enabled:
+                FLIGHT_RECORDER.observe_event(
+                    "admission_rejected", batcher=self.label,
+                    tenant=tenant or "default",
+                    intent=str(req.bucket), detail=reason)
         return req
 
     def _take_batch(self) -> list[Request]:
@@ -245,16 +257,23 @@ class Batcher:
     def _execute(self, batch: list[Request]) -> None:
         t_start = time.perf_counter()
         live = []
+        max_wait_ms = 0.0
         for r in batch:
-            self._h_queue_wait_ms.observe((t_start - r.enqueued_at) * 1e3)
+            wait_ms = (t_start - r.enqueued_at) * 1e3
+            self._h_queue_wait_ms.observe(wait_ms)
             if r.deadline_at is not None and t_start >= r.deadline_at:
                 # expired while queued: explicit error — load shedding
                 # never silently drops a request
-                self._c_deadline.inc(self._complete([r],
-                                     error=DeadlineExceeded(
-                    f"request {r.req_id}: deadline expired in queue")))
+                n = self._complete([r], error=DeadlineExceeded(
+                    f"request {r.req_id}: deadline expired in queue"))
+                self._c_deadline.inc(n)
+                if n and SLO_ENGINE.active:
+                    SLO_ENGINE.observe(r.tenant or "default",
+                                       str(r.bucket), None, ok=False)
             else:
                 live.append(r)
+                if wait_ms > max_wait_ms:
+                    max_wait_ms = wait_ms
         if not live:
             return
         dls = [r.deadline_at for r in live if r.deadline_at is not None]
@@ -263,6 +282,9 @@ class Batcher:
                    tenant=(tenants[0] or "default"
                            if len(tenants) == 1 else "mixed")) as root:
             root.add("batch_size", len(live))
+            # time the batch's slowest member spent queued — the cost
+            # attributor's queue-bound signal (obs/cost.py)
+            root.add("queue_wait_ms", round(max_wait_ms, 3))
             # the batch executes once for everyone, so it runs under the
             # TIGHTEST member deadline (absolute — queueing time already
             # counted against it)

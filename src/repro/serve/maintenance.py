@@ -35,7 +35,7 @@ import time
 from collections import deque
 from typing import Callable, Optional
 
-from ..obs import REGISTRY
+from ..obs import REGISTRY, trace
 
 
 class MaintenanceWorker:
@@ -157,7 +157,13 @@ class MaintenanceWorker:
                 time.sleep(self.backoff_s
                            * self.backoff_factor ** (attempt - 1))
             try:
-                fn()
+                # each attempt is its own root trace (worker threads
+                # carry no contextvar from serving): a failed compaction
+                # leaves an error span tree in the flight recorder, and
+                # the "maintenance" intent gets its own slowlog budget
+                # so long jobs don't drown real serving outliers
+                with trace(f"maint:{key}", intent="maintenance"):
+                    fn()
                 self._c_jobs.inc()
                 self._h_job_ms.observe((time.perf_counter() - t0) * 1e3)
                 return

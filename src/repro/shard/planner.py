@@ -62,7 +62,7 @@ import numpy as np
 
 from ..core.types import SearchResult
 from ..index.lsm import merge_topk_candidates
-from ..obs import Span, span, subtrace
+from ..obs import Span, current_trace, span, subtrace
 from ..serve.deadline import DeadlineExceeded, deadline_at
 from ..testing.faults import FAULTS
 
@@ -243,6 +243,12 @@ class ScatterGatherPlanner:
                     self.stats["degraded_gathers"] += 1
                 plan_sp.add("degraded", 1)
                 plan_sp.add("shards_missing", len(failures))
+                # stamp the whole REQUEST degraded (DESIGN.md §15): the
+                # flight recorder always retains degraded traces and
+                # SLOs with degraded_bad burn budget on them
+                tr = current_trace()
+                if tr is not None:
+                    tr.attrs["degraded"] = True
             self.last_gather = {
                 "degraded": degraded,
                 "complete": complete,

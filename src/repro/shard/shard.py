@@ -371,16 +371,20 @@ class ShardFabric:
         }
 
     def health(self) -> dict:
-        """Fabric-wide health in ONE call (DESIGN.md §12): topology +
-        per-shard tier stats (``stats()``), the planner's gather
-        counters, the process-wide metrics snapshot (per-tier latency
-        histograms, scan-accounting counters, batcher series), and the
-        slow-query log summary."""
-        from ..obs import REGISTRY, SLOW_QUERIES
+        """Fabric-wide health in ONE call (DESIGN.md §12, §15):
+        topology + per-shard tier stats (``stats()``), the planner's
+        gather counters, the process-wide metrics snapshot (per-tier
+        latency histograms, scan-accounting counters, batcher series),
+        the slow-query log summary, every declared SLO's burn rates +
+        alert state, and the flight recorder's retention summary."""
+        from ..obs import (FLIGHT_RECORDER, REGISTRY, SLO_ENGINE,
+                           SLOW_QUERIES)
         return {
             "fabric": self.stats(),
             "planner": dict(self.planner.stats),
             "last_gather": self.planner.last_gather,
             "metrics": REGISTRY.snapshot(),
             "slow_queries": SLOW_QUERIES.summary(),
+            "slo": SLO_ENGINE.summary(),
+            "flight_recorder": FLIGHT_RECORDER.summary(),
         }

@@ -79,6 +79,10 @@ class FaultRegistry:
         self._prefixes: list[FaultRule] = []    # rules armed with 'xyz:*'
         self._rng = random.Random(seed)
         self.history: list[str] = []            # fired points, in order
+        # fired-fault observers (the flight recorder's autodump hook —
+        # DESIGN.md §15). NOT cleared by reset(): tests reset rules in
+        # teardown and the recorder must survive that.
+        self._listeners: list = []
 
     # -- arming ---------------------------------------------------------
     def arm(self, point: str, exc: Optional[type] = None,
@@ -105,6 +109,20 @@ class FaultRegistry:
             self._prefixes.clear()
             self._rng = random.Random(seed)
             self.history.clear()
+
+    # -- listeners ------------------------------------------------------
+    def add_listener(self, fn) -> None:
+        """Register ``fn(point)`` to run every time a fault FIRES (after
+        the registry lock is released, before the exception is raised).
+        Listener errors are swallowed — observability must never mask
+        the injected fault itself."""
+        with self._lock:
+            if fn not in self._listeners:
+                self._listeners.append(fn)
+
+    def remove_listener(self, fn) -> None:
+        with self._lock:
+            self._listeners = [f for f in self._listeners if f is not fn]
 
     # -- introspection --------------------------------------------------
     def armed(self) -> list[str]:
@@ -142,6 +160,12 @@ class FaultRegistry:
             self.history.append(point)
             etype = rule.exc or exc
             msg = rule.message or f"injected fault at {point}"
+            listeners = list(self._listeners)
+        for fn in listeners:        # outside the lock: a listener may
+            try:                    # re-enter the registry (recorder
+                fn(point)           # dumps read `fired()`)
+            except Exception:
+                pass
         raise etype(msg)
 
 

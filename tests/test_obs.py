@@ -529,3 +529,203 @@ class TestSubtrace:
             assert obs.subtrace("x") is obs.NOOP_SPAN
         finally:
             obs.set_enabled(True)
+
+
+class TestGaugeAndSnapshots:
+    """PR 9 satellites: the locked Gauge (inc is read-modify-write) and
+    the snapshot/delta primitive the SLO engine's windows ride on."""
+
+    def test_gauge_set_and_inc(self):
+        reg = MetricsRegistry()
+        g = reg.gauge("queue_depth", shard="s00")
+        g.set(3.0)
+        g.inc(2.0)
+        g.inc(-1.0)
+        assert g.value == 4.0
+        assert reg.gauge("queue_depth", shard="s00") is g
+
+    def test_gauge_inc_hammer_exact_total(self):
+        import threading
+        reg = MetricsRegistry()
+        g = reg.gauge("hammer")
+        n_threads, per = 8, 5_000
+
+        def worker():
+            for _ in range(per):
+                g.inc(1.0)
+
+        ts = [threading.Thread(target=worker) for _ in range(n_threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        # a lock-free read-modify-write would drop updates here
+        assert g.value == n_threads * per
+
+    def test_snapshot_delta_isolates_new_traffic(self):
+        h = Histogram(bounds=[1.0, 10.0, 100.0])
+        for v in (0.5, 5.0):
+            h.observe(v)
+        base = h.snapshot_at()
+        for v in (5.0, 50.0, 500.0):
+            h.observe(v)
+        d = h.delta(base)
+        assert d.count == 3
+        assert d.sum == pytest.approx(555.0)
+        assert d.counts == (0, 1, 1, 1)
+        # the live histogram is untouched
+        assert h.count == 5
+
+    def test_delta_degrades_when_prev_is_ahead(self):
+        # registry reset underneath: prev has MORE than current
+        h = Histogram(bounds=[1.0, 10.0])
+        h.observe(5.0)
+        h.observe(5.0)
+        stale = h.snapshot_at()
+        h2 = Histogram(bounds=[1.0, 10.0])
+        h2.observe(5.0)
+        d = h2.delta(stale)
+        assert d.count == 1       # current state, not negative counts
+
+    def test_count_le_interpolates_crossing_bucket(self):
+        h = Histogram(bounds=[0.0, 10.0, 20.0])
+        for _ in range(10):
+            h.observe(5.0)        # all land in (0, 10]
+        s = h.snapshot_at()
+        assert s.count_le(10.0) == pytest.approx(10.0)
+        assert s.count_le(5.0) == pytest.approx(5.0)   # half the bucket
+        assert s.count_le(0.0) == pytest.approx(0.0)
+        assert s.fraction_over(5.0) == pytest.approx(0.5)
+        assert s.fraction_over(1e9) == 0.0
+
+    def test_count_le_never_interpolates_overflow(self):
+        h = Histogram(bounds=[1.0, 10.0])
+        h.observe(500.0)          # overflow bucket
+        s = h.snapshot_at()
+        assert s.count_le(10.0) == 0.0
+        assert s.fraction_over(10.0) == 1.0
+
+    def test_parse_series_key_round_trip(self):
+        from repro.obs import parse_series_key
+        assert parse_series_key("plain") == ("plain", {})
+        assert parse_series_key("m{a=1,b=x}") == ("m", {"a": "1",
+                                                        "b": "x"})
+        reg = MetricsRegistry()
+        reg.counter("m", b="x", a="1").inc(1)
+        ((key, _),), _, _ = reg.export_state()
+        assert parse_series_key(key) == ("m", {"a": "1", "b": "x"})
+
+
+class TestIntentBudgets:
+    """Slow-query budgets are per-intent (DESIGN.md §15): maintenance
+    jobs get a deliberately high default so compactions don't evict
+    real serving outliers."""
+
+    def _tr(self, intent, wall_ms, name="request"):
+        from repro.obs.trace import Trace
+        tr = Trace(name, intent)
+        tr.wall_ms = tr.root.wall_ms = wall_ms
+        return tr
+
+    def test_maintenance_default_budget(self):
+        assert obs.SLOW_QUERIES.budget_for("maintenance") == 10_000.0
+        assert obs.SLOW_QUERIES.budget_for("current") == 100.0
+        assert obs.SLOW_QUERIES.budget_for(None) == 100.0
+
+    def test_token_matching_against_rendered_intents(self):
+        obs.SLOW_QUERIES.configure(intent_budgets={"at": 2000.0})
+        bucket = "(TemporalIntent(mode='at', at=5000), None)"
+        assert obs.SLOW_QUERIES.budget_for(bucket) == 2000.0
+        assert obs.SLOW_QUERIES.budget_for("comparative") == 100.0
+
+    def test_per_intent_retention(self):
+        # 500ms maintenance: under ITS budget; 500ms serving: over
+        obs.SLOW_QUERIES.observe(self._tr("maintenance", 500.0,
+                                          name="maint:compact"))
+        obs.SLOW_QUERIES.observe(self._tr("current", 500.0))
+        retained = obs.SLOW_QUERIES.traces()
+        assert [t.intent for t in retained] == ["current"]
+        # the slowest tracker still sees everything
+        assert obs.SLOW_QUERIES.observed == 2
+
+    def test_configure_merges_and_none_removes(self):
+        obs.SLOW_QUERIES.configure(intent_budgets={"at": 2000.0})
+        obs.SLOW_QUERIES.configure(intent_budgets={"window": 1500.0})
+        got = obs.SLOW_QUERIES.summary()["intent_budgets"]
+        assert got == {"maintenance": 10_000.0, "at": 2000.0,
+                       "window": 1500.0}
+        obs.SLOW_QUERIES.configure(intent_budgets={"maintenance": None})
+        assert obs.SLOW_QUERIES.budget_for("maintenance") == 100.0
+
+    def test_maintenance_jobs_run_traced(self):
+        from repro.serve.maintenance import MaintenanceWorker
+        worker = MaintenanceWorker().start()
+        try:
+            assert worker.submit("compact", lambda: None)
+            assert worker.drain(timeout=5.0)
+        finally:
+            worker.stop()
+        tr = obs.SLOW_QUERIES.slowest
+        assert tr is not None
+        assert tr.name == "maint:compact"
+        assert tr.intent == "maintenance"
+
+
+class TestTenantMetering:
+    """Per-tenant scan metering (DESIGN.md §15): when the active trace
+    carries a tenant attribute, scan_row_reads bills reads (and with
+    row_bytes, bytes) to tenant-labeled series."""
+
+    def test_helper_bills_reads_and_bytes_to_tenant(self):
+        obs.REGISTRY.reset()
+        with obs.trace("request", tenant="acme"):
+            obs.scan_row_reads(1024, nq=4, per_query=False,
+                               source="fused", row_bytes=384)
+            obs.scan_row_reads(100, nq=4, per_query=True,
+                               source="ivf", row_bytes=1536)
+        c = obs.REGISTRY.snapshot()["counters"]
+        assert c["scan_row_reads{tenant=acme}"] == 1024 + 400
+        assert c["scan_bytes_streamed{tenant=acme}"] == \
+            1024 * 384 + 400 * 1536
+        # the per-source convention series are untouched by tenancy
+        assert c["scan_row_reads{source=fused}"] == 1024
+        assert c["scan_row_reads{source=ivf}"] == 400
+
+    def test_no_tenant_attr_means_no_tenant_series(self):
+        obs.REGISTRY.reset()
+        with obs.trace("request"):
+            obs.scan_row_reads(64, nq=1, per_query=False,
+                               source="fused", row_bytes=4)
+        c = obs.REGISTRY.snapshot()["counters"]
+        assert not any("tenant=" in k for k in c)
+        assert c["scan_row_reads{source=fused}"] == 64
+
+    def test_index_scan_bills_bytes_end_to_end(self):
+        from repro.core.types import ChunkRecord
+        from repro.index.lsm import SegmentedIndex
+        obs.REGISTRY.reset()
+        rng = np.random.default_rng(0)
+        dim = 16
+        with tempfile.TemporaryDirectory() as root:
+            idx = SegmentedIndex(dim, mem_capacity=64, root=root)
+            idx.insert([ChunkRecord(chunk_id=f"c{i}", doc_id=f"d{i}",
+                                    position=0, valid_from=1 + i,
+                                    text="r",
+                                    embedding=rng.normal(size=dim))
+                        for i in range(32)])
+            with obs.trace("request", tenant="acme"):
+                idx.search(rng.normal(size=(2, dim)), k=4)
+        c = obs.REGISTRY.snapshot()["counters"]
+        reads = c["scan_row_reads{tenant=acme}"]
+        assert reads > 0
+        # row_bytes plumbed from the index: dim bytes (int8) or dim*4
+        assert c["scan_bytes_streamed{tenant=acme}"] in \
+            (reads * dim, reads * dim * 4)
+
+
+class TestRooflineConstant:
+    def test_cost_peak_mirrors_benchmarks_roofline(self):
+        # src must not import from benchmarks/, so obs/cost.py
+        # duplicates the constant — this is the drift guard
+        from benchmarks.roofline import HBM_BW
+        assert obs.PEAK_HBM_GBS * 1e9 == HBM_BW

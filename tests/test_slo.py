@@ -1,0 +1,216 @@
+"""SLO engine tests (src/repro/obs/slo.py — DESIGN.md §15): burn-rate
+correctness against synthetic traffic with KNOWN violation rates on
+both windows (driven through a fake clock so real window arithmetic is
+exercised), the ok -> warning -> burning state machine, intent token
+matching, degraded accounting, published gauges, and the trace-exit
+integration."""
+import itertools
+
+import pytest
+
+from repro import obs
+from repro.obs import REGISTRY
+from repro.obs.slo import SLOEngine, intent_matches
+
+_uid = itertools.count()
+
+
+def _tenant():
+    """Unique tenant per test: the engine's histograms live in the
+    process-wide registry, so reusing a name would leak one test's
+    traffic into the next's cold-start window."""
+    return f"t{next(_uid)}"
+
+
+@pytest.fixture()
+def clockeng():
+    clock = [0.0]
+    eng = SLOEngine(clock=lambda: clock[0], resolution_s=1.0)
+    return clock, eng
+
+
+@pytest.fixture(autouse=True)
+def _clean():
+    obs.set_enabled(True)
+    obs.SLO_ENGINE.reset()
+    yield
+    obs.SLO_ENGINE.reset()
+
+
+class TestIntentMatching:
+    def test_wildcard_and_none_match_everything(self):
+        assert intent_matches("*", "anything")
+        assert intent_matches(None, "anything")
+        assert intent_matches("*", None)
+
+    def test_token_match_against_rendered_bucket(self):
+        bucket = "(TemporalIntent(mode='at', at=5000), None)"
+        assert intent_matches("at", bucket)
+        assert not intent_matches("current", bucket)
+        assert intent_matches(
+            "current", "(TemporalIntent(mode='current'), None)")
+
+    def test_at_does_not_substring_match_comparative(self):
+        # 'at' IS a substring of 'comparative' — token matching is the
+        # whole point of the helper
+        assert not intent_matches("at", "comparative")
+        assert intent_matches("comparative", "comparative")
+
+    def test_no_intent_matches_only_wildcard(self):
+        assert not intent_matches("current", None)
+
+
+class TestBurnRates:
+    def test_known_violation_rate_on_both_windows(self, clockeng):
+        clock, eng = clockeng
+        tenant = _tenant()
+        # target 0.99 => 1% error budget; exactly 10% of requests land
+        # way over the 50ms threshold => burn = 0.10 / 0.01 = 10
+        eng.declare(tenant, "current", latency_ms=50.0, target=0.99,
+                    windows_s=(60.0, 300.0))
+        for i in range(800):           # 400s of traffic at 2 req/s
+            clock[0] += 0.5
+            eng.observe(tenant, "current",
+                        500.0 if i % 10 == 9 else 5.0)
+        r = eng.burn_rates(tenant, "current")
+        for window in ("60s", "300s"):
+            assert r["burn"][window] == pytest.approx(10.0, rel=0.15), \
+                (window, r["burn"])
+
+    def test_short_window_recovers_before_long(self, clockeng):
+        clock, eng = clockeng
+        tenant = _tenant()
+        eng.declare(tenant, "current", latency_ms=50.0, target=0.99,
+                    windows_s=(60.0, 300.0))
+        for i in range(400):           # 200s at 50% violations: burning
+            clock[0] += 0.5
+            eng.observe(tenant, "current", 500.0 if i % 2 else 5.0)
+        assert eng.burn_rates(tenant, "current")["state"] == "burning"
+        for _ in range(160):           # 80s fully healthy
+            clock[0] += 0.5
+            eng.observe(tenant, "current", 5.0)
+        r = eng.burn_rates(tenant, "current")
+        # short window sees only healthy traffic; the long window still
+        # contains the incident — exactly the multi-window alert rule
+        assert r["burn"]["60s"] == pytest.approx(0.0, abs=0.5)
+        assert r["burn"]["300s"] > 4.0
+        assert r["state"] == "warning"      # long alone can't page
+
+    def test_errors_count_against_availability(self, clockeng):
+        clock, eng = clockeng
+        tenant = _tenant()
+        eng.declare(tenant, "*", latency_ms=1e6, target=0.999)
+        for i in range(100):
+            clock[0] += 1.0
+            eng.observe(tenant, "current", 1.0,
+                        ok=(i % 20 != 19))       # 5% hard failures
+        r = eng.burn_rates(tenant, "*")
+        assert r["burn"]["60s"] == pytest.approx(0.05 / 0.001, rel=0.2)
+        assert r["errors"] == 5
+
+    def test_no_traffic_is_zero_burn_ok(self, clockeng):
+        _, eng = clockeng
+        tenant = _tenant()
+        eng.declare(tenant)
+        r = eng.burn_rates(tenant)
+        assert r["burn"] == {"60s": 0.0, "300s": 0.0}
+        assert r["state"] == "ok"
+
+    def test_degraded_bad_burns_budget(self, clockeng):
+        clock, eng = clockeng
+        t_strict, t_lax = _tenant(), _tenant()
+        eng.declare(t_strict, "*", latency_ms=1e6, target=0.999,
+                    degraded_bad=True)
+        eng.declare(t_lax, "*", latency_ms=1e6, target=0.999,
+                    degraded_bad=False)
+        for tenant in (t_strict, t_lax):
+            clock[0] += 1.0
+            eng.observe(tenant, "current", 1.0, ok=True, degraded=True)
+            eng.observe(tenant, "current", 1.0, ok=True)
+        assert eng.burn_rates(t_strict)["burn"]["60s"] > 0.0
+        assert eng.burn_rates(t_lax)["burn"]["60s"] == 0.0
+        assert eng.burn_rates(t_lax)["degraded"] == 1
+
+
+class TestStateMachine:
+    def _feed(self, eng, clock, tenant, n, bad_every):
+        for i in range(n):
+            clock[0] += 0.5
+            bad = bad_every and i % bad_every == bad_every - 1
+            eng.observe(tenant, "current", 500.0 if bad else 5.0)
+
+    def test_warning_needs_one_window_burning_needs_both(self, clockeng):
+        clock, eng = clockeng
+        tenant = _tenant()
+        # budget 1%: warn at burn>=1 (1% bad), page at burn>=4 (4% bad)
+        eng.declare(tenant, "*", latency_ms=50.0, target=0.99,
+                    windows_s=(60.0, 300.0), warn_burn=1.0,
+                    page_burn=4.0)
+        self._feed(eng, clock, tenant, 700, bad_every=50)   # 2% bad
+        r = eng.burn_rates(tenant)
+        assert r["state"] == "warning", r["burn"]
+        self._feed(eng, clock, tenant, 700, bad_every=10)   # 10% bad
+        r = eng.burn_rates(tenant)
+        assert r["state"] == "burning", r["burn"]
+        assert r["transitions"] >= 2
+        assert REGISTRY.counter("slo_state_changes", tenant=tenant,
+                                intent="*").value >= 2
+
+    def test_burn_gauges_published(self, clockeng):
+        clock, eng = clockeng
+        tenant = _tenant()
+        eng.declare(tenant, "current", latency_ms=50.0, target=0.99)
+        for i in range(100):
+            clock[0] += 0.5
+            eng.observe(tenant, "current", 500.0 if i % 2 else 5.0)
+        r = eng.burn_rates(tenant, "current")
+        for window in ("60s", "300s"):
+            g = REGISTRY.gauge("slo_burn_rate", tenant=tenant,
+                               intent="current", window=window)
+            assert g.value == pytest.approx(r["burn"][window])
+
+    def test_summary_reports_worst_state(self, clockeng):
+        clock, eng = clockeng
+        t_ok, t_burn = _tenant(), _tenant()
+        eng.declare(t_ok, "*", latency_ms=1e6, target=0.99)
+        eng.declare(t_burn, "*", latency_ms=50.0, target=0.99)
+        for _ in range(200):
+            clock[0] += 0.5
+            eng.observe(t_ok, "current", 1.0)
+            eng.observe(t_burn, "current", 500.0)     # 100% bad
+        s = eng.summary()
+        assert s["declared"] == 2
+        assert s["worst_state"] == "burning"
+        states = {x["tenant"]: x["state"] for x in s["slos"]}
+        assert states[t_ok] == "ok"
+        assert states[t_burn] == "burning"
+
+
+class TestTraceIntegration:
+    def test_finished_traces_feed_the_singleton(self):
+        tenant = _tenant()
+        obs.SLO_ENGINE.declare(tenant, "*", latency_ms=1e6,
+                               target=0.999)
+        with obs.trace("request", intent="current", tenant=tenant):
+            pass
+        with pytest.raises(ValueError):
+            with obs.trace("request", intent="current", tenant=tenant):
+                raise ValueError("boom")
+        r = obs.SLO_ENGINE.burn_rates(tenant, "*")
+        assert r["requests"] == 2
+        assert r["errors"] == 1
+
+    def test_engine_inactive_without_declarations(self):
+        assert not obs.SLO_ENGINE.active
+        # no declarations: traces must not create slo series
+        with obs.trace("request", intent="current", tenant="ghost"):
+            pass
+        key = "slo_latency_ms{intent=*,tenant=ghost}"
+        assert key not in REGISTRY.snapshot()["histograms"]
+
+    def test_untenanted_traces_ignored(self):
+        tenant = _tenant()
+        obs.SLO_ENGINE.declare(tenant, "*", latency_ms=1e6)
+        with obs.trace("request", intent="current"):
+            pass
+        assert obs.SLO_ENGINE.burn_rates(tenant)["requests"] == 0
