@@ -48,8 +48,9 @@ def main() -> None:
 
     from . import (change_detection, load_slo, obs_overhead,
                    query_latency, query_throughput, quantized_scan,
-                   search_scaling, shard_scaling, storage_efficiency,
-                   streaming_churn, temporal_accuracy, temporal_scaling,
+                   scrub_overhead, search_scaling, shard_scaling,
+                   storage_efficiency, streaming_churn,
+                   temporal_accuracy, temporal_scaling,
                    tenant_isolation, update_performance)
     suites = [
         ("update_performance", update_performance),
@@ -66,6 +67,7 @@ def main() -> None:
         ("obs_overhead", obs_overhead),
         ("load_slo", load_slo),
         ("tenant_isolation", tenant_isolation),
+        ("scrub_overhead", scrub_overhead),
     ]
     if args.only:
         keep = {s.strip() for s in args.only.split(",")}

@@ -54,6 +54,7 @@ import numpy as np
 from .. import obs
 from ..testing.faults import FAULTS
 from .hashing import blob_checksum
+from .integrity import CorruptionError, Quarantine
 from .types import (STATUS_ACTIVE, STATUS_SUPERSEDED,
                     VALID_TO_OPEN, ChunkRecord)
 
@@ -205,7 +206,12 @@ class ColdTier:
         self.io_counters = {"segment_loads": 0, "checkpoint_loads": 0,
                             "archive_loads": 0, "segments_pruned": 0,
                             "archives_pruned": 0, "full_folds": 0,
-                            "delta_folds": 0}
+                            "delta_folds": 0, "segments_quarantined": 0}
+        # corrupt artifacts move here instead of killing the tier
+        # (DESIGN.md §16); the orphan sweep below never reaches them —
+        # it only walks _ckpt/ and _archive/, and quarantine/ is a
+        # sibling directory
+        self.quarantine = Quarantine(root, "cold")
         self._sweep_orphans()
 
     # ------------------------------------------------------------------
@@ -213,6 +219,12 @@ class ColdTier:
     # ------------------------------------------------------------------
     def _log_path(self, version: int) -> str:
         return os.path.join(self.root, _LOG_DIR, f"{version:08d}.json")
+
+    def _seg_path(self, seg_name: str) -> str:
+        return os.path.join(self.root, _SEG_DIR, seg_name)
+
+    def _arc_path(self, arc_name: str) -> str:
+        return os.path.join(self.root, _ARC_DIR, arc_name)
 
     def latest_version(self) -> int:
         entries = [f for f in os.listdir(os.path.join(self.root, _LOG_DIR))
@@ -284,7 +296,8 @@ class ColdTier:
             )
             data = buf.getvalue()
             checksum = blob_checksum(data)
-            _atomic_write(os.path.join(self.root, _SEG_DIR, seg_name), data)
+            _atomic_write(self._seg_path(seg_name), data)
+            FAULTS.mutate("cold:segment:file", self._seg_path(seg_name))
             keys = [[r.doc_id, int(r.position)] for r in records]
             zone = {"vf_min": int(vf.min()), "vf_max": int(vf.max()),
                     "keys": keys if len(keys) <= _ZONE_KEYS_CAP else None}
@@ -332,21 +345,54 @@ class ColdTier:
     # ------------------------------------------------------------------
     def _load_npz(self, path: str, checksum: Optional[str],
                   what: str) -> dict:
+        """Verified artifact load. A checksum mismatch raises the typed
+        ``CorruptionError`` (containment, DESIGN.md §16); pure caches
+        (checkpoints, archives) are quarantined right here — no data is
+        lost, the fold falls back to the originals. Segments carry data,
+        so THEIR quarantine happens at the caller, which knows the log
+        entry (zone map -> affected docs): see ``quarantine_segment``."""
         with open(path, "rb") as f:
             data = f.read()
         if checksum and blob_checksum(data) != checksum:
-            raise IOError(f"{what} {os.path.basename(path)}: "
-                          "checksum mismatch (corruption)")
+            if what == "checkpoint":
+                self.quarantine.quarantine(
+                    path, "checkpoint", "checksum mismatch at load",
+                    docs=[], data_loss=False,
+                    companions=(path[:-len(".npz")] + ".json",))
+            elif what == "archive":
+                self.quarantine.quarantine(
+                    path, "archive", "checksum mismatch at load",
+                    docs=[], data_loss=False)
+            raise CorruptionError(
+                f"{what} {os.path.basename(path)}: "
+                "checksum mismatch (corruption)",
+                artifact=("cold_segment" if what == "segment" else what),
+                tier="cold", path=path)
         with np.load(io.BytesIO(data)) as z:
             return {k: z[k] for k in z.files}
 
     def load_segment(self, seg_name: str, checksum: Optional[str]) -> dict:
         self.io_counters["segment_loads"] += 1
-        return self._load_npz(os.path.join(self.root, _SEG_DIR, seg_name),
-                              checksum, "segment")
+        return self._load_npz(self._seg_path(seg_name), checksum, "segment")
 
     # kept as the historical private name used elsewhere in the codebase
     _load_segment = load_segment
+
+    def quarantine_segment(self, entry: dict, reason: str) -> dict:
+        """Contain a corrupt per-commit segment: atomic move into
+        quarantine/ with the affected docs recorded from the entry's
+        zone map (None = zone too wide, breadth unknown). This IS data
+        loss until ``ShardFabric.repair`` replays the docs from a
+        replica — the log entry stays (its closures still apply), only
+        its rows drop out of every fold."""
+        zone = entry.get("zone") or {}
+        keys = zone.get("keys")
+        docs = (sorted({d for d, _ in keys})
+                if keys is not None else None)
+        self.io_counters["segments_quarantined"] += 1
+        return self.quarantine.quarantine(
+            self._seg_path(entry["segment"]), "cold_segment", reason,
+            docs=docs, data_loss=True)
 
     # -- checkpoints ----------------------------------------------------
     def _ckpt_paths(self, version: int) -> tuple[str, str]:
@@ -403,6 +449,7 @@ class ColdTier:
         data = buf.getvalue()
         npz_path, meta_path = self._ckpt_paths(version)
         _atomic_write(npz_path, data)
+        FAULTS.mutate("cold:checkpoint:file", npz_path)
         if fail_after == "checkpoint_data":       # legacy per-call shim
             raise FaultPoint("crash after checkpoint npz, before meta")
         FAULTS.check("cold:checkpoint:data", exc=FaultPoint)
@@ -556,9 +603,21 @@ class ColdTier:
         while v <= hi:
             a = arch_by_lo.get(v)
             if a is not None and a["hi"] <= hi and \
-                    (up_to_ts is None or a["max_entry_ts"] <= up_to_ts):
-                self._fold_archive(fold, a, as_of_prune, only_doc,
-                                   consumed_marks, hi, up_to_ts)
+                    (up_to_ts is None or a["max_entry_ts"] <= up_to_ts) \
+                    and not self.quarantine.is_quarantined(a["file"]):
+                try:
+                    self._fold_archive(fold, a, as_of_prune, only_doc,
+                                       consumed_marks, hi, up_to_ts)
+                except CorruptionError:
+                    # the archive was quarantined inside _load_npz (it
+                    # is a pure cache — the per-commit originals are
+                    # retained), but its external closures may already
+                    # have mutated this fold: redo the whole fold; the
+                    # retry skips the quarantined file and replays the
+                    # run from the original segments. Bounded: each
+                    # retry retires one archive.
+                    return self._fold(up_to_version, up_to_ts,
+                                      as_of_prune, use_overlays, only_doc)
                 v = a["hi"] + 1
                 continue
             e = self._read_entry(v)
@@ -616,6 +675,17 @@ class ColdTier:
                       as_of_prune: Optional[int],
                       only_doc: Optional[str]) -> None:
         zone = e.get("zone")
+        if self.quarantine.is_quarantined(e["segment"]):
+            # containment (DESIGN.md §16): the segment's rows are gone
+            # from serving until repair, but the fold keeps going — its
+            # keys are shadowed exactly like a zone-pruned segment so
+            # later closures route to the lost rows (a no-op) instead of
+            # wrongly popping an older open row for the same key. (When
+            # this segment appended a key, its own entry's closures —
+            # still in the log — already popped the key's previous row.)
+            if zone and zone.get("keys") is not None:
+                fold.shadow(zone["keys"])
+            return
         if only_doc is not None and zone and zone.get("keys") is not None:
             if all(doc != only_doc for doc, _ in zone["keys"]):
                 self.io_counters["segments_pruned"] += 1
@@ -629,7 +699,13 @@ class ColdTier:
             self.io_counters["segments_pruned"] += 1
             obs.add("segments_pruned", 1)
             return
-        seg = self.load_segment(e["segment"], e.get("checksum"))
+        try:
+            seg = self.load_segment(e["segment"], e.get("checksum"))
+        except CorruptionError:
+            self.quarantine_segment(e, "checksum mismatch during fold")
+            if zone and zone.get("keys") is not None:
+                fold.shadow(zone["keys"])
+            return
         doc_ids = seg["doc_ids"].tolist()
         tids = seg.get("tenant_ids")
         if only_doc is not None:
@@ -822,6 +898,7 @@ class ColdTier:
         shadowed_keys: set = set()
         rows_of: dict[int, list[int]] = {}
         seg_cache: dict[int, dict] = {}
+        quarantined_versions: set[int] = set()
         n = 0
         for v in range(1, latest + 1):
             e = self._read_entry(v)
@@ -838,7 +915,19 @@ class ColdTier:
                     closed_by[row] = (v, j)
                     row_vt[row] = int(c["closed_at"])
             if e["segment"]:
-                seg = self.load_segment(e["segment"], e.get("checksum"))
+                if self.quarantine.is_quarantined(e["segment"]):
+                    # rows unavailable until repair: the version can't be
+                    # archived (the archive would bake the hole in)
+                    quarantined_versions.add(v)
+                    continue
+                try:
+                    seg = self.load_segment(e["segment"],
+                                            e.get("checksum"))
+                except CorruptionError:
+                    self.quarantine_segment(
+                        e, "checksum mismatch during compaction")
+                    quarantined_versions.add(v)
+                    continue
                 seg_cache[v] = seg
                 m = len(seg["position"])
                 rows_of[v] = list(range(n, n + m))
@@ -853,7 +942,7 @@ class ColdTier:
 
         def archivable(v: int) -> bool:
             e = entries.get(v)
-            if e is None or v in covered:
+            if e is None or v in covered or v in quarantined_versions:
                 return False
             if not e.get("committed", True):
                 return True                  # contributes nothing: absorb
@@ -971,7 +1060,8 @@ class ColdTier:
             tenant_ids=tids[order])
         data = buf.getvalue()
         fname = f"arc-{a:08d}-{b:08d}.npz"
-        _atomic_write(os.path.join(self.root, _ARC_DIR, fname), data)
+        _atomic_write(self._arc_path(fname), data)
+        FAULTS.mutate("cold:archive:file", self._arc_path(fname))
 
         docs = sorted(set(doc_ids))
         committed_ts = [entries[v]["ts"] for v in range(a, b + 1)
@@ -1004,4 +1094,5 @@ class ColdTier:
                 "archive_bytes": _dir_bytes(_ARC_DIR),
                 "checkpoints": len(self.checkpoints()),
                 "archives": len(self.archives()),
+                "quarantined": sorted(self.quarantine.names()),
                 "io": dict(self.io_counters)}

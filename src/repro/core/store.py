@@ -32,6 +32,7 @@ from .cold_tier import ColdTier
 from .embedder import CachingEmbedder, Embedder, HashProjectionEmbedder
 from .hash_store import HashStore
 from .hot_tier import HotTier
+from .integrity import Scrubber, StoreIntegrity
 from ..obs import REGISTRY, span
 from ..testing.faults import FAULTS
 from .tenancy import TenantRegistry, Visibility
@@ -119,6 +120,12 @@ class LiveVectorLake:
         # in-flight writer. Queries do NOT take this lock; they
         # synchronize on the index/temporal-engine locks only.
         self._write_lock = threading.RLock()
+        # storage integrity (DESIGN.md §16): aggregated quarantine view +
+        # the background scrubber that re-verifies every on-disk artifact
+        self.integrity = StoreIntegrity(self.hot.index.quarantine,
+                                        self.cold.quarantine,
+                                        self.wal.quarantine)
+        self.scrubber = Scrubber(self)
         if self.cold.latest_version() > 0:
             self.recover()
 
@@ -387,22 +394,17 @@ class LiveVectorLake:
         last seal is re-inserted, not one monolithic insert), rebuild the
         hash store, warm the embedding cache."""
         report = self.reconcile()
-        snap = self.cold.snapshot()
-        snap_tids = snap.tenants()
+        records = self._cold_active_records()
         by_doc: dict[str, list[tuple[int, str]]] = {}
-        records = []
-        for i in range(len(snap)):
-            records.append(ChunkRecord(
-                chunk_id=snap.chunk_ids[i], doc_id=snap.doc_ids[i],
-                position=int(snap.position[i]),
-                valid_from=int(snap.valid_from[i]),
-                version=int(snap.version[i]), text=snap.texts[i],
-                embedding=snap.embeddings[i],
-                tenant=self.tenants.name_of(int(snap_tids[i])),
-                tenant_id=int(snap_tids[i])))
-            by_doc.setdefault(snap.doc_ids[i], []).append(
-                (int(snap.position[i]), snap.chunk_ids[i]))
+        for r in records:
+            by_doc.setdefault(r.doc_id, []).append(
+                (r.position, r.chunk_id))
         hot_report = self.hot.rebuild(records)
+        # the rebuild above IS the hot-tier repair: any segment
+        # quarantined during manifest load just had its rows re-derived
+        # from cold authority (DESIGN.md §16)
+        if self.hot.index.quarantine is not None:
+            self.hot.index.quarantine.mark_repaired()
         for doc_id, pairs in by_doc.items():
             pairs.sort()
             self.hash_store.put(doc_id, [h for _, h in pairs],
@@ -416,6 +418,36 @@ class LiveVectorLake:
         report["hot_restored_from_segments"] = hot_report["restored"]
         report["hot_delta_inserted"] = hot_report["inserted"]
         return report
+
+    def _cold_active_records(self) -> list[ChunkRecord]:
+        """The cold tier's authoritative currently-active rows as
+        ChunkRecords (the hot tier's rebuild input)."""
+        snap = self.cold.snapshot()
+        snap_tids = snap.tenants()
+        records = []
+        for i in range(len(snap)):
+            records.append(ChunkRecord(
+                chunk_id=snap.chunk_ids[i], doc_id=snap.doc_ids[i],
+                position=int(snap.position[i]),
+                valid_from=int(snap.valid_from[i]),
+                version=int(snap.version[i]), text=snap.texts[i],
+                embedding=snap.embeddings[i],
+                tenant=self.tenants.name_of(int(snap_tids[i])),
+                tenant_id=int(snap_tids[i])))
+        return records
+
+    def rebuild_hot(self) -> dict:
+        """Self-heal the hot tier from cold authority (DESIGN.md §16):
+        after a hot segment is quarantined (load failure or scrub find)
+        its rows are simply re-derived — the cold tier is the source of
+        truth, so a hot-tier quarantine is never data loss. Marks the
+        hot quarantine records repaired once the rebuild lands."""
+        with self._write_lock:
+            records = self._cold_active_records()
+            rep = self.hot.rebuild(records)
+            if self.hot.index.quarantine is not None:
+                self.hot.index.quarantine.mark_repaired()
+            return rep
 
     def reconcile(self, policy: str = "roll_forward") -> dict:
         """WAL reconciliation (paper: 'periodic reconciliation cleans
@@ -565,6 +597,116 @@ class LiveVectorLake:
         return {"events_total": len(events), "events_applied": applied,
                 "events_skipped": len(events) - applied}
 
+    # ------------------------------------------------------------------
+    # replica-driven repair (DESIGN.md §16)
+    # ------------------------------------------------------------------
+    def doc_history_digest(self, doc_id: str) -> str:
+        """Anti-entropy digest: SHA-256 over the doc's sorted
+        full-history (chunk_id, position, valid_from, valid_to) tuples.
+        chunk_id is itself the content-address hash, so two replicas
+        agree on the digest iff they agree on every row's content AND
+        validity interval. Quarantined segments are skipped by the fold,
+        so a replica with rotten rows produces a DIFFERENT digest — the
+        fabric's anti-entropy pass diffs digests to find silent
+        divergence without shipping any rows."""
+        import hashlib
+        import json
+        rows, _ = self.export_doc_history(doc_id)
+        items = sorted((r.chunk_id, int(r.position), int(r.valid_from),
+                        int(r.valid_to)) for r in rows)
+        return hashlib.sha256(
+            json.dumps(items, separators=(",", ":")).encode()).hexdigest()
+
+    def repair_doc(self, doc_id: str, donor_rows: Sequence[ChunkRecord],
+                   doc_version: int) -> dict:
+        """Restore this doc's history from a replica's export.
+
+        The local (quarantine-skipping) fold tells us which rows
+        survived; every donor row we lack is committed back in ONE
+        WAL-bracketed repair commit with its ORIGINAL validity interval
+        baked in — ``_Fold.append_rows`` only treats ``VALID_TO_OPEN``
+        rows as open, so closed intervals restore exactly without
+        replaying their closures. Rows that are open locally but closed
+        on the donor get explicit closures. Idempotent: a second run
+        finds nothing missing and commits nothing."""
+        with self._write_lock:
+            return self._repair_doc_locked(doc_id, list(donor_rows),
+                                           doc_version)
+
+    def _repair_doc_locked(self, doc_id: str,
+                           donor_rows: list[ChunkRecord],
+                           doc_version: int) -> dict:
+        def key(r):
+            return (r.chunk_id, int(r.position), int(r.valid_from))
+        local, _ = self.export_doc_history(doc_id)
+        have = {key(r) for r in local}
+        donor_by_key = {key(r): r for r in donor_rows}
+        missing = [r for r in donor_rows if key(r) not in have]
+        closures = []
+        for r in local:
+            d = donor_by_key.get(key(r))
+            if (r.valid_to == VALID_TO_OPEN and d is not None
+                    and d.valid_to != VALID_TO_OPEN):
+                superseded = any(
+                    int(dr.position) == int(r.position)
+                    and int(dr.valid_from) >= int(d.valid_to)
+                    for dr in donor_rows)
+                closures.append({
+                    "doc_id": doc_id, "position": int(r.position),
+                    "closed_at": int(d.valid_to),
+                    "status": (STATUS_SUPERSEDED if superseded
+                               else STATUS_DELETED)})
+        open_rows = [dataclasses.replace(
+            r, version=0, tenant_id=self.tenants.resolve(r.tenant))
+            for r in donor_rows if r.valid_to == VALID_TO_OPEN]
+        final_hashes = [r.chunk_id for r in
+                        sorted(open_rows, key=lambda r: r.position)]
+        out = {"added_rows": len(missing), "closed": len(closures),
+               "cold_version": None}
+        if missing or closures:
+            records = [dataclasses.replace(
+                r, version=0, tenant_id=self.tenants.resolve(r.tenant))
+                for r in missing]
+            # entry ts = the earliest instant any repaired row touches,
+            # so every as_of that should see a row folds this entry in
+            # (per-row validity masks handle the rest); non-monotonic
+            # entry timestamps are already supported post-rebalance
+            ts = min([int(r.valid_from) for r in missing] +
+                     [c["closed_at"] for c in closures])
+            expected_version = self.cold.latest_version() + 1
+            txn = self.wal.begin("repair", {
+                "doc_id": doc_id, "ts": ts,
+                "cold_version": expected_version,
+                "doc_version": doc_version, "hashes": final_hashes})
+            version = self.cold.commit(records, closures, ts)
+            assert version == expected_version
+            self.wal.mark(txn, "COLD_OK")
+            self._hot_apply([r for r in records
+                             if r.valid_to == VALID_TO_OPEN], closures)
+            self.wal.mark(txn, "HOT_OK")
+            self.hash_store.put(doc_id, final_hashes, doc_version)
+            self.wal.mark(txn, "COMMIT")
+            out["cold_version"] = version
+            # the resident history may hold pre-corruption rows or lack
+            # the repaired ones: full re-seed keeps fused == fold
+            self.temporal.invalidate()
+        # re-seat the serving rows even when no cold delta was needed
+        # (a hot-tier hole after quarantine has no cold-side symptom)
+        self._hot_apply(open_rows, [])
+        self.hash_store.put(doc_id, final_hashes,
+                            max(doc_version,
+                                self.hash_store.version(doc_id)))
+        if donor_rows:
+            self.embedder.warm(
+                [r.chunk_id for r in donor_rows],
+                np.stack([r.embedding for r in donor_rows]))
+            self._last_ts = max(
+                self._last_ts,
+                max(int(r.valid_from) for r in donor_rows),
+                max([int(r.valid_to) for r in donor_rows
+                     if r.valid_to != VALID_TO_OPEN], default=0))
+        return out
+
     def purge_doc(self, doc_id: str) -> int:
         """Drop a document from this lake's SERVING state (migration
         hand-off: another shard now owns it). Hot rows and the hash-store
@@ -593,4 +735,5 @@ class LiveVectorLake:
             "docs": len(self.hash_store),
             "embed_cache": {"hits": self.embedder.hits,
                             "misses": self.embedder.misses},
+            "integrity": self.integrity.summary(),
         }

@@ -40,6 +40,7 @@ import numpy as np
 
 from .. import obs
 from .cold_tier import ColdSnapshot, ColdTier
+from .integrity import CorruptionError
 from .tenancy import visible_rows
 from .types import SearchResult, VALID_TO_OPEN, pad_queries
 
@@ -353,12 +354,31 @@ class TemporalEngine:
         if res.applied_version >= latest:
             return
         for e in self.cold.read_entries(res.applied_version + 1, latest):
-            self.resident_appended_rows += res.apply_entry(self.cold, e)
+            try:
+                self.resident_appended_rows += res.apply_entry(self.cold, e)
+            except CorruptionError:
+                # containment (DESIGN.md §16): quarantine the rotten
+                # segment (affected docs from its zone map) and drop the
+                # half-advanced resident — apply_entry mutated closures
+                # before the load failed, so partial state is unusable.
+                # The next query re-seeds from the quarantine-skipping
+                # fold: the store keeps serving minus the lost rows.
+                self.cold.quarantine_segment(
+                    e, "checksum mismatch during resident advance")
+                self._resident = None
+                self._snap_cache.clear()
+                return
         res.applied_version = latest
 
     def _resident_history(self) -> ResidentHistory:
         with self._lock:
+            if self._resident is not None:
+                self._advance(self._resident)  # safety: never serve stale
             if self._resident is None:
+                # (re)seed — also the corruption-containment path:
+                # ``_advance`` nulls a resident poisoned by a rotten
+                # segment, and the quarantine-skipping fold rebuilds the
+                # columns here without the lost rows
                 import os
                 res = ResidentHistory(
                     self.cold.dim, quantized=self.quantized,
@@ -377,8 +397,6 @@ class TemporalEngine:
                 res.seed(snap, latest, q8_rows=q8_rows)
                 self._resident = res
                 self.resident_builds += 1
-            else:
-                self._advance(self._resident)  # safety: never serve stale
             return self._resident
 
     def _snapshot_at(self, ts: Optional[int], include_closed: bool = False

@@ -13,8 +13,14 @@ apply: the cold tier is the source of truth) or COMPENSATES (cold tier not
 committed => mark aborted, nothing became visible). This yields eventual
 consistency with bounded staleness (<1s in the paper's prototype).
 
-The log is an append-only JSONL file; every record is one fsync'd line, so
-a torn final line (crash mid-write) is detected and discarded on replay.
+The log is an append-only JSONL file; every record is one fsync'd line
+carrying a CRC-32 of its own canonical JSON (DESIGN.md §16).  Replay
+verifies every record: at the first torn line (crash mid-write) or CRC
+mismatch (bit-rot inside a committed record) the file is physically
+truncated to the last good record and recovery resumes loudly — a
+``wal_truncated_records`` counter fires and, for a CRC mismatch, the
+discarded tail bytes are quarantined as forensic evidence.  Records
+written before CRCs existed (no ``crc`` field) replay unchanged.
 """
 from __future__ import annotations
 
@@ -22,7 +28,12 @@ import json
 import os
 import threading
 import time
+import zlib
 from typing import Any, Optional
+
+from ..obs import REGISTRY
+from ..testing.faults import FAULTS
+from .integrity import Quarantine, report_corruption
 
 INTENT = "INTENT"
 COLD_OK = "COLD_OK"
@@ -34,13 +45,38 @@ _TERMINAL = (COMMIT, ABORT)
 _ORDER = {INTENT: 0, COLD_OK: 1, HOT_OK: 2, COMMIT: 3, ABORT: 3}
 
 
+def _record_crc(rec: dict) -> int:
+    """CRC-32 over the record's canonical JSON, ``crc`` field excluded."""
+    body = {k: v for k, v in rec.items() if k != "crc"}
+    return zlib.crc32(
+        json.dumps(body, separators=(",", ":"), sort_keys=True)
+        .encode("utf-8"))
+
+
+def _parse_record(raw: str) -> Optional[dict]:
+    """One replayed line -> record dict, or None when torn/corrupt
+    (unparseable JSON, or a present ``crc`` that doesn't match)."""
+    try:
+        rec = json.loads(raw)
+    except json.JSONDecodeError:
+        return None
+    if not isinstance(rec, dict):
+        return None
+    if "crc" in rec and rec["crc"] != _record_crc(rec):
+        return None
+    return rec
+
+
 class WriteAheadLog:
     def __init__(self, path: str):
         self._path = path
-        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        root = os.path.dirname(os.path.abspath(path))
+        os.makedirs(root, exist_ok=True)
+        self.quarantine = Quarantine(root, "wal")
         self._next_txn = 1
         self._state: dict[int, str] = {}
         self._payload: dict[int, dict] = {}
+        self.truncated_records = 0
         # txn allocation + line append must be atomic together: ingest
         # (serving thread) and seal/merge publishes (maintenance worker)
         # write the same file (DESIGN.md §13)
@@ -50,11 +86,13 @@ class WriteAheadLog:
 
     # -- writing ---------------------------------------------------------
     def _append(self, rec: dict) -> None:
+        rec["crc"] = _record_crc(rec)
         line = json.dumps(rec, separators=(",", ":"))
         with open(self._path, "a") as f:
             f.write(line + "\n")
             f.flush()
             os.fsync(f.fileno())
+        FAULTS.mutate("wal:record", self._path)
 
     def begin(self, op: str, payload: Optional[dict[str, Any]] = None) -> int:
         with self._lock:
@@ -82,20 +120,109 @@ class WriteAheadLog:
 
     # -- recovery ----------------------------------------------------------
     def _replay_file(self) -> None:
-        with open(self._path) as f:
-            for raw in f:
-                raw = raw.strip()
-                if not raw:
-                    continue
+        """Replay every verified record; on the first torn or corrupt
+        line, physically truncate the file there and resume loudly.
+
+        Truncating (instead of the old silent ``break``) matters: a
+        survived torn line would sit MID-file once new records append
+        after it, and the next replay would then discard every good
+        record behind it."""
+        good_end = 0
+        bad_crc = False
+        with open(self._path, "rb") as f:
+            data = f.read()
+        for line in data.splitlines(keepends=True):
+            raw = line.decode("utf-8", errors="replace").strip()
+            if not raw:
+                good_end += len(line)
+                continue
+            rec = _parse_record(raw)
+            if rec is None or "txn" not in rec:
+                bad_crc = rec is not None or b'"crc"' in line
+                break
+            txn = rec["txn"]
+            self._state[txn] = rec["state"]
+            if "payload" in rec:
+                self._payload[txn] = rec["payload"]
+            self._next_txn = max(self._next_txn, txn + 1)
+            good_end += len(line)
+        if good_end >= len(data):
+            return
+        # loud truncation: count it, keep the discarded bytes as
+        # evidence when they look like bit-rot (a bare torn final line
+        # is a normal crash artifact, not silent corruption)
+        tail = data[good_end:]
+        dropped = max(1, tail.count(b"\n"))
+        self.truncated_records += dropped
+        REGISTRY.counter("wal_truncated_records").inc(dropped)
+        if bad_crc:
+            evidence = self._path + f".tail-{good_end}"
+            try:
+                with open(evidence, "wb") as f:
+                    f.write(tail)
+                self.quarantine.quarantine(
+                    evidence, "wal_record",
+                    f"bad record at byte {good_end} "
+                    f"({dropped} record(s) dropped)",
+                    docs=[], data_loss=False)
+            except OSError:
+                pass
+            report_corruption("wal_record", "wal")
+        with open(self._path, "r+b") as f:
+            f.truncate(good_end)
+            f.flush()
+            os.fsync(f.fileno())
+
+    def scrub(self, pace_s: float = 0.0, chunk: int = 16) -> dict:
+        """Re-verify every on-disk record (background scrubber hook).
+        A bad record found while live is self-healed: the tail is
+        quarantined as evidence and the log is rewritten from the
+        authoritative in-memory state (same rewrite as
+        ``truncate_committed``).
+
+        The CRC walk runs on a byte snapshot OUTSIDE the lock — a
+        background scrub must never stall ingest (or hold the GIL) for
+        a whole-log parse. ``pace_s`` > 0 additionally sleeps every
+        *chunk* records so serving threads interleave. Records appended
+        after the snapshot are untouched by the heal: the rewrite
+        regenerates the log from the authoritative in-memory state."""
+        with self._lock:
+            try:
+                with open(self._path, "rb") as f:
+                    data = f.read()
+            except OSError:
+                return {"records": 0, "bad": 0}
+        records = bad = 0
+        first_bad = None
+        off = 0
+        for line in data.splitlines(keepends=True):
+            raw = line.decode("utf-8", errors="replace").strip()
+            if raw:
+                records += 1
+                if _parse_record(raw) is None:
+                    bad += 1
+                    if first_bad is None:
+                        first_bad = off
+                if pace_s > 0 and chunk > 0 and records % chunk == 0:
+                    time.sleep(pace_s)
+            off += len(line)
+        if bad:
+            with self._lock:
+                evidence = self._path + f".tail-{first_bad}"
                 try:
-                    rec = json.loads(raw)
-                except json.JSONDecodeError:
-                    break  # torn final line from a crash mid-append
-                txn = rec["txn"]
-                self._state[txn] = rec["state"]
-                if "payload" in rec:
-                    self._payload[txn] = rec["payload"]
-                self._next_txn = max(self._next_txn, txn + 1)
+                    with open(evidence, "wb") as f:
+                        f.write(data[first_bad:])
+                    self.quarantine.quarantine(
+                        evidence, "wal_record",
+                        f"scrub found {bad} bad record(s)",
+                        docs=[], data_loss=False)
+                except OSError:
+                    pass
+                report_corruption("wal_record", "wal")
+                REGISTRY.counter("wal_truncated_records").inc(bad)
+                self.truncated_records += bad
+                self._truncate_locked()
+        return {"records": records, "bad": bad}
 
     def state(self, txn: int) -> Optional[str]:
         return self._state.get(txn)
@@ -120,9 +247,10 @@ class WriteAheadLog:
         tmp = self._path + ".compact"
         with open(tmp, "w") as f:
             for t in sorted(keep):
-                f.write(json.dumps({"txn": t, "state": self._state[t],
-                                    "op": "?", "payload": self._payload.get(t, {}),
-                                    "ts": 0}) + "\n")
+                rec = {"txn": t, "state": self._state[t], "op": "?",
+                       "payload": self._payload.get(t, {}), "ts": 0}
+                rec["crc"] = _record_crc(rec)
+                f.write(json.dumps(rec, separators=(",", ":")) + "\n")
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, self._path)

@@ -39,12 +39,14 @@ restores segments from the manifest and re-inserts only the delta.
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 from typing import Callable, Optional, Sequence
 
 import numpy as np
 
 from .. import obs
+from ..core.integrity import CorruptionError, Quarantine
 from ..core.tenancy import visible_rows
 from ..core.types import (ChunkRecord, SearchResult, VALID_TO_OPEN,
                           pad_queries)
@@ -158,6 +160,7 @@ class SegmentedIndex:
         self.compactor = SizeTieredCompactor(fanout=fanout)
         self.cstats = CompactionStats()
         self.manifest = Manifest(root) if root else None
+        self.quarantine = Quarantine(root, "hot") if root else None
         # key -> memtable slot (int) | (seg_id, row)
         self._by_key: dict[tuple[str, int], object] = {}
         self._seg_meta: dict[str, tuple[str, str]] = {}  # id -> (file, sha)
@@ -504,7 +507,8 @@ class SegmentedIndex:
                     "rows": len(s)} for s in live]
         self.manifest.commit(entries, seq=self._seq)
         self._fault(f"{op}:after_manifest")
-        self.manifest.cleanup_orphans({e["name"] for e in entries})
+        self.manifest.cleanup_orphans({e["name"] for e in entries},
+                                      quarantined=self._qnames())
         for seg in add:
             seg.release_f32()
         if txn is not None:
@@ -515,6 +519,25 @@ class SegmentedIndex:
             self.fail_at = None
             raise CompactionInterrupted(f"injected crash at {point}")
         FAULTS.check(f"lsm:{point}", exc=CompactionInterrupted)
+
+    # ------------------------------------------------------------------
+    # integrity (DESIGN.md §16)
+    # ------------------------------------------------------------------
+    def _qnames(self) -> Optional[set]:
+        return self.quarantine.names() if self.quarantine else None
+
+    def quarantine_segment_files(self, filename: str, reason: str):
+        """Move a corrupt segment npz (and its fp32 sidecar, which lives
+        or dies with it) into ``quarantine/``. Hot segments are caches of
+        the cold tier's authoritative rows, so quarantining one is never
+        data loss — a rebuild re-inserts its rows from cold."""
+        if self.quarantine is None:
+            return None
+        sidecar = filename[:-len(".npz")] + ".f32.npy"
+        return self.quarantine.quarantine(
+            os.path.join(self.root, filename), "hot_segment", reason,
+            docs=[], data_loss=False,
+            companions=(os.path.join(self.root, sidecar),))
 
     # ------------------------------------------------------------------
     # reads (batched, array-native — DESIGN.md §8, §11)
@@ -847,21 +870,31 @@ class SegmentedIndex:
             m = self.manifest.load()
             if m is not None:
                 self._seq = max(self._seq, int(m.get("seq", 0)))
-                try:
-                    for ent in m["segments"]:
+                for ent in m["segments"]:
+                    try:
                         seg = Segment.load(
                             self.root, ent["name"], ent.get("checksum"),
                             ivf_min_rows=self.ivf_min_rows, seed=self.seed,
                             rescore_factor=self.rescore_factor)
-                        seg = self._coerce_quantization(seg)
-                        self._seg_meta[seg.seg_id] = (ent["name"],
-                                                      ent["checksum"])
-                        loaded.append(seg)
-                except (IOError, OSError, KeyError, ValueError):
-                    loaded = []          # corrupt set: full rebuild
-                    self._seg_meta.clear()
+                    except CorruptionError as err:
+                        # containment: quarantine ONLY the rotten file —
+                        # its rows come back below via the cold-authority
+                        # delta insert (CorruptionError must be caught
+                        # before IOError: it subclasses it)
+                        self.quarantine_segment_files(
+                            ent["name"], reason=str(err))
+                        continue
+                    except (IOError, OSError, KeyError, ValueError):
+                        loaded = []          # structural damage: full rebuild
+                        self._seg_meta.clear()
+                        break
+                    seg = self._coerce_quantization(seg)
+                    self._seg_meta[seg.seg_id] = (ent["name"],
+                                                  ent["checksum"])
+                    loaded.append(seg)
                 self.manifest.cleanup_orphans({e.get("name")
-                                               for e in m["segments"]})
+                                               for e in m["segments"]},
+                                              quarantined=self._qnames())
         # newest segment wins a key; a row survives only if the cold tier
         # agrees this exact chunk version is the currently active one
         for seg in reversed(loaded):
@@ -914,7 +947,8 @@ class SegmentedIndex:
             self.cstats = CompactionStats()
             if drop_disk and self.manifest is not None:
                 self.manifest.commit([], seq=self._seq)
-                self.manifest.cleanup_orphans(set())
+                self.manifest.cleanup_orphans(set(),
+                                              quarantined=self._qnames())
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:
@@ -936,6 +970,8 @@ class SegmentedIndex:
             "quantized": self.quantized,
             "rescore_factor": self.rescore_factor,
             "resident_embedding_bytes": self.nbytes(),
+            "quarantined": (sorted(self.quarantine.names())
+                            if self.quarantine else []),
             "avg_fraction_scanned": (self._scan_scanned
                                      / max(self._scan_denom, 1)),
             **self.cstats.as_dict(),

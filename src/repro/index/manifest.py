@@ -59,14 +59,26 @@ class Manifest:
                 os.unlink(tmp)
         return generation
 
-    def cleanup_orphans(self, keep: set[str]) -> int:
+    def cleanup_orphans(self, keep: set[str],
+                        quarantined: set[str] | None = None) -> int:
         """Delete seg-*.npz not referenced by ``keep`` — leftovers from a
         crash between segment write and manifest publish (or between
         publish and predecessor deletion). A quantized segment's fp32
         rescore sidecar (seg-*.f32.npy) lives or dies with its npz.
-        Returns #files removed."""
+        Quarantine-aware (DESIGN.md §16): the sweep only walks the root
+        itself — artifacts moved into ``quarantine/`` are out of reach
+        by construction — and ``quarantined`` names are additionally
+        skipped in place, so a corrupt segment awaiting its move is
+        never destroyed as an "orphan" (it is forensic evidence, and it
+        is no longer manifest-referenced precisely because it was
+        quarantined). Returns #files removed."""
+        q = quarantined or set()
         n = 0
         for fn in os.listdir(self.root):
+            base = (fn[:-len(".f32.npy")] + ".npz"
+                    if fn.endswith(".f32.npy") else fn)
+            if fn in q or base in q:
+                continue
             if fn.startswith("seg-") and fn.endswith(".npz") \
                     and fn not in keep:
                 os.unlink(os.path.join(self.root, fn))

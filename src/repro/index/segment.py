@@ -36,9 +36,41 @@ import os
 import numpy as np
 
 from ..core.hashing import blob_checksum, file_checksum
+from ..core.integrity import CorruptionError
 from ..core.ivf import IVFIndex
+from ..testing.faults import FAULTS
 from .quant import (F32Rows, data_scale, fixed_scale, mmap_f32_fetch,
                     pool_k, quantize_rows, rescore_topk)
+
+
+def verify_segment_files(root: str, filename: str,
+                         checksum: str | None) -> bool:
+    """Scrubber hook: re-verify a segment npz (and, for quantized
+    segments, its fp32 sidecar) against the manifest checksum without
+    constructing the Segment. Returns True when intact or benignly
+    absent (compaction races the scrub walk)."""
+    path = os.path.join(root, filename)
+    try:
+        with open(path, "rb") as f:
+            data = f.read()
+    except OSError:
+        return True
+    if checksum is not None and blob_checksum(data) != checksum:
+        return False
+    try:
+        z = np.load(io.BytesIO(data))
+    except Exception:
+        return False
+    if "q8" in z.files:
+        want = str(z["f32_checksum"])
+        seg_id = filename[len("seg-"):-len(".npz")]
+        f32_path = os.path.join(root, f"seg-{seg_id}.f32.npy")
+        try:
+            if want and file_checksum(f32_path) != want:
+                return False
+        except OSError:
+            return True
+    return True
 
 
 class Segment:
@@ -274,6 +306,7 @@ class Segment:
                 f.write(f32)
                 f.flush()
                 os.fsync(f.fileno())
+            FAULTS.mutate("hot:segment:f32", f32_path)
             self._f32 = F32Rows(mmap_f32_fetch(f32_path), self.dim)
         data = self.to_bytes()
         path = os.path.join(root, self.filename())
@@ -281,6 +314,7 @@ class Segment:
             f.write(data)
             f.flush()
             os.fsync(f.fileno())
+        FAULTS.mutate("hot:segment:file", path)
         return self.filename(), blob_checksum(data)
 
     @classmethod
@@ -290,7 +324,10 @@ class Segment:
         with open(os.path.join(root, filename), "rb") as f:
             data = f.read()
         if checksum is not None and blob_checksum(data) != checksum:
-            raise IOError(f"segment checksum mismatch: {filename}")
+            raise CorruptionError(
+                f"segment checksum mismatch: {filename}",
+                artifact="hot_segment", tier="hot",
+                path=os.path.join(root, filename))
         z = np.load(io.BytesIO(data))
         seg_id = filename[len("seg-"):-len(".npz")]
         ivf_state = ((z["ivf_centroids"], z["ivf_assign"])
@@ -307,8 +344,9 @@ class Segment:
             # streamed: verifies a torn sidecar before its rows can back
             # an exact rescore, without buffering corpus-sized fp32
             if want and file_checksum(f32_path) != want:
-                raise IOError(
-                    f"segment fp32 sidecar checksum mismatch: {seg_id}")
+                raise CorruptionError(
+                    f"segment fp32 sidecar checksum mismatch: {seg_id}",
+                    artifact="f32_sidecar", tier="hot", path=f32_path)
             seg = cls(seg_id, None, z["valid_from"], z["positions"],
                       [str(x) for x in z["chunk_ids"]],
                       [str(x) for x in z["doc_ids"]],

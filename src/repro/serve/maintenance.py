@@ -92,6 +92,12 @@ class MaintenanceWorker:
         self.start()
         return True
 
+    def idle(self) -> bool:
+        """True when nothing is queued or mid-run — the cheap check
+        opportunistic (lowest-priority) jobs use before submitting."""
+        with self._cond:
+            return not self._queue and self._active == 0
+
     def drain(self, timeout: Optional[float] = None) -> bool:
         """Block until the queue is empty AND no job is mid-run (or the
         timeout passes — returns False)."""
@@ -185,6 +191,8 @@ class StoreMaintenance:
 
     def __init__(self, store, worker: Optional[MaintenanceWorker] = None,
                  checkpoint_every: int = 8, archive_min_run: int = 2,
+                 scrub_batch: int = 16, scrub_interval_s: float = 0.25,
+                 scrub_pace_s: float = 0.002,
                  **worker_kw):
         self.store = store
         self.index = store.hot.index
@@ -192,6 +200,15 @@ class StoreMaintenance:
         self._own_worker = worker is None
         self.checkpoint_every = int(checkpoint_every)
         self.archive_min_run = int(archive_min_run)
+        # background scrub cadence (DESIGN.md §16): every tick, at most
+        # one ``scrub_batch``-artifact verify batch per
+        # ``scrub_interval_s`` (0 disables). Rate-limited by TIME, not
+        # write count, so an idle store still gets scrubbed as long as
+        # anything ticks the hook.
+        self.scrub_batch = int(scrub_batch)
+        self.scrub_interval_s = float(scrub_interval_s)
+        self.scrub_pace_s = float(scrub_pace_s)
+        self._last_scrub = 0.0
         self._saved_ckpt_interval: Optional[int] = None
         self._last_ckpt_ver = 0
         self._started = False
@@ -241,6 +258,16 @@ class StoreMaintenance:
             self.worker.submit(f"ckpt:{id(self.store)}",
                                self._checkpoint)
             self.worker.submit(f"arch:{id(self.store)}", self._archive)
+        if (self.scrub_interval_s > 0
+                and time.monotonic() - self._last_scrub
+                >= self.scrub_interval_s
+                and self.worker.idle()):
+            # opportunistic: scrubbing is the lowest-priority job — a
+            # storm's seal/compact/checkpoint backlog always wins, and
+            # the persisted cursor means a starved scrub just resumes
+            # when the worker quiets down
+            self._last_scrub = time.monotonic()
+            self.worker.submit(f"scrub:{id(self.store)}", self._scrub)
 
     def _on_wish(self, wish: str) -> None:
         if wish == "seal":
@@ -263,6 +290,17 @@ class StoreMaintenance:
 
     def _archive(self) -> None:
         self.store.compact_cold(min_run=self.archive_min_run)
+
+    def _scrub(self) -> None:
+        self.store.scrubber.scrub_once(budget=self.scrub_batch,
+                                       pace_s=self.scrub_pace_s)
+
+    def scrub_now(self, full: bool = True) -> dict:
+        """Run a scrub synchronously on the calling thread (tests,
+        drills): a full pass by default, one batch otherwise."""
+        if full:
+            return self.store.scrubber.scrub_full()
+        return self.store.scrubber.scrub_once(budget=self.scrub_batch)
 
 
 class FabricMaintenance:
@@ -300,6 +338,11 @@ class FabricMaintenance:
     def tick(self) -> None:
         for sm in self._per_shard.values():
             sm.tick()
+
+    def scrub_now(self, full: bool = True) -> dict:
+        """Synchronous scrub of every attached shard (drills/tests)."""
+        return {sid: sm.scrub_now(full=full)
+                for sid, sm in self._per_shard.items()}
 
     def submit_rebalance(self, key: str, fn) -> bool:
         """Run a topology change (e.g. ``Rebalancer(fabric).split``) on

@@ -227,7 +227,15 @@ class ScatterGatherPlanner:
             # (fewer than R shards missing). A complete-but-degraded
             # response is correct data served at reduced redundancy —
             # stamped so clients/SLO dashboards see the shrunk fabric.
-            degraded = bool(failures)
+            # storage-integrity degradation (DESIGN.md §16): a shard
+            # with unrepaired data loss answered, but minus quarantined
+            # rows. Only OPEN lakes are consulted (pending() reads a
+            # cached manifest — cheap), so the stamp costs nothing on a
+            # healthy fabric and never forces a lake open.
+            integ_degraded = sorted(
+                s for s, lk in self.fabric._lakes.items()
+                if lk.store.integrity.degraded())
+            degraded = bool(failures) or bool(integ_degraded)
             complete = len(failures) < ring.replicas
             if failures and not complete:
                 if not (degraded_ok and per_shard):
@@ -253,6 +261,7 @@ class ScatterGatherPlanner:
                 "degraded": degraded,
                 "complete": complete,
                 "shards_missing": sorted(failures),
+                "integrity_degraded": integ_degraded,
                 "failures": {s: f"{type(e).__name__}: {e}"
                              for s, e in failures.items()},
             }

@@ -347,6 +347,109 @@ class ShardFabric:
         report["resumed"] = True
         return report
 
+    # ------------------------------------------------------------------
+    # replica-driven repair + anti-entropy (DESIGN.md §16)
+    # ------------------------------------------------------------------
+    def _donor_for(self, doc_id: str, exclude: str) -> Optional[str]:
+        """A replica that can donate ``doc_id``'s full history: another
+        ring owner first, then any shard still holding the doc
+        (post-rebalance stragglers retain cold history)."""
+        for s in self.ring.owners(doc_id):
+            if s != exclude and self.lake(s).has_doc(doc_id):
+                return s
+        for s in self.ring.shards:
+            if s != exclude and self.lake(s).has_doc(doc_id):
+                return s
+        return None
+
+    def repair(self, shard_id: Optional[str] = None,
+               anti_entropy: bool = False) -> dict:
+        """Replica-driven repair of every quarantined artifact
+        (DESIGN.md §16).
+
+        Hot-tier quarantines rebuild locally from cold authority (no
+        replica needed). Cold data-loss quarantines are repaired per
+        affected doc: a replica owner exports the doc's FULL history
+        (doc-scoped zone-pruned fold) and ``repair_doc`` commits back
+        exactly the rows this shard lost, original validity intervals
+        baked in — current AND temporal queries come back
+        oracle-equivalent. A quarantine record whose affected-doc set
+        is unknown (zone map too wide) repairs every doc the shard
+        owns. Docs with no surviving replica are reported
+        ``unrepairable`` and the shard stays degraded (loudly)."""
+        shards = [shard_id] if shard_id else list(self.ring.shards)
+        report: dict = {"shards": {}, "docs_repaired": 0,
+                        "rows_restored": 0, "unrepairable": [],
+                        "anti_entropy": None}
+        from ..obs import REGISTRY
+        for s in shards:
+            st = self.lake(s).store
+            rep: dict = {"hot_rebuilt": False, "docs": {},
+                         "unrepairable": []}
+            if st.integrity.hot_pending():
+                st.rebuild_hot()
+                rep["hot_rebuilt"] = True
+            affected = st.integrity.affected_docs()
+            if affected is not None and not affected:
+                report["shards"][s] = rep
+                continue
+            docs = (sorted(affected) if affected is not None
+                    else [d for d in self.all_docs()
+                          if s in self.ring.owners(d)])
+            for doc in docs:
+                donor = self._donor_for(doc, exclude=s)
+                if donor is None:
+                    rep["unrepairable"].append(doc)
+                    continue
+                rows, ver = self.lake(donor).export_doc_history(doc)
+                r = st.repair_doc(doc, rows, ver)
+                rep["docs"][doc] = {**r, "donor": donor}
+                report["docs_repaired"] += 1
+                report["rows_restored"] += r["added_rows"]
+                REGISTRY.counter("repair_docs", shard=s).inc()
+            if rep["unrepairable"]:
+                report["unrepairable"].extend(rep["unrepairable"])
+            else:
+                # every affected doc restored: the quarantined files are
+                # retired evidence, the shard leaves degraded serving
+                st.integrity.cold.mark_repaired()
+            report["shards"][s] = rep
+        if anti_entropy:
+            report["anti_entropy"] = self.run_anti_entropy()
+        return report
+
+    def run_anti_entropy(self) -> dict:
+        """Silent-divergence sweep: for every doc with >= 2 live
+        replicas, compare the per-doc history digests
+        (``doc_history_digest`` — SHA-256 over sorted (chunk-hash,
+        position, interval) tuples, no row shipping). Divergent docs
+        are merged BIDIRECTIONALLY: each replica repairs from every
+        other's export, so all converge on the union history."""
+        from ..obs import REGISTRY
+        checked = diverged = 0
+        repaired: list[str] = []
+        for doc in self.all_docs():
+            owners = [s for s in self.ring.owners(doc)
+                      if self.lake(s).has_doc(doc)]
+            if len(owners) < 2:
+                continue
+            checked += 1
+            digests = {s: self.lake(s).store.doc_history_digest(doc)
+                       for s in owners}
+            if len(set(digests.values())) == 1:
+                continue
+            diverged += 1
+            REGISTRY.counter("anti_entropy_diverged").inc()
+            exports = {s: self.lake(s).export_doc_history(doc)
+                       for s in owners}
+            for s in owners:
+                for d, (rows, ver) in exports.items():
+                    if d != s:
+                        self.lake(s).store.repair_doc(doc, rows, ver)
+            repaired.append(doc)
+        return {"docs_checked": checked, "diverged": diverged,
+                "repaired": repaired}
+
     def all_docs(self) -> list[str]:
         """Every document the fabric serves (union over ring shards)."""
         seen: set[str] = set()
@@ -361,7 +464,8 @@ class ShardFabric:
             st = self.lake(s).stats()
             per_shard[s] = {"docs": st["docs"],
                             "active_chunks": st["hot"]["active"],
-                            "cold_records": st["cold"]["total_records"]}
+                            "cold_records": st["cold"]["total_records"],
+                            "integrity": st["integrity"]}
         return {
             "epoch": state.get("epoch", 0),
             "ring": self.ring.to_dict(),
@@ -387,4 +491,10 @@ class ShardFabric:
             "slow_queries": SLOW_QUERIES.summary(),
             "slo": SLO_ENGINE.summary(),
             "flight_recorder": FLIGHT_RECORDER.summary(),
+            # storage integrity (DESIGN.md §16): quarantine/degraded
+            # state + per-tier scrub progress and last-verified stamps
+            "integrity": {s: self.lake(s).store.integrity.summary()
+                          for s in self.ring.shards},
+            "scrub": {s: self.lake(s).store.scrubber.state()
+                      for s in self.ring.shards},
         }

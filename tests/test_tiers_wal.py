@@ -128,15 +128,28 @@ class TestColdTierIsolation:
         import os
         ct = ColdTier(str(tmp_path), dim=8)
         ct.commit([_rec("d", 0, "x", ts=100)], [], ts=100)
+        ct.commit([_rec("e", 0, "y", ts=200)], [], ts=200)
         seg_dir = os.path.join(str(tmp_path), "segments")
-        seg = os.path.join(seg_dir, os.listdir(seg_dir)[0])
+        seg_name = sorted(os.listdir(seg_dir))[0]
+        seg = os.path.join(seg_dir, seg_name)
         with open(seg, "r+b") as f:
             f.seek(-1, 2)
             last = f.read(1)
             f.seek(-1, 2)
             f.write(bytes([last[0] ^ 0xFF]))     # guaranteed bit flip
+        # the direct load raises the TYPED error (subclass of IOError,
+        # so pre-§16 broad handlers still catch it)
         with pytest.raises(IOError, match="checksum"):
-            ct.snapshot()
+            ct.load_segment(seg_name, ct.read_entries(1, 1)[0]["checksum"])
+        # containment (DESIGN.md §16): the fold quarantines the rotten
+        # segment and KEEPS SERVING the surviving rows instead of
+        # killing the store
+        snap = ct.snapshot()
+        assert snap.texts == ["y"]
+        assert ct.quarantine.is_quarantined(seg_name)
+        assert not os.path.exists(seg)
+        assert any(r["data_loss"] and r["docs"] == ["d"]
+                   for r in ct.quarantine.records())
 
 
 def _close(doc, pos, ts):
